@@ -1,0 +1,39 @@
+//! Head-to-head example: dense Mamba vs RoM at equal ACTIVE parameters
+//! (the paper's headline comparison), trained side by side on the same data
+//! with the same budget.
+//!
+//!     cargo run --release --example compare_arch -- [steps]
+
+use rom::experiments::harness::{artifacts_root, run_variant};
+use rom::substrate::bench::Reporter;
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+
+    let mut rep = Reporter::new(
+        "dense Mamba vs RoM (equal active params, equal budget)",
+        &["variant", "active", "total", "loss", "ppl@128", "ppl@512"],
+    );
+    for name in ["mamba-tiny", "rom-tiny"] {
+        if !artifacts_root().join(name).exists() {
+            eprintln!("missing artifacts for {name}; run `make artifacts`");
+            continue;
+        }
+        let r = run_variant(name, steps, 3e-3)?;
+        rep.row(&[
+            r.name.clone(),
+            format!("{:.2}M", r.active_params as f64 / 1e6),
+            format!("{:.2}M", r.total_params as f64 / 1e6),
+            format!("{:.3}", r.smoothed_loss),
+            r.ppl_at(128).map(|p| format!("{p:.2}")).unwrap_or("-".into()),
+            r.ppl_at(512).map(|p| format!("{p:.2}")).unwrap_or("-".into()),
+        ]);
+    }
+    rep.print();
+    println!("expected shape (paper Fig 3): RoM reaches lower PPL than dense");
+    println!("Mamba at the same active-parameter count.");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Length-extrapolation example (Figure 4 in miniature): train briefly, then
+//! sweep held-out perplexity across context lengths longer than the training
+//! sequence, demonstrating the consistent-PPL property of RoM/Mamba models.
+//!
+//!     cargo run --release --example eval_lengths -- [variant] [steps]
+
+use rom::config::TrainCfg;
+use rom::coordinator::trainer::Trainer;
+use rom::experiments::harness::artifacts_root;
+use rom::runtime::artifact::{cpu_client, Bundle};
+
+fn main() -> anyhow::Result<()> {
+    let variant = std::env::args().nth(1).unwrap_or_else(|| "rom-tiny".into());
+    let steps: u64 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+
+    let client = cpu_client()?;
+    let bundle = Bundle::load(client, artifacts_root().join(&variant))?;
+    println!(
+        "{}: trained at T={}, evaluating at {:?}",
+        variant, bundle.manifest.seq_len, bundle.manifest.eval_lens
+    );
+    let cfg = TrainCfg { steps, max_lr: 3e-3, log_every: (steps / 4).max(1), ..Default::default() };
+    let trainer = Trainer::new(&bundle, cfg);
+    let report = trainer.run()?;
+
+    println!("\nctx_len  ppl      (train T = {})", bundle.manifest.seq_len);
+    for (ctx, ppl) in &report.eval_ppl {
+        let marker = if *ctx > bundle.manifest.seq_len { " <- extrapolation" } else { "" };
+        println!("{ctx:>7}  {ppl:<8.3}{marker}");
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the rom-tiny artifact bundle, take a few training steps
+//! on synthetic data, print the loss trajectory and router load.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use rom::config::TrainCfg;
+use rom::coordinator::schedule::CosineSchedule;
+use rom::data::corpus::{Corpus, CorpusSpec};
+use rom::data::loader::Loader;
+use rom::experiments::harness::artifacts_root;
+use rom::runtime::artifact::{cpu_client, Bundle};
+use rom::runtime::session::Session;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the PJRT CPU client and the AOT artifact bundle.
+    let client = cpu_client()?;
+    let bundle = Bundle::load(client, artifacts_root().join("rom-tiny"))?;
+    let man = bundle.manifest.clone();
+    println!(
+        "loaded {}: {} leaves, {:.2}M total / {:.2}M active params",
+        man.name,
+        man.num_leaves(),
+        man.analysis.total_params as f64 / 1e6,
+        man.analysis.active_params as f64 / 1e6
+    );
+
+    // 2. Initialize model + optimizer state on device.
+    let mut sess = Session::init(&bundle, 0)?;
+
+    // 3. Data pipeline: synthetic topic-Markov corpus -> batched loader.
+    let cfg = TrainCfg::default();
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let steps = 30u64;
+    let stream = corpus.generate(
+        cfg.data_seed,
+        (steps as usize + 2) * man.batch_size * (man.seq_len + 1),
+    );
+    let mut loader = Loader::new(stream, man.batch_size, man.seq_len, 0);
+    let sched = CosineSchedule::new(3e-3, steps, 0.1);
+
+    // 4. Train.
+    for step in 1..=steps {
+        let batch = loader.next_batch();
+        let out = sess.train_step(sched.lr(step) as f32, &batch.tokens, &batch.targets)?;
+        if step % 5 == 0 || step == 1 {
+            let load = &out.router_load[..man.num_experts.min(8)];
+            println!(
+                "step {step:>3}  loss {:.4}  router0 load {:?}",
+                out.loss,
+                load.iter().map(|l| (l * 100.0).round() / 100.0).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    // 5. Evaluate perplexity at the shortest context length.
+    let ctx = man.eval_lens[0];
+    let held = corpus.generate(0xE7A1_0000 + 999, ctx + 1);
+    let tokens = rom::runtime::tensor::Tensor::i32(&[1, ctx], held[..ctx].to_vec());
+    let targets = rom::runtime::tensor::Tensor::i32(&[1, ctx], held[1..ctx + 1].to_vec());
+    let (nll, count) = sess.eval(ctx, &tokens, &targets)?;
+    println!("held-out ppl@{ctx}: {:.2}", (nll / count).exp());
+    Ok(())
+}

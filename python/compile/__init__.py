@@ -1,0 +1,2 @@
+"""Build-time compile path: JAX/Pallas model authoring + AOT lowering to HLO
+text artifacts consumed by the rust coordinator. Never imported at runtime."""

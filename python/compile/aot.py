@@ -1,0 +1,207 @@
+"""AOT lowering: jax model -> HLO text artifacts + manifest for rust.
+
+Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects jax>=0.5
+serialized HloModuleProtos (64-bit instruction ids), while the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot --preset rom-e2e [--out-root ../artifacts] [--golden]
+  python -m compile.aot --all
+  python -m compile.aot --emit-configs ../configs
+
+Artifacts per variant (DESIGN.md §2 artifact contract):
+  init.hlo.txt, step.hlo.txt, grad.hlo.txt, apply.hlo.txt,
+  eval_L{T}.hlo.txt (one per cfg.eval_lens), manifest.json
+  [+ golden.json with python-side step losses when --golden]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import analysis, train
+from compile.config import ModelConfig
+from compile.model import num_routers
+from compile.presets import all_presets, emit_configs, get_preset
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def param_manifest(cfg: ModelConfig):
+    shapes = jax.eval_shape(train.make_init_fn(cfg), jnp.zeros((), jnp.int32))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    return [
+        {
+            "name": _leaf_name(path),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        }
+        for path, leaf in flat
+    ]
+
+
+def lower_variant(cfg: ModelConfig, out_dir: str, golden: bool = False) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    B, T = cfg.batch_size, cfg.seq_len
+    mb = cfg.micro_batch if cfg.micro_batch > 0 else max(1, B // 2)
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    params_sd = jax.eval_shape(train.make_init_fn(cfg), sd((), i32))
+
+    def write(name: str, lowered):
+        path = os.path.join(out_dir, name)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        return len(text)
+
+    sizes = {}
+    # init: seed -> params
+    sizes["init"] = write(
+        "init.hlo.txt", jax.jit(train.make_init_fn(cfg)).lower(sd((), i32)))
+
+    # step: fused train step
+    tok = sd((B, T), i32)
+    sizes["step"] = write(
+        "step.hlo.txt",
+        jax.jit(train.make_step_fn(cfg)).lower(
+            params_sd, params_sd, params_sd, sd((), f32), sd((), f32), tok, tok))
+
+    # grad/apply: microbatch accumulation path
+    mtok = sd((mb, T), i32)
+    sizes["grad"] = write(
+        "grad.hlo.txt",
+        jax.jit(train.make_grad_fn(cfg)).lower(params_sd, params_sd, mtok, mtok))
+    sizes["apply"] = write(
+        "apply.hlo.txt",
+        jax.jit(train.make_apply_fn(cfg)).lower(
+            params_sd, params_sd, params_sd, params_sd,
+            sd((), f32), sd((), f32), sd((), f32)))
+
+    # eval at each context length (batch 1) + final-position-only variant
+    # (the cloze/LAMBADA probe primitive).
+    for L in cfg.eval_lens:
+        etok = sd((1, L), i32)
+        sizes[f"eval_L{L}"] = write(
+            f"eval_L{L}.hlo.txt",
+            jax.jit(train.make_eval_fn(cfg)).lower(params_sd, etok, etok))
+    L = cfg.eval_lens[0]
+    etok = sd((1, L), i32)
+    sizes[f"eval_last_L{L}"] = write(
+        f"eval_last_L{L}.hlo.txt",
+        jax.jit(train.make_eval_last_fn(cfg)).lower(params_sd, etok, etok))
+
+    desc = analysis.describe(cfg, T)
+    leaves = param_manifest(cfg)
+    manifest = {
+        "name": cfg.name,
+        "model": cfg.to_dict(),
+        "params": leaves,
+        "num_param_leaves": len(leaves),
+        "batch_size": B,
+        "seq_len": T,
+        "micro_batch": mb,
+        "eval_lens": cfg.eval_lens,
+        "num_routers": num_routers(cfg),
+        "num_experts": max(cfg.rom.num_experts, cfg.ffn_moe.num_experts,
+                           cfg.attn_moe_experts if cfg.attn_moe != "none" else 1),
+        "analysis": desc,
+        "artifact_bytes": sizes,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+
+    if golden:
+        _write_golden(cfg, out_dir)
+    return manifest
+
+
+def _write_golden(cfg: ModelConfig, out_dir: str, seed: int = 0, steps: int = 2):
+    """Run the fused step in python and record losses for the rust cross-check."""
+    B, T = cfg.batch_size, cfg.seq_len
+    params = jax.jit(train.make_init_fn(cfg))(jnp.asarray(seed, jnp.int32))
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    step_fn = jax.jit(train.make_step_fn(cfg))
+    rng = np.random.RandomState(1234)
+    losses = []
+    for s in range(1, steps + 1):
+        tokens = rng.randint(0, cfg.vocab_size, size=(B, T)).astype(np.int32)
+        targets = rng.randint(0, cfg.vocab_size, size=(B, T)).astype(np.int32)
+        params, m, v, loss, _ = step_fn(
+            params, m, v, jnp.asarray(float(s)), jnp.asarray(4e-4),
+            jnp.asarray(tokens), jnp.asarray(targets))
+        losses.append(float(loss))
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump({"seed": seed, "data_seed": 1234, "lr": 4e-4,
+                   "losses": losses}, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", action="append", default=[],
+                    help="preset name (repeatable)")
+    ap.add_argument("--all", action="store_true", help="lower every preset")
+    ap.add_argument("--out-root", default="../artifacts")
+    ap.add_argument("--golden", action="store_true",
+                    help="also run 2 python steps and record golden losses")
+    ap.add_argument("--emit-configs", metavar="DIR",
+                    help="write configs/<name>.json for every preset and exit")
+    ap.add_argument("--config", help="lower a single JSON config file")
+    args = ap.parse_args()
+
+    if args.emit_configs:
+        for path in emit_configs(args.emit_configs):
+            print(f"wrote {path}")
+        return
+
+    targets = []
+    if args.all:
+        targets = list(all_presets().values())
+    for name in args.preset:
+        targets.append(get_preset(name))
+    if args.config:
+        with open(args.config) as f:
+            targets.append(ModelConfig.from_dict(json.load(f)))
+    if not targets:
+        ap.error("nothing to do: pass --preset, --all, --config or --emit-configs")
+
+    for cfg in targets:
+        out_dir = os.path.join(args.out_root, cfg.name)
+        man = lower_variant(cfg, out_dir, golden=args.golden)
+        a = man["analysis"]
+        print(f"{cfg.name}: leaves={man['num_param_leaves']} "
+              f"total={a['total_params']/1e6:.2f}M active={a['active_params']/1e6:.2f}M "
+              f"-> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

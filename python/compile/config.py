@@ -1,0 +1,158 @@
+"""Model / training configuration shared between the python compile path and
+the rust coordinator.
+
+The same JSON document drives both sides:
+  * python (`compile.aot`) builds the jax model, lowers it to HLO text and
+    emits a manifest describing the flat parameter layout;
+  * rust (`config::ModelConfig`) re-parses the JSON to size buffers, count
+    FLOPS and drive experiments.
+
+Keep this file dependency-free (no jax imports) so tests can import it
+cheaply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+ARCHS = ("mamba", "mamba2", "gdn", "samba", "llama")
+ROUTINGS = ("none", "shared", "independent")
+MOE_IMPLS = ("onehot", "grouped")
+SCAN_IMPLS = ("assoc", "loop", "pallas")
+# Projection banks that may be expertized in a Mamba block (paper Fig 2 / Tab 1).
+ROM_TARGETS = ("conv", "gate", "out", "dt", "x")
+
+
+@dataclass
+class MoEConfig:
+    """Sparse-expert settings for one family of banks (RoM or FFN-MoE)."""
+
+    num_experts: int = 1          # 1 == dense (no experts)
+    top_k: int = 1
+    jitter: float = 0.0           # multiplicative routing jitter (train only)
+    balance_loss: float = 0.0     # aux load-balance loss coefficient (0 = off)
+    straight_through: bool = True  # ST estimator through the discrete top-k
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 1
+
+
+@dataclass
+class ModelConfig:
+    """One model variant of the zoo. Field names mirror rust config/model.rs."""
+
+    name: str = "rom-tiny"
+    arch: str = "samba"            # one of ARCHS
+    vocab_size: int = 512
+    d_model: int = 128
+    n_layers: int = 4              # number of *blocks* (see block layout below)
+    expand: int = 2                # Mamba inner expansion e (d_inner = e*d_model)
+    d_state: int = 16
+    dt_rank: int = 0               # 0 -> d_model//16 (paper: d_r = d_m/16)
+    conv_kernel: int = 4
+    n_heads: int = 4               # attention / mamba2 heads
+    window: int = 64               # sliding-window size for SWA blocks
+    mlp_mult: int = 2              # SwiGLU hidden multiple
+    tie_embeddings: bool = True
+
+    # --- sparse scaling ---------------------------------------------------
+    # Which Mamba projection banks become experts; empty = dense Mamba.
+    rom_targets: List[str] = field(default_factory=list)
+    # "shared": one router per block reused by every bank (RoM, Eq. 9-13).
+    # "independent": one router per bank (MoE-Mamba baseline, Fig 2 / Tab 4).
+    routing: str = "shared"
+    rom: MoEConfig = field(default_factory=MoEConfig)
+    ffn_moe: MoEConfig = field(default_factory=MoEConfig)  # FFN experts (samba/llama)
+    # Hybrid RoM+FFN-MoE (App. A.2 Eq. 14-15): MLP experts reuse the routing
+    # decision of the preceding RoM layer instead of learning their own router.
+    ffn_moe_share_router: bool = False
+    attn_moe: str = "none"         # "none" | "moa" | "switchhead" (Table 1 baselines)
+    attn_moe_experts: int = 8
+    moe_impl: str = "onehot"       # "onehot" (oracle) | "grouped" (megablocks-style)
+    scan_impl: str = "assoc"       # "assoc" | "loop" | "pallas"
+
+    # --- training-time shapes baked into artifacts ------------------------
+    batch_size: int = 8
+    seq_len: int = 128
+    micro_batch: int = 0           # 0 -> no grad-accum artifacts
+    eval_lens: List[int] = field(default_factory=lambda: [128, 256, 512])
+
+    def __post_init__(self) -> None:
+        if self.arch not in ARCHS:
+            raise ValueError(f"unknown arch {self.arch!r}; expected one of {ARCHS}")
+        if self.routing not in ROUTINGS:
+            raise ValueError(f"unknown routing {self.routing!r}")
+        if self.moe_impl not in MOE_IMPLS:
+            raise ValueError(f"unknown moe_impl {self.moe_impl!r}")
+        if self.scan_impl not in SCAN_IMPLS:
+            raise ValueError(f"unknown scan_impl {self.scan_impl!r}")
+        for t in self.rom_targets:
+            if t not in ROM_TARGETS:
+                raise ValueError(f"unknown rom target {t!r}; expected {ROM_TARGETS}")
+        if self.dt_rank == 0:
+            self.dt_rank = max(1, self.d_model // 16)
+        if self.rom_targets and not self.rom.enabled:
+            raise ValueError("rom_targets set but rom.num_experts <= 1")
+
+    # --- derived sizes ----------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def block_layout(self) -> List[str]:
+        """Per-layer block kinds, mirroring the paper's Figure 5 layouts.
+
+        mamba/mamba2/gdn: n_layers SSM blocks.
+        samba: repeating [mamba, swa, mlp] groups (n_layers counts groups).
+        llama: repeating [swa, mlp] groups.
+        """
+        if self.arch in ("mamba", "mamba2", "gdn"):
+            return [self.arch] * self.n_layers
+        if self.arch == "samba":
+            out: List[str] = []
+            for _ in range(self.n_layers):
+                out += ["mamba", "swa", "mlp"]
+            return out
+        if self.arch == "llama":
+            out = []
+            for _ in range(self.n_layers):
+                out += ["swa", "mlp"]
+            return out
+        raise AssertionError(self.arch)
+
+    # --- (de)serialization --------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ModelConfig":
+        d = dict(d)
+        for k in ("rom", "ffn_moe"):
+            if k in d and isinstance(d[k], dict):
+                d[k] = MoEConfig(**d[k])
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ModelConfig":
+        return cls.from_dict(json.loads(s))
+
+
+def load_config(path: str) -> ModelConfig:
+    with open(path) as f:
+        doc = json.load(f)
+    # Allow a combined {"model": {...}, "train": {...}} document.
+    if "model" in doc:
+        doc = doc["model"]
+    return ModelConfig.from_dict(doc)

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- selective_scan: the Mamba recurrence (chunked scan).
+- grouped_gemm: megablocks-style sparse expert projection (the RoM hot-spot).
+- short_conv: depthwise causal conv + SiLU.
+- ref: pure-jnp oracles for all of the above (the correctness signal).
+"""
+
+from compile.kernels.grouped_gemm import grouped_gemm, make_group_plan  # noqa: F401
+from compile.kernels.selective_scan import selective_scan  # noqa: F401
+from compile.kernels.short_conv import short_conv  # noqa: F401

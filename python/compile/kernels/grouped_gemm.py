@@ -1,0 +1,191 @@
+"""Megablocks-style grouped expert GEMM in Pallas (the RoM hot-spot).
+
+The paper accelerates its expert projections with Megablocks' grouped_GEMM
+CUDA kernels. TPU re-think (DESIGN.md §Hardware-Adaptation): tokens are sorted
+by expert and each expert's group padded to a multiple of the token block size
+Bt, producing a dense block schedule `block_expert[b] -> e`; the kernel grid
+walks token blocks, streams the (Bt, D) activation tile and the (D, F) weight
+tile of that block's expert into VMEM, and issues one MXU GEMM per block.
+Because RoM *shares* one routing decision across the Conv/Gate/Out banks, the
+sort permutation and block schedule are identical for all three grouped GEMMs
+of a Mamba block; XLA CSE collapses the three plan computations into one — the
+TPU analogue of the paper's claim that shared routing amortizes router work.
+
+Compute is proportional to #tokens + padding (<= E*Bt extra rows), unlike the
+one-hot oracle which is E× dense. interpret=True only on this image (real-TPU
+lowering emits Mosaic custom-calls the CPU PJRT plugin cannot run).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 16
+
+
+class GroupPlan(NamedTuple):
+    """Sort/pad schedule derived from one top-1 routing decision."""
+
+    pos: jax.Array           # (T,) destination row of token t in the padded buffer
+    block_expert: jax.Array  # (NB,) expert id of each token block
+    padded_len: int          # static: NB * block_size
+    block_size: int
+
+
+def make_group_plan(route: jax.Array, num_experts: int,
+                    block_size: int = DEFAULT_BLOCK) -> GroupPlan:
+    """Build the megablocks schedule for a top-1 routing decision.
+
+    Args:
+      route: (T,) int32 expert assignment per token.
+      num_experts: E.
+      block_size: Bt, the token-block granularity (128 on a real MXU; smaller
+        here so tests exercise multi-block schedules at tiny T).
+    Returns:
+      GroupPlan with static padded_len = round_up(T + E*Bt, Bt) (upper bound;
+      trailing blocks beyond the last expert group carry only zero rows).
+    """
+    T = route.shape[0]
+    E = num_experts
+    counts = jnp.bincount(route, length=E)                       # (E,)
+    padded_counts = ((counts + block_size - 1) // block_size) * block_size
+    offsets = jnp.cumsum(padded_counts) - padded_counts          # exclusive
+    # Rank of each token within its expert group (stable sort order).
+    order = jnp.argsort(route, stable=True)                      # (T,)
+    inv = jnp.argsort(order, stable=True)
+    start = jnp.cumsum(counts) - counts                          # exclusive
+    rank_sorted = jnp.arange(T) - start[route[order]]
+    rank = rank_sorted[inv]
+    pos = offsets[route] + rank                                  # (T,)
+
+    padded_len = T + E * block_size                              # static bound
+    padded_len = ((padded_len + block_size - 1) // block_size) * block_size
+    nb = padded_len // block_size
+    # block -> expert: block b belongs to expert e iff its first row falls in
+    # [offsets[e], offsets[e] + padded_counts[e]). Trailing blocks match no
+    # expert and argmax defaults them to 0; their rows are all-zero so they
+    # contribute nothing in either the forward or the wgrad kernel.
+    bstart = jnp.arange(nb) * block_size
+    in_e = (bstart[:, None] >= offsets[None, :]) & (
+        bstart[:, None] < (offsets + padded_counts)[None, :]
+    )                                                            # (NB, E)
+    block_expert = jnp.argmax(in_e, axis=1).astype(jnp.int32)
+    return GroupPlan(pos=pos, block_expert=block_expert,
+                     padded_len=padded_len, block_size=block_size)
+
+
+def scatter_tokens(x: jax.Array, plan: GroupPlan) -> jax.Array:
+    """(T, D) -> (T_pad, D): place token t at row plan.pos[t], zeros elsewhere."""
+    out = jnp.zeros((plan.padded_len, x.shape[1]), dtype=x.dtype)
+    return out.at[plan.pos].set(x)
+
+
+def gather_tokens(y_pad: jax.Array, plan: GroupPlan) -> jax.Array:
+    """(T_pad, F) -> (T, F): read token t back from row plan.pos[t]."""
+    return y_pad[plan.pos]
+
+
+def _gg_kernel(be_ref, x_ref, w_ref, o_ref):
+    """Grid: (NB,). x block (Bt, D) @ w[block_expert[b]] (D, F) -> o block."""
+    b = pl.program_id(0)
+    e = be_ref[b]
+    w = w_ref[e]                                         # (D, F) dynamic gather
+    o_ref[...] = jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _grouped_matmul_padded(x_pad, w, block_expert, *, block_size: int,
+                           interpret: bool = True):
+    """(T_pad, D) x (E, D, F) -> (T_pad, F) with per-block expert weights."""
+    T_pad, D = x_pad.shape
+    E, _, F = w.shape
+    nb = T_pad // block_size
+    return pl.pallas_call(
+        _gg_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda b: (0,)),          # schedule, resident
+            pl.BlockSpec((block_size, D), lambda b: (b, 0)),
+            pl.BlockSpec((E, D, F), lambda b: (0, 0, 0)),  # full weight bank
+        ],
+        out_specs=pl.BlockSpec((block_size, F), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((T_pad, F), x_pad.dtype),
+        interpret=interpret,
+    )(block_expert, x_pad, w)
+
+
+def _wgrad_kernel(be_ref, x_ref, dy_ref, dw_ref):
+    """Grid: (NB,). Accumulate x^T dy into the block's expert dW tile. The
+    whole (E, D, F) output lives in VMEM across the grid (revisited block);
+    it is zeroed once on the first step. A real-TPU build would tile F."""
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    e = be_ref[b]
+    contrib = jnp.dot(
+        x_ref[...].T, dy_ref[...], preferred_element_type=jnp.float32
+    ).astype(dw_ref.dtype)
+    dw_ref[e] = dw_ref[e] + contrib
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def grouped_gemm(x, w, route, block_size: int = DEFAULT_BLOCK,
+                 interpret: bool = True):
+    """y[t] = x[t] @ w[route[t]] via the megablocks schedule.
+
+    Same contract as ref.grouped_gemm_ref, but with sparse (token-linear)
+    compute. Differentiable: dgrad is a second grouped GEMM against w^T
+    reusing the same plan; wgrad block-accumulates per-expert x^T dy.
+    """
+    y, _ = _gg_fwd(x, w, route, block_size, interpret)
+    return y
+
+
+def _gg_fwd(x, w, route, block_size, interpret):
+    plan = make_group_plan(route, w.shape[0], block_size)
+    x_pad = scatter_tokens(x, plan)
+    y_pad = _grouped_matmul_padded(x_pad, w, plan.block_expert,
+                                   block_size=block_size, interpret=interpret)
+    y = gather_tokens(y_pad, plan)
+    return y, (x_pad, w, plan)
+
+
+def _gg_bwd(block_size, interpret, res, dy):
+    x_pad, w, plan = res
+    dy_pad = scatter_tokens(dy, plan)
+    # dgrad: dx[t] = dy[t] @ w[route[t]]^T — same schedule, transposed bank.
+    wT = jnp.swapaxes(w, 1, 2)
+    dx_pad = _grouped_matmul_padded(dy_pad, wT, plan.block_expert,
+                                    block_size=block_size, interpret=interpret)
+    dx = gather_tokens(dx_pad, plan)
+    # wgrad: dW[e] = sum over expert-e blocks of x_block^T dy_block.
+    T_pad, D = x_pad.shape
+    E, _, F = w.shape
+    nb = T_pad // block_size
+    dw = pl.pallas_call(
+        _wgrad_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda b: (0,)),
+            pl.BlockSpec((block_size, D), lambda b: (b, 0)),
+            pl.BlockSpec((block_size, F), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((E, D, F), lambda b: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, D, F), w.dtype),
+        interpret=interpret,
+    )(plan.block_expert, x_pad, dy_pad)
+    droute = np.zeros(dy.shape[:1], dtype=jax.dtypes.float0)
+    return dx, dw, droute
+
+
+grouped_gemm.defvjp(_gg_fwd, _gg_bwd)

@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each kernel's pytest sweeps shapes and
+dtypes (hypothesis) and asserts allclose against the function here. They are
+also usable as drop-in implementations in the L2 model (`scan_impl="loop"`,
+`moe_impl="onehot"`), which is how the dense==RoM(E=1) equivalence tests close
+the loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Selective scan (Mamba, Eq. 4-5 of the paper)
+# --------------------------------------------------------------------------
+
+def selective_scan_ref(u, dt, A, B, C, D):
+    """Sequential reference for the Mamba selective scan.
+
+    Args:
+      u:  (B, T, Di)  post-conv activations.
+      dt: (B, T, Di)  positive timestep (already softplus'ed).
+      A:  (Di, N)     negative-real state matrix (already -exp(A_log)).
+      B:  (B, T, N)   input projection (data dependent).
+      C:  (B, T, N)   output projection (data dependent).
+      D:  (Di,)       skip connection.
+    Returns:
+      y: (B, T, Di)
+    """
+    dA = jnp.exp(dt[..., None] * A)                     # (B,T,Di,N)
+    dBu = dt[..., None] * B[:, :, None, :] * u[..., None]  # (B,T,Di,N)
+
+    def step(h, inp):
+        dA_t, dBu_t, C_t = inp
+        h = dA_t * h + dBu_t                            # (B,Di,N)
+        y = jnp.einsum("bdn,bn->bd", h, C_t)            # (B,Di)
+        return h, y
+
+    Bsz, _T, Di = u.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((Bsz, Di, N), dtype=u.dtype)
+    xs = (
+        jnp.moveaxis(dA, 1, 0),
+        jnp.moveaxis(dBu, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                          # (B,T,Di)
+    return y + u * D
+
+
+def selective_scan_assoc(u, dt, A, B, C, D, chunk: int = 64):
+    """Chunked associative-scan implementation (the fast L2 default).
+
+    Within a chunk the linear recurrence h_t = a_t h_{t-1} + b_t is solved with
+    an associative scan; chunk carries are propagated sequentially with
+    lax.scan, bounding peak memory at (B, chunk, Di, N).
+    """
+    Bsz, T, Di = u.shape
+    N = A.shape[1]
+    if T % chunk != 0:
+        chunk = T  # degenerate: single chunk
+    n_chunks = T // chunk
+
+    dA = jnp.exp(dt[..., None] * A)                     # (B,T,Di,N)
+    dBu = dt[..., None] * B[:, :, None, :] * u[..., None]
+
+    dA_c = dA.reshape(Bsz, n_chunks, chunk, Di, N)
+    dBu_c = dBu.reshape(Bsz, n_chunks, chunk, Di, N)
+    C_c = C.reshape(Bsz, n_chunks, chunk, N)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        a, bu, c = inp                                  # (B,chunk,Di,N) x2, (B,chunk,N)
+        aa, bb = jax.lax.associative_scan(combine, (a, bu), axis=1)
+        h_all = aa * h[:, None] + bb                    # (B,chunk,Di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, c)
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((Bsz, Di, N), dtype=u.dtype)
+    xs = (
+        jnp.moveaxis(dA_c, 1, 0),
+        jnp.moveaxis(dBu_c, 1, 0),
+        jnp.moveaxis(C_c, 1, 0),
+    )
+    _, ys = jax.lax.scan(chunk_step, h0, xs)            # (n_chunks,B,chunk,Di)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, Di)
+    return y + u * D
+
+
+# --------------------------------------------------------------------------
+# Grouped expert GEMM (the RoM hot-spot; megablocks analogue)
+# --------------------------------------------------------------------------
+
+def grouped_gemm_ref(x, w, route):
+    """y[t] = x[t] @ w[route[t]] via a dense one-hot einsum.
+
+    Args:
+      x:     (T, D)
+      w:     (E, D, F)
+      route: (T,) int32 in [0, E)
+    Returns:
+      y: (T, F)
+    """
+    E = w.shape[0]
+    onehot = jax.nn.one_hot(route, E, dtype=x.dtype)    # (T, E)
+    return jnp.einsum("te,td,edf->tf", onehot, x, w)
+
+
+# --------------------------------------------------------------------------
+# Short convolution (paper Eq. 2)
+# --------------------------------------------------------------------------
+
+def short_conv_ref(x, w):
+    """Depthwise causal conv (k taps) + SiLU — the paper's SC operator.
+
+    Args:
+      x: (B, T, D)
+      w: (k, D) depthwise taps, tap 0 is the oldest.
+    Returns:
+      (B, T, D)
+    """
+    k = w.shape[0]
+    acc = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        acc = acc + xi * w[i]
+    return jax.nn.silu(acc)

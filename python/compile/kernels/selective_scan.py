@@ -1,0 +1,115 @@
+"""Pallas chunked selective scan (Mamba recurrence, paper Eq. 4-5).
+
+TPU adaptation of the CUDA selective-scan kernel: the warp-parallel scan of
+the original becomes a *chunked* scan — the sequence is split into chunks
+sized so the (chunk, Di, N) working set fits VMEM; within a chunk the linear
+recurrence is solved with a Blelloch-style associative scan on the VPU, and
+chunk carries are propagated sequentially by an in-kernel fori_loop (the TPU
+grid analogue of CUDA's inter-block carry chaining).
+
+MUST run with interpret=True on this image: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. The BlockSpec structure below
+is still the one a real TPU build would use; VMEM/MXU estimates derived from
+it live in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(dA_ref, dBu_ref, C_ref, y_ref, *, chunk: int):
+    """Grid: (B,). Block: one batch row, full sequence resident in VMEM.
+
+    For the sizes this repo targets (T<=1024, Di<=512, N=16) one batch row is
+    (T, Di, N) f32 <= 32 MB in the worst ladder config and <= 4 MB for the
+    defaults; a real-TPU build would add a second grid axis over Di tiles.
+    """
+    T = dA_ref.shape[1]
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2 * b1 + b2
+
+    def body(c, h):
+        sl = pl.dslice(c * chunk, chunk)
+        a = dA_ref[0, sl]                                # (chunk, Di, N)
+        bu = dBu_ref[0, sl]
+        cm = C_ref[0, sl]                                # (chunk, N)
+        aa, bb = jax.lax.associative_scan(combine, (a, bu), axis=0)
+        h_all = aa * h[None] + bb                        # (chunk, Di, N)
+        y_ref[0, sl] = jnp.einsum(
+            "cdn,cn->cd", h_all, cm, preferred_element_type=jnp.float32
+        ).astype(y_ref.dtype)
+        return h_all[-1]
+
+    Di, N = dA_ref.shape[2], dA_ref.shape[3]
+    h0 = jnp.zeros((Di, N), dtype=jnp.float32)
+    n_chunks = T // chunk
+    jax.lax.fori_loop(0, n_chunks, body, h0)
+
+
+def selective_scan(u, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = True):
+    """Pallas-backed selective scan; same contract as ref.selective_scan_ref.
+
+    Differentiable: the forward pass runs the Pallas kernel; the backward pass
+    re-derives cotangents through the chunked associative-scan reference (the
+    in-kernel fori_loop has no reverse-mode rule). Numerically both paths
+    compute the same recurrence, so grads match the oracle to fp32 tolerance.
+    """
+    return _selective_scan(u, dt, A, B, C, D, chunk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _selective_scan(u, dt, A, B, C, D, chunk, interpret):
+    return _scan_fwd_only(u, dt, A, B, C, D, chunk, interpret)
+
+
+def _scan_fwd_only(u, dt, A, B, C, D, chunk, interpret):
+    """The ZOH discretization (elementwise) is done outside the kernel so XLA
+    can fuse it with its producers; the kernel owns the recurrence + readout."""
+    Bsz, T, Di = u.shape
+    N = A.shape[1]
+    if T % chunk != 0:
+        chunk = T
+
+    dA = jnp.exp(dt[..., None] * A)                      # (B,T,Di,N)
+    dBu = dt[..., None] * B[:, :, None, :] * u[..., None]
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(Bsz,),
+        in_specs=[
+            pl.BlockSpec((1, T, Di, N), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, T, Di, N), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, T, N), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, Di), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, T, Di), u.dtype),
+        interpret=interpret,
+    )(dA, dBu, C)
+    return y + u * D
+
+
+def _scan_vjp_fwd(u, dt, A, B, C, D, chunk, interpret):
+    y = _scan_fwd_only(u, dt, A, B, C, D, chunk, interpret)
+    return y, (u, dt, A, B, C, D)
+
+
+def _scan_vjp_bwd(chunk, interpret, res, dy):
+    from compile.kernels import ref
+
+    u, dt, A, B, C, D = res
+    _, vjp = jax.vjp(
+        lambda *args: ref.selective_scan_assoc(*args, chunk=chunk), u, dt, A, B, C, D
+    )
+    return vjp(dy)
+
+
+_selective_scan.defvjp(_scan_vjp_fwd, _scan_vjp_bwd)

@@ -1,0 +1,75 @@
+"""Pallas depthwise causal short convolution + SiLU (paper Eq. 2).
+
+The SC operator smooths the post-projection signal with a k=4 depthwise
+causal conv followed by SiLU. On TPU this is a VPU (not MXU) kernel: each
+batch row's (T, Di) tile is held in VMEM and the k taps are applied as
+shifted multiply-accumulates — no im2col materialization.
+interpret=True only on this image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, k: int):
+    """Grid: (B,). One batch row (T, Di) resident in VMEM."""
+    x = x_ref[0]                                        # (T, Di)
+    T = x.shape[0]
+    acc = jnp.zeros_like(x)
+    for i in range(k):                                  # k is tiny and static
+        shift = k - 1 - i
+        rolled = jnp.roll(x, shift, axis=0)
+        mask = (jnp.arange(T) >= shift)[:, None].astype(x.dtype)
+        acc = acc + rolled * mask * w_ref[i]
+    o_ref[0] = jax.nn.silu(acc).astype(o_ref.dtype)
+
+
+def short_conv(x, w, *, interpret: bool = True):
+    """Same contract as ref.short_conv_ref: x (B,T,Di), w (k,Di) -> (B,T,Di).
+
+    Differentiable: forward runs the Pallas kernel, backward re-derives
+    cotangents through the jnp reference (shift-MAC has no in-kernel
+    reverse-mode rule)."""
+    return _short_conv(x, w, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _short_conv(x, w, interpret):
+    return _conv_fwd_only(x, w, interpret)
+
+
+def _conv_vjp_fwd(x, w, interpret):
+    return _conv_fwd_only(x, w, interpret), (x, w)
+
+
+def _conv_vjp_bwd(interpret, res, dy):
+    from compile.kernels import ref
+
+    x, w = res
+    _, vjp = jax.vjp(ref.short_conv_ref, x, w)
+    return vjp(dy)
+
+
+_short_conv.defvjp(_conv_vjp_fwd, _conv_vjp_bwd)
+
+
+def _conv_fwd_only(x, w, interpret):
+    Bsz, T, Di = x.shape
+    k = w.shape[0]
+    kernel = functools.partial(_conv_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bsz,),
+        in_specs=[
+            pl.BlockSpec((1, T, Di), lambda b: (b, 0, 0)),
+            pl.BlockSpec((k, Di), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, Di), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, T, Di), x.dtype),
+        interpret=interpret,
+    )(x, w)

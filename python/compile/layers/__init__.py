@@ -1,0 +1,2 @@
+"""L2 building blocks: routers, expert projections, SSM variants, attention,
+MLPs and norms. Pure functions over parameter pytrees (no flax/haiku)."""

@@ -1,0 +1,100 @@
+"""Sliding-window attention (Samba's SWA), the Llama-proxy full attention,
+and the attention-MoE baselines of Table 1 (MoA, SwitchHead).
+
+MoA [50]: experts on the Query and Output projections, shared K/V — routed
+per token by a dedicated router, gate-weighted at the output.
+SwitchHead [5]: experts on the Value and Output projections, shared Q/K.
+Both use independent routers (they predate RoM's shared-routing insight) and
+are implemented with the same bank machinery as RoM so the comparison is
+apples-to-apples.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile.layers.init import fan_in_normal
+from compile.layers.moe_linear import bank_apply, bank_shape
+from compile.layers.router import Routing, route_tokens
+
+
+def rope(x: jax.Array, base: float = 10000.0) -> jax.Array:
+    """Rotary embedding over (B, H, T, Dh)."""
+    B, H, T, Dh = x.shape
+    half = Dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.arange(T, dtype=jnp.float32)[:, None] * freqs[None, :]  # (T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attn_E(cfg: ModelConfig, bank: str) -> int:
+    """Expert count of an attention projection bank under MoA/SwitchHead."""
+    if cfg.attn_moe == "moa" and bank in ("q", "o"):
+        return cfg.attn_moe_experts
+    if cfg.attn_moe == "switchhead" and bank in ("v", "o"):
+        return cfg.attn_moe_experts
+    return 1
+
+
+def init_attn_block(cfg: ModelConfig, key) -> Dict:
+    D = cfg.d_model
+    k = iter(jax.random.split(key, 8))
+    init = fan_in_normal()
+    p = {
+        "w_q": init(next(k), bank_shape(_attn_E(cfg, "q"), D, D)),
+        "w_k": init(next(k), bank_shape(_attn_E(cfg, "k"), D, D)),
+        "w_v": init(next(k), bank_shape(_attn_E(cfg, "v"), D, D)),
+        "w_o": init(next(k), bank_shape(_attn_E(cfg, "o"), D, D)),
+    }
+    if cfg.attn_moe != "none":
+        p["router"] = init(next(k), (D, cfg.attn_moe_experts))
+    return p
+
+
+def attn_block(cfg: ModelConfig, p: Dict, x: jax.Array, *, window: Optional[int],
+               key=None) -> Tuple[jax.Array, list]:
+    """Causal attention; `window` = sliding window size (None = full causal).
+
+    Returns (out, router stats list)."""
+    B, T, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    flat = x.reshape(B * T, D)
+    stats: list = []
+
+    r: Optional[Routing] = None
+    if cfg.attn_moe != "none":
+        r = route_tokens(flat, p["router"], top_k=1)
+        stats.append(r)
+
+    def proj(bank: str, inp):
+        w = p[f"w_{bank}"]
+        if w.ndim == 3 and w.shape[0] > 1:
+            y = bank_apply(inp, w, r, cfg.moe_impl)
+            if bank == "o":  # gate weight applied once, at the output bank
+                y = y * jnp.sum(r.gates, axis=-1, keepdims=True)
+            return y
+        return bank_apply(inp, w, None)
+
+    q = proj("q", flat).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    kk = proj("k", flat).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    v = proj("v", flat).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    q, kk = rope(q), rope(kk)
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, kk) / jnp.sqrt(Dh)
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = i >= j
+    if window is not None:
+        mask = mask & (i - j < window)
+    scores = jnp.where(mask, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bhsd->bhtd", attn, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(B * T, D)
+    out = proj("o", ctx)
+    return out.reshape(B, T, D), stats

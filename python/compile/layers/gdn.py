@@ -1,0 +1,112 @@
+"""Gated DeltaNet block [47] with RoM (Table 3).
+
+Delta-rule recurrence with a per-token scalar forget gate, multi-head:
+
+    S_t = alpha_t * (S_{t-1} - beta_t (S_{t-1} k_t - v_t) k_t^T)
+        = alpha_t * (S_{t-1} (I - beta_t k_t k_t^T) + beta_t v_t k_t^T)
+    y_t = S_t q_t
+
+The delta rule is not associative in this simple form, so the scan is a
+sequential lax.scan over T (CPU-friendly at this repo's scales; a WY-chunked
+version is the known TPU optimization and is out of scope — Table 3 only
+needs the architecture's quality shape).
+
+RoM (comprehensive expertization, §5.4): the combined qkv/gate in-projection
+and the out-projection are banks under one shared router.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile.layers.init import fan_in_normal
+from compile.kernels import ref as kref
+from compile.layers.moe_linear import bank_apply, bank_shape
+from compile.layers.router import Routing, route_tokens
+
+
+def _dims(cfg: ModelConfig):
+    Di = cfg.d_inner
+    H = cfg.n_heads
+    Dk = Di // H
+    return Di, H, Dk
+
+
+def in_proj_width(cfg: ModelConfig) -> int:
+    Di, H, Dk = _dims(cfg)
+    return 3 * Di + Di + 2 * H  # q, k, v, gate, alpha, beta
+
+
+def init_gdn_block(cfg: ModelConfig, key) -> Dict:
+    D = cfg.d_model
+    Di, H, Dk = _dims(cfg)
+    E = cfg.rom.num_experts if cfg.rom.enabled else 1
+    k = iter(jax.random.split(key, 5))
+    init = fan_in_normal()
+    p = {
+        "w_in": init(next(k), bank_shape(E, D, in_proj_width(cfg))),
+        "w_out": init(next(k), bank_shape(E, Di, D)),
+        "conv_w": init(next(k), (cfg.conv_kernel, Di)) * 0.5,
+        "norm_g": jnp.ones((Di,)),
+    }
+    if cfg.rom.enabled:
+        p["router"] = init(next(k), (D, E))
+    return p
+
+
+def _delta_scan(q, k, v, alpha, beta):
+    """q/k/v: (B,T,H,Dk), alpha/beta: (B,T,H) -> y: (B,T,H,Dk)."""
+    B, T, H, Dk = q.shape
+
+    def step(S, inp):
+        q_t, k_t, v_t, a_t, b_t = inp                     # (B,H,Dk)x3, (B,H)x2
+        Sk = jnp.einsum("bhmn,bhn->bhm", S, k_t)          # (B,H,Dk) value-read
+        delta = v_t - Sk
+        S = a_t[..., None, None] * (
+            S + b_t[..., None, None] * jnp.einsum("bhm,bhn->bhmn", delta, k_t))
+        y = jnp.einsum("bhmn,bhn->bhm", S, q_t)
+        return S, y
+
+    S0 = jnp.zeros((B, H, Dk, Dk), dtype=q.dtype)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, alpha, beta))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def gdn_block(cfg: ModelConfig, p: Dict, x: jax.Array,
+              key=None) -> Tuple[jax.Array, Optional[Routing], list]:
+    B, T, D = x.shape
+    Di, H, Dk = _dims(cfg)
+    flat = x.reshape(B * T, D)
+    stats: list = []
+
+    r: Optional[Routing] = None
+    if cfg.rom.enabled:
+        r = route_tokens(flat, p["router"], cfg.rom.top_k, cfg.rom.jitter, key)
+        stats.append(r)
+
+    proj = bank_apply(flat, p["w_in"], r, cfg.moe_impl)
+    q, k, v, g, ab = jnp.split(proj, [Di, 2 * Di, 3 * Di, 4 * Di], axis=-1)
+    alpha_raw, beta_raw = jnp.split(ab, 2, axis=-1)        # (BT,H) each
+
+    q = kref.short_conv_ref(q.reshape(B, T, Di), p["conv_w"]).reshape(B, T, H, Dk)
+    k = k.reshape(B, T, H, Dk)
+    v = v.reshape(B, T, H, Dk)
+    # L2-normalized keys/queries (DeltaNet convention) keep the rank-1 update stable.
+    q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+    k = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+    alpha = jax.nn.sigmoid(alpha_raw).reshape(B, T, H)
+    beta = jax.nn.sigmoid(beta_raw).reshape(B, T, H)
+
+    y = _delta_scan(q, k, v, alpha, beta).reshape(B * T, Di)
+    y = y * jax.nn.silu(g)
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-5) * p["norm_g"]
+    out = bank_apply(y, p["w_out"], r, cfg.moe_impl)
+    if r is not None:
+        out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
+    return out.reshape(B, T, D), r, stats

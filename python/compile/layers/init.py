@@ -1,0 +1,21 @@
+"""Weight init used across the zoo.
+
+Plain-normal fan-in scaling (LeCun variance) instead of jax's default
+truncated normal: truncated sampling lowers to an `erf` HLO op that the
+image's XLA 0.5.1 text parser rejects (unknown opcode). Plain normal keeps
+the artifact path clean and is statistically equivalent at these scales.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fan_in_normal():
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, dtype))
+        return jax.random.normal(key, shape, dtype) * scale
+
+    return init

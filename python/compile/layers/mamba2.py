@@ -1,0 +1,127 @@
+"""Mamba-2 block (SSD, scalar-identity decay per head) with RoM.
+
+Per §5.4 ("Comprehensive Expertization for Streamlined SSMs"), Mamba-2's
+unified in/out projections are expertized *wholesale* under one shared router
+when RoM is enabled: the combined in-projection (z, x, B, C, dt) and the
+out-projection each become banks driven by the same decision, and the gate
+weight is applied once at the output.
+
+Recurrence (multi-head, ngroups=1):
+    h_t = exp(dt_t * a_h) h_{t-1} + dt_t * x_t ⊗ B_t         h: (H, P, N)
+    y_t = h_t C_t + D_h x_t
+solved with the same chunked associative scan as the Mamba-1 kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile.layers.init import fan_in_normal
+from compile.kernels import ref as kref
+from compile.layers.moe_linear import bank_apply, bank_shape
+from compile.layers.router import Routing, route_tokens
+
+
+def _dims(cfg: ModelConfig):
+    Di = cfg.d_inner
+    H = cfg.n_heads
+    P = Di // H
+    N = cfg.d_state
+    return Di, H, P, N
+
+
+def in_proj_width(cfg: ModelConfig) -> int:
+    Di, H, P, N = _dims(cfg)
+    return 2 * Di + 2 * N + H  # z, x, B, C, dt
+
+
+def init_mamba2_block(cfg: ModelConfig, key) -> Dict:
+    D = cfg.d_model
+    Di, H, P, N = _dims(cfg)
+    E = cfg.rom.num_experts if cfg.rom.enabled else 1
+    k = iter(jax.random.split(key, 6))
+    init = fan_in_normal()
+    p = {
+        "w_in": init(next(k), bank_shape(E, D, in_proj_width(cfg))),
+        "w_out": init(next(k), bank_shape(E, Di, D)),
+        "conv_w": init(next(k), (cfg.conv_kernel, Di)) * 0.5,
+        "A_log": jnp.log(jnp.linspace(1.0, 8.0, H)),
+        "dt_bias": jnp.zeros((H,)),
+        "D": jnp.ones((H,)),
+        "norm_g": jnp.ones((Di,)),
+    }
+    if cfg.rom.enabled:
+        p["router"] = init(next(k), (D, E))
+    return p
+
+
+def _ssd_scan(x, dt, a, B, C, chunk: int = 64):
+    """x: (Bz,T,H,P), dt: (Bz,T,H), a: (H,), B/C: (Bz,T,N) -> y (Bz,T,H,P)."""
+    Bz, T, H, P = x.shape
+    N = B.shape[-1]
+    if T % chunk != 0:
+        chunk = T
+    n_chunks = T // chunk
+
+    decay = jnp.exp(dt * a)                                 # (Bz,T,H)
+    inc = jnp.einsum("bth,bthp,btn->bthpn", dt, x, B)       # (Bz,T,H,P,N)
+
+    dc = decay.reshape(Bz, n_chunks, chunk, H)
+    ic = inc.reshape(Bz, n_chunks, chunk, H, P, N)
+    Cc = C.reshape(Bz, n_chunks, chunk, N)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2[..., None, None] * b1 + b2
+
+    def chunk_step(h, inp):
+        d, i, c = inp                                       # (Bz,chunk,H), (Bz,chunk,H,P,N), (Bz,chunk,N)
+        aa, bb = jax.lax.associative_scan(combine, (d, i), axis=1)
+        h_all = aa[..., None, None] * h[:, None] + bb       # (Bz,chunk,H,P,N)
+        y = jnp.einsum("bchpn,bcn->bchp", h_all, c)
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((Bz, H, P, N), dtype=x.dtype)
+    xs = (jnp.moveaxis(dc, 1, 0), jnp.moveaxis(ic, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    _, ys = jax.lax.scan(chunk_step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(Bz, T, H, P)
+
+
+def mamba2_block(cfg: ModelConfig, p: Dict, x: jax.Array,
+                 key=None) -> Tuple[jax.Array, Optional[Routing], list]:
+    B, T, D = x.shape
+    Di, H, P, N = _dims(cfg)
+    flat = x.reshape(B * T, D)
+    stats: list = []
+
+    r: Optional[Routing] = None
+    if cfg.rom.enabled:
+        r = route_tokens(flat, p["router"], cfg.rom.top_k, cfg.rom.jitter, key)
+        stats.append(r)
+
+    zxbcdt = bank_apply(flat, p["w_in"], r, cfg.moe_impl)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+
+    xs = kref.short_conv_ref(xs.reshape(B, T, Di), p["conv_w"])
+    dt = jax.nn.softplus(dt + p["dt_bias"]).reshape(B, T, H)
+    a = -jnp.exp(p["A_log"])
+
+    y = _ssd_scan(xs.reshape(B, T, H, P), dt, a,
+                  Bm.reshape(B, T, N), Cm.reshape(B, T, N))
+    y = y + xs.reshape(B, T, H, P) * p["D"][None, None, :, None]
+    y = y.reshape(B * T, Di)
+
+    # Gated RMSNorm (Mamba-2's output norm) then out-projection.
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-5) * p["norm_g"]
+    out = bank_apply(y, p["w_out"], r, cfg.moe_impl)
+    if r is not None:
+        out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
+    return out.reshape(B, T, D), r, stats

@@ -1,0 +1,62 @@
+"""SwiGLU MLP and FFN-MoE (Table 2 / Table 10 baselines and hybrids).
+
+FFN-MoE experts are whole SwiGLU networks (up/gate/down expertized together —
+the "holistic expertization" finding of §5.4). The hybrid RoM+FFN-MoE variant
+(App. A.2 Eq. 14-15) *reuses the routing decision of the preceding RoM layer*
+instead of learning its own router — pass it as `inherited`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile.layers.init import fan_in_normal
+from compile.layers.moe_linear import bank_apply, bank_shape
+from compile.layers.router import Routing, route_tokens
+
+
+def init_mlp_block(cfg: ModelConfig, key) -> Dict:
+    D = cfg.d_model
+    Dh = cfg.mlp_mult * D
+    E = cfg.ffn_moe.num_experts
+    k = iter(jax.random.split(key, 5))
+    init = fan_in_normal()
+    p = {
+        "w_up": init(next(k), bank_shape(E, D, Dh)),
+        "w_gate": init(next(k), bank_shape(E, D, Dh)),
+        "w_down": init(next(k), bank_shape(E, Dh, D)),
+    }
+    if cfg.ffn_moe.enabled and not cfg.ffn_moe_share_router:
+        p["router"] = init(next(k), (D, E))
+    return p
+
+
+def mlp_block(cfg: ModelConfig, p: Dict, x: jax.Array,
+              inherited: Optional[Routing] = None,
+              key=None) -> Tuple[jax.Array, list]:
+    """Returns (out, router stats list). `inherited` = shared routing decision
+    from the preceding RoM layer (hybrid RoM+FFN-MoE, Eq. 14-15)."""
+    B, T, D = x.shape
+    flat = x.reshape(B * T, D)
+    stats: list = []
+
+    r: Optional[Routing] = None
+    if cfg.ffn_moe.enabled:
+        if inherited is not None:
+            r = inherited
+        else:
+            r = route_tokens(flat, p["router"], cfg.ffn_moe.top_k,
+                             cfg.ffn_moe.jitter, key)
+            stats.append(r)
+
+    up = bank_apply(flat, p["w_up"], r, cfg.moe_impl)
+    gate = bank_apply(flat, p["w_gate"], r, cfg.moe_impl)
+    h = jax.nn.silu(gate) * up
+    out = bank_apply(h, p["w_down"], r, cfg.moe_impl)
+    if r is not None:
+        out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
+    return out.reshape(B, T, D), stats

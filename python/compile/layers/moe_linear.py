@@ -1,0 +1,61 @@
+"""Expert-bank linear projection: the unit RoM expertizes.
+
+A bank is either dense (E == 1: a single weight matrix) or a stack of E expert
+matrices dispatched by a `Routing`. Two implementations with identical
+semantics:
+
+  * "onehot":  dense one-hot einsum (E× compute; XLA-fusion friendly; also the
+               oracle the grouped path is tested against).
+  * "grouped": the Pallas megablocks grouped GEMM (token-linear compute).
+
+The gate weights R_i are deliberately NOT applied here — Eq. 10-11 use the
+bare top-K indicator for the Conv/Gate banks and Eq. 12 applies R once after
+the Out bank; callers own that (see layers/router.combine_topk).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.grouped_gemm import grouped_gemm
+from compile.layers.router import Routing
+
+
+def bank_apply(x: jax.Array, w: jax.Array, routing: Optional[Routing],
+               impl: str = "onehot", block_size: int = 16) -> jax.Array:
+    """Apply a projection bank to flat tokens.
+
+    Args:
+      x: (T, Din) tokens.
+      w: (Din, Dout) dense weight, or (E, Din, Dout) expert bank.
+      routing: required iff w is a bank with E > 1.
+      impl: "onehot" | "grouped".
+    Returns:
+      (T, Dout) — for top-K > 1 the unweighted sum over selected experts
+      (indicator semantics of Eq. 10-11).
+    """
+    if w.ndim == 2:
+        return x @ w
+    E = w.shape[0]
+    if E == 1:
+        return x @ w[0]
+    assert routing is not None, "expert bank requires a routing decision"
+    T, K = routing.route.shape
+    acc = None
+    for k in range(K):
+        route_k = routing.route[:, k]
+        if impl == "grouped":
+            y = grouped_gemm(x, w, route_k, block_size, True)
+        else:
+            onehot = jax.nn.one_hot(route_k, E, dtype=x.dtype)
+            y = jnp.einsum("te,td,edf->tf", onehot, x, w)
+        acc = y if acc is None else acc + y
+    return acc
+
+
+def bank_shape(E: int, din: int, dout: int):
+    """Shape of a bank parameter: dense (din,dout) when E==1 else (E,din,dout)."""
+    return (din, dout) if E == 1 else (E, din, dout)

@@ -1,0 +1,11 @@
+"""RMSNorm (pre-norm convention, paper App. A.2 / [49])."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    """x: (..., D), gamma: (D,)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * gamma

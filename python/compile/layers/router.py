@@ -1,0 +1,95 @@
+"""RoM routing (paper Eq. 7-9) and the shared-routing decision object.
+
+A `Routing` captures one router's decision for a batch of tokens: the top-K
+expert indices, the gating weights R_i(X_t) (Eq. 9: softmax probability masked
+by the top-K indicator — NOT renormalized, so the router receives gradient
+through the probability of the selected expert, Switch-Transformer style; this
+is the straight-through stand-in for SparseMixer documented in DESIGN.md),
+and per-expert load statistics for telemetry / the optional balance loss
+(Eq. 16).
+
+RoM's key idea is that ONE `Routing` is computed per Mamba block and *shared*
+by every expertized projection bank (Conv/Gate/Out/...). The MoE-Mamba
+baseline instead builds an independent `Routing` per bank.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _topk(probs: jax.Array, k: int):
+    """Iterative top-k by repeated argmax. jax.lax.top_k lowers to an HLO
+    `topk` custom op the image's XLA 0.5.1 parser rejects; K here is 1 or 2,
+    so K argmax reductions are both compatible and cheap."""
+    remaining = probs
+    gates, idxs = [], []
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)             # (T,)
+        gate = jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0]
+        gates.append(gate)
+        idxs.append(idx)
+        remaining = remaining.at[jnp.arange(probs.shape[0]), idx].set(-jnp.inf)
+    return jnp.stack(gates, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+class Routing(NamedTuple):
+    route: jax.Array      # (T, K) int32 selected expert ids
+    gates: jax.Array      # (T, K) f32 gating weights R_i (prob * indicator)
+    load: jax.Array       # (E,) fraction of tokens whose top-1 is expert e
+    balance: jax.Array    # scalar: N * sum_e f_e * mean_p_e (Eq. 16 term)
+
+    @property
+    def top1(self) -> jax.Array:
+        return self.route[:, 0]
+
+
+def route_tokens(x: jax.Array, w_r: jax.Array, top_k: int = 1,
+                 jitter: float = 0.0,
+                 key: Optional[jax.Array] = None) -> Routing:
+    """Compute one routing decision (paper Eq. 9).
+
+    Args:
+      x:   (T, D) token representations X_t.
+      w_r: (D, E) router weights W_r.
+      top_k: K.
+      jitter: multiplicative input jitter amplitude (train-time exploration,
+        Appendix A.3); 0 disables.
+      key: PRNG key, required when jitter > 0.
+    """
+    if jitter > 0.0 and key is not None:
+        noise = jax.random.uniform(key, x.shape, x.dtype,
+                                   1.0 - jitter, 1.0 + jitter)
+        x = x * noise
+    logits = x @ w_r                                     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, route = _topk(probs, top_k)                   # (T, K) each
+    E = w_r.shape[1]
+    # Load stats from the top-1 choice (the paper's E top-1 configs).
+    onehot = jax.nn.one_hot(route[:, 0], E, dtype=x.dtype)
+    f = jnp.mean(onehot, axis=0)                         # (E,) dispatch fraction
+    p = jnp.mean(probs, axis=0)                          # (E,) mean router prob
+    balance = E * jnp.sum(f * jax.lax.stop_gradient(p) * 0 + f * p)
+    return Routing(route=route.astype(jnp.int32), gates=gates,
+                   load=f, balance=balance)
+
+
+def combine_topk(outputs_fn, routing: Routing, weighted: bool):
+    """Sum expert outputs over the K selected experts.
+
+    outputs_fn(route_1d) -> (T, F): output of running every token through its
+    assigned expert for one of the K slots. `weighted` applies the gate weight
+    R_i (used at the Out projection per Eq. 12); unweighted banks (Conv/Gate,
+    Eq. 10-11) use the bare indicator.
+    """
+    T, K = routing.route.shape
+    acc = None
+    for k in range(K):
+        y = outputs_fn(routing.route[:, k])
+        if weighted:
+            y = y * routing.gates[:, k][:, None]
+        acc = y if acc is None else acc + y
+    return acc

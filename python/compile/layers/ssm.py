@@ -1,0 +1,163 @@
+"""The Mamba block with RoM expert projections (paper §3.1 + §4.2).
+
+Layout of one block (paper Fig. 1):
+
+    x ──► Conv Proj (W_in, bank) ──► ShortConv+SiLU ──► selective scan ──► Y
+    x ──► Gate Proj (W_g,  bank) ──► SiLU ─────────────────────┐
+                                                     Y ⊙ G ──► Out Proj (W_out, bank) ──► · R(x) ──► out
+    x ──► Router W_r ── one shared decision for every bank (RoM)
+
+Expertized banks are chosen by `cfg.rom_targets` ⊆ {conv, gate, out, dt, x};
+the scan itself, the depthwise Conv1D, and (by default) the x/dt projections
+stay shared across experts — the Multi-Query-Attention analogy of §4.3. Under
+`routing="shared"` one decision feeds every bank and the gate weight R is
+applied once after the Out projection (Eq. 12); under "independent"
+(MoE-Mamba baseline) every bank routes and weighs on its own.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile.layers.init import fan_in_normal
+from compile.kernels import ref as kref
+from compile.kernels.selective_scan import selective_scan as pallas_scan
+from compile.kernels.short_conv import short_conv as pallas_conv
+from compile.layers.moe_linear import bank_apply, bank_shape
+from compile.layers.router import Routing, route_tokens
+
+
+def _rom_E(cfg: ModelConfig, target: str) -> int:
+    """Expert count for one bank: E if expertized, else 1 (dense)."""
+    return cfg.rom.num_experts if target in cfg.rom_targets else 1
+
+
+def init_mamba_block(cfg: ModelConfig, key) -> Dict:
+    """Parameter pytree of one Mamba block (names are stable: the manifest
+    and the rust checkpoint format rely on dict-key order)."""
+    D, Di, N, R = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank
+    k = iter(jax.random.split(key, 12))
+    init = fan_in_normal()
+
+    def bank(target: str, din: int, dout: int):
+        return init(next(k), bank_shape(_rom_E(cfg, target), din, dout))
+
+    p = {
+        "w_in": bank("conv", D, Di),
+        "w_gate": bank("gate", D, Di),
+        "w_out": bank("out", Di, D),
+        "conv_w": init(next(k), (cfg.conv_kernel, Di)) * 0.5,
+        "w_x": bank("x", Di, R + 2 * N),
+        "w_dt": bank("dt", R, Di),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(next(k), (Di,),
+                                       minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, 1))),
+        "D": jnp.ones((Di,)),
+    }
+    if cfg.rom.enabled and cfg.rom_targets:
+        n_banks = len(cfg.rom_targets)
+        n_routers = 1 if cfg.routing == "shared" else n_banks
+        p["router"] = init(next(k), (n_routers, D, cfg.rom.num_experts))
+    return p
+
+
+def _routing_for(cfg: ModelConfig, p: Dict, flat_x: jax.Array, target: str,
+                 key) -> Optional[Routing]:
+    """Return this bank's routing decision, building it lazily per router."""
+    if not (cfg.rom.enabled and target in cfg.rom_targets):
+        return None
+    if cfg.routing == "shared":
+        idx = 0
+    else:
+        idx = sorted(cfg.rom_targets).index(target)
+    w_r = p["router"][idx]
+    return route_tokens(flat_x, w_r, cfg.rom.top_k, cfg.rom.jitter, key)
+
+
+def mamba_block(cfg: ModelConfig, p: Dict, x: jax.Array,
+                key=None) -> Tuple[jax.Array, Optional[Routing], list]:
+    """Forward one Mamba block.
+
+    Returns (out (B,T,D), the shared Routing (or None), list of per-router
+    Routing decisions for telemetry/balance-loss — one entry per router).
+    """
+    B, T, D = x.shape
+    Di, N, R = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    flat = x.reshape(B * T, D)
+    use_pallas = cfg.scan_impl == "pallas"
+
+    routings: Dict[str, Routing] = {}
+    stats: list = []
+
+    def routing(target: str) -> Optional[Routing]:
+        if not (cfg.rom.enabled and target in cfg.rom_targets):
+            return None
+        cache_key = "shared" if cfg.routing == "shared" else target
+        if cache_key not in routings:
+            r = _routing_for(cfg, p, flat, target, key)
+            routings[cache_key] = r
+            stats.append(r)
+        return routings[cache_key]
+
+    def project(target: str, w, inp):
+        """Bank projection. Shared routing uses the bare indicator here
+        (Eq. 10-11); independent routing (MoE-Mamba) applies each bank's own
+        gate weights immediately — standard per-layer MoE semantics."""
+        r = routing(target)
+        if r is not None and cfg.routing == "independent":
+            return _weight_topk(inp, w, r, cfg)
+        return bank_apply(inp, w, r, cfg.moe_impl)
+
+    # Conv path (Eq. 11 with shared indicator).
+    h = project("conv", p["w_in"], flat).reshape(B, T, Di)
+    if use_pallas:
+        u = pallas_conv(h, p["conv_w"])
+    else:
+        u = kref.short_conv_ref(h, p["conv_w"])
+
+    # Data-dependent SSM parameters (shared across experts by default, §4.3).
+    flat_u = u.reshape(B * T, Di)
+    xdbc = project("x", p["w_x"], flat_u)                 # (BT, R+2N)
+    dt_raw, Bm, Cm = jnp.split(xdbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(project("dt", p["w_dt"], dt_raw) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    scan = {"pallas": pallas_scan, "assoc": kref.selective_scan_assoc,
+            "loop": kref.selective_scan_ref}[cfg.scan_impl]
+    Y = scan(u, dt.reshape(B, T, Di), A,
+             Bm.reshape(B, T, N), Cm.reshape(B, T, N), p["D"])
+
+    # Gate path (Eq. 10).
+    G = jax.nn.silu(project("gate", p["w_gate"], flat))   # (BT, Di)
+
+    # Out projection on Y ⊙ G (Eq. 13), then the shared gate weight R (Eq. 12).
+    inner = Y.reshape(B * T, Di) * G
+    out = project("out", p["w_out"], inner)               # (BT, D)
+    shared_r = routings.get("shared")
+    if shared_r is not None:
+        gate_w = jnp.sum(shared_r.gates, axis=-1, keepdims=True)
+        out = out * gate_w
+    return out.reshape(B, T, D), shared_r, stats
+
+
+def _weight_topk(inp, w, r: Routing, cfg: ModelConfig):
+    """Independent-routing banks weight each expert output by its own gate
+    (MoE-Mamba): recompute the K partial outputs weighted. K is small."""
+    acc = None
+    for k in range(r.route.shape[1]):
+        route_k = r.route[:, k]
+        if cfg.moe_impl == "grouped":
+            from compile.kernels.grouped_gemm import grouped_gemm
+
+            yk = grouped_gemm(inp, w, route_k, 16, True)
+        else:
+            onehot = jax.nn.one_hot(route_k, w.shape[0], dtype=inp.dtype)
+            yk = jnp.einsum("te,td,edf->tf", onehot, inp, w)
+        yk = yk * r.gates[:, k][:, None]
+        acc = yk if acc is None else acc + yk
+    return acc

@@ -1,0 +1,132 @@
+"""L2 model assembly: the config-driven zoo (paper Fig. 5 layouts).
+
+`init_params(cfg, key)` builds the parameter pytree; `forward(cfg, params,
+tokens, key)` returns logits plus an `Aux` record (per-router expert loads,
+balance loss). Parameter leaves flatten in a deterministic order (sorted dict
+keys) that the AOT manifest records and the rust coordinator relies on.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile.layers.attention import attn_block, init_attn_block
+from compile.layers.gdn import gdn_block, init_gdn_block
+from compile.layers.mamba2 import init_mamba2_block, mamba2_block
+from compile.layers.mlp import init_mlp_block, mlp_block
+from compile.layers.norm import rms_norm
+from compile.layers.router import Routing
+from compile.layers.ssm import init_mamba_block, mamba_block
+
+
+class Aux(NamedTuple):
+    load: jax.Array     # (R, E) dispatch fraction per router (R >= 1, padded)
+    balance: jax.Array  # scalar aux balance loss (pre-coefficient)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    layout = cfg.block_layout()
+    keys = jax.random.split(key, len(layout) + 2)
+    blocks: List[Dict] = []
+    for i, kind in enumerate(layout):
+        bk = keys[i]
+        if kind == "mamba":
+            blocks.append(init_mamba_block(cfg, bk))
+        elif kind == "mamba2":
+            blocks.append(init_mamba2_block(cfg, bk))
+        elif kind == "gdn":
+            blocks.append(init_gdn_block(cfg, bk))
+        elif kind == "swa":
+            blocks.append(init_attn_block(cfg, bk))
+        elif kind == "mlp":
+            blocks.append(init_mlp_block(cfg, bk))
+        else:
+            raise AssertionError(kind)
+    embed = jax.random.normal(keys[-2], (cfg.vocab_size, cfg.d_model)) * 0.02
+    params: Dict = {
+        "embed": embed,
+        "blocks": blocks,
+        "norms": [jnp.ones((cfg.d_model,)) for _ in layout],
+        "final_norm": jnp.ones((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[-1], (cfg.d_model, cfg.vocab_size)) * 0.02)
+    return params
+
+
+def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+            key: Optional[jax.Array] = None, *,
+            window_override: Optional[int] = None):
+    """tokens: (B, T) int32 -> (logits (B,T,V), Aux).
+
+    `window_override` lets eval artifacts widen/narrow SWA without retracing
+    configs (unused by default; SWA window is length-independent anyway).
+    """
+    layout = cfg.block_layout()
+    B, T = tokens.shape
+    x = params["embed"][tokens]                       # (B,T,D)
+
+    all_stats: List[Routing] = []
+    prev_rom_routing: Optional[Routing] = None
+    window = window_override if window_override is not None else cfg.window
+
+    for i, kind in enumerate(layout):
+        p = params["blocks"][i]
+        h = rms_norm(x, params["norms"][i])
+        bk = None if key is None else jax.random.fold_in(key, i)
+        if kind == "mamba":
+            out, rom_r, stats = mamba_block(cfg, p, h, bk)
+            prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
+        elif kind == "mamba2":
+            out, rom_r, stats = mamba2_block(cfg, p, h, bk)
+            prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
+        elif kind == "gdn":
+            out, rom_r, stats = gdn_block(cfg, p, h, bk)
+            prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
+        elif kind == "swa":
+            out, stats = attn_block(cfg, p, h, window=window, key=bk)
+        elif kind == "mlp":
+            inherited = None
+            if (cfg.ffn_moe.enabled and "router" not in p):
+                inherited = prev_rom_routing
+            out, stats = mlp_block(cfg, p, h, inherited=inherited, key=bk)
+        else:
+            raise AssertionError(kind)
+        all_stats.extend(stats)
+        x = x + out
+
+    x = rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+
+    if all_stats:
+        E = max(int(s.load.shape[0]) for s in all_stats)
+        load = jnp.stack([
+            jnp.pad(s.load, (0, E - s.load.shape[0])) for s in all_stats])
+        balance = jnp.mean(jnp.stack([s.balance for s in all_stats]))
+    else:
+        load = jnp.zeros((1, 1))
+        balance = jnp.zeros(())
+    return logits, Aux(load=load, balance=balance)
+
+
+def num_routers(cfg: ModelConfig) -> int:
+    """How many routing decisions per forward (rows of Aux.load)."""
+    n = 0
+    for kind in cfg.block_layout():
+        if kind == "mamba" and cfg.rom.enabled and cfg.rom_targets:
+            n += 1 if cfg.routing == "shared" else len(cfg.rom_targets)
+        elif kind in ("mamba2", "gdn") and cfg.rom.enabled:
+            n += 1
+        elif kind == "swa" and cfg.attn_moe != "none":
+            n += 1
+        elif kind == "mlp" and cfg.ffn_moe.enabled and not cfg.ffn_moe_share_router:
+            n += 1  # hybrid inherited-routing MLPs emit no stats of their own
+    return max(n, 1)

@@ -1,0 +1,150 @@
+"""Named model presets: one per experiment row (DESIGN.md §4).
+
+The paper's scales (115M/353M/765M/1.3B, Samba 421M/511M) map onto a tiny
+ladder with the same layer/width *ratios* (substitution table in DESIGN.md);
+`emit_configs()` writes each preset as configs/<name>.json for the rust side.
+
+Naming convention: <arch>-<scale>[-<moe tag>].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List
+
+from compile.config import ModelConfig, MoEConfig
+
+# Tiny ladder mirroring Table 5 ratios (n_layers x d_model):
+# paper: 115M=24x768, 353M=48x1024, 765M=48x1536, 1.3B=48x2048
+# here (pure-mamba layer counts; samba uses groups of 3 blocks):
+LADDER = {
+    "tiny": dict(n_layers=4, d_model=64),
+    "small": dict(n_layers=6, d_model=96),
+    "base": dict(n_layers=6, d_model=144),
+    "large": dict(n_layers=6, d_model=192),
+}
+
+ROM8 = MoEConfig(num_experts=8, top_k=1)
+FFN8 = MoEConfig(num_experts=8, top_k=1)
+FFN16 = MoEConfig(num_experts=16, top_k=1)
+
+
+def _mk(name: str, **kw) -> ModelConfig:
+    return ModelConfig(name=name, **kw)
+
+
+def all_presets() -> Dict[str, ModelConfig]:
+    p: Dict[str, ModelConfig] = {}
+
+    # ---- Fig 3/4 ladder: dense Mamba vs RoM (Conv,Gate,Out shared top-1/8) --
+    for scale, dims in LADDER.items():
+        p[f"mamba-{scale}"] = _mk(f"mamba-{scale}", arch="mamba", **dims)
+        p[f"rom-{scale}"] = _mk(
+            f"rom-{scale}", arch="mamba", **dims,
+            rom_targets=["conv", "gate", "out"], routing="shared",
+            rom=dataclasses.replace(ROM8))
+
+    # ---- Fig 2 / Table 4: Samba 421M analogue + naive MoE-Mamba combos -----
+    samba_dims = dict(n_layers=2, d_model=96, expand=2)  # 2 groups of [mamba,swa,mlp]
+    p["samba-e2"] = _mk("samba-e2", arch="samba", **samba_dims)
+    combos = [("conv",), ("gate",), ("out",), ("conv", "gate"),
+              ("conv", "out"), ("gate", "out"), ("conv", "gate", "out")]
+    for combo in combos:
+        tag = "".join(c[0] for c in combo)  # c, g, o, cg, ...
+        p[f"samba-e2-moemamba-{tag}"] = _mk(
+            f"samba-e2-moemamba-{tag}", arch="samba", **samba_dims,
+            rom_targets=list(combo), routing="independent",
+            rom=dataclasses.replace(ROM8))
+    p["samba-e2-rom"] = _mk(
+        "samba-e2-rom", arch="samba", **samba_dims,
+        rom_targets=["conv", "gate", "out"], routing="shared",
+        rom=dataclasses.replace(ROM8))
+
+    # ---- Table 1 extras ----------------------------------------------------
+    p["llama"] = _mk("llama", arch="llama", n_layers=3, d_model=96, window=0)
+    p["mamba-t1"] = _mk("mamba-t1", arch="mamba", n_layers=6, d_model=96)
+    p["samba-e2-moa"] = _mk("samba-e2-moa", arch="samba", **samba_dims,
+                            attn_moe="moa", attn_moe_experts=8)
+    p["samba-e2-switchhead"] = _mk("samba-e2-switchhead", arch="samba",
+                                   **samba_dims, attn_moe="switchhead",
+                                   attn_moe_experts=8)
+    samba4_dims = dict(n_layers=2, d_model=96, expand=4)
+    p["samba-e4"] = _mk("samba-e4", arch="samba", **samba4_dims)
+    p["samba-e4-rom-go"] = _mk(
+        "samba-e4-rom-go", arch="samba", **samba4_dims,
+        rom_targets=["gate", "out"], routing="shared", rom=dataclasses.replace(ROM8))
+    p["samba-e4-rom"] = _mk(
+        "samba-e4-rom", arch="samba", **samba4_dims,
+        rom_targets=["conv", "gate", "out"], routing="shared",
+        rom=dataclasses.replace(ROM8))
+    p["samba-e4-rom-all"] = _mk(
+        "samba-e4-rom-all", arch="samba", **samba4_dims,
+        rom_targets=["conv", "gate", "dt", "x", "out"], routing="shared",
+        rom=dataclasses.replace(ROM8))
+
+    # ---- Table 6: load balance ablation ------------------------------------
+    p["samba-e4-rom-bal"] = _mk(
+        "samba-e4-rom-bal", arch="samba", **samba4_dims,
+        rom_targets=["conv", "gate", "out"], routing="shared",
+        rom=MoEConfig(num_experts=8, top_k=1, balance_loss=1e-3))
+    p["samba-e4-rom-all-bal"] = _mk(
+        "samba-e4-rom-all-bal", arch="samba", **samba4_dims,
+        rom_targets=["conv", "gate", "dt", "x", "out"], routing="shared",
+        rom=MoEConfig(num_experts=8, top_k=1, balance_loss=1e-3))
+
+    # ---- Table 3: other linear recurrent architectures + RoM ---------------
+    small = LADDER["small"]
+    p["mamba2-small"] = _mk("mamba2-small", arch="mamba2", **small)
+    p["mamba2-small-rom"] = _mk("mamba2-small-rom", arch="mamba2", **small,
+                                rom=dataclasses.replace(ROM8))
+    p["gdn-small"] = _mk("gdn-small", arch="gdn", **small)
+    p["gdn-small-rom"] = _mk("gdn-small-rom", arch="gdn", **small,
+                             rom=dataclasses.replace(ROM8))
+
+    # ---- Table 2 / 10: FFN-MoE vs hybrid RoM+FFN-MoE ------------------------
+    p["samba-ffnmoe16"] = _mk(
+        "samba-ffnmoe16", arch="samba", **samba4_dims,
+        ffn_moe=dataclasses.replace(FFN16))
+    p["samba-rom-ffnmoe8"] = _mk(
+        "samba-rom-ffnmoe8", arch="samba", **samba4_dims,
+        rom_targets=["conv", "gate", "out"], routing="shared",
+        rom=dataclasses.replace(ROM8),
+        ffn_moe=dataclasses.replace(FFN8), ffn_moe_share_router=True)
+
+    # ---- e2e example model (pallas kernels on the hot path) ----------------
+    p["rom-e2e"] = _mk(
+        "rom-e2e", arch="mamba", n_layers=4, d_model=96,
+        rom_targets=["conv", "gate", "out"], routing="shared",
+        rom=dataclasses.replace(ROM8), scan_impl="pallas")
+
+    # ---- §Perf ablation variants (EXPERIMENTS.md) ---------------------------
+    # Same model as rom-tiny but with the megablocks grouped-GEMM expert path
+    # (L1 kernel) instead of the one-hot einsum; and mamba-tiny with the
+    # pallas scan instead of the associative-scan reference.
+    p["rom-tiny-grouped"] = _mk(
+        "rom-tiny-grouped", arch="mamba", **LADDER["tiny"],
+        rom_targets=["conv", "gate", "out"], routing="shared",
+        rom=dataclasses.replace(ROM8), moe_impl="grouped")
+    p["mamba-tiny-pallas"] = _mk(
+        "mamba-tiny-pallas", arch="mamba", **LADDER["tiny"], scan_impl="pallas")
+
+    return p
+
+
+def get_preset(name: str) -> ModelConfig:
+    presets = all_presets()
+    if name not in presets:
+        raise KeyError(f"unknown preset {name!r}; have {sorted(presets)}")
+    return presets[name]
+
+
+def emit_configs(out_dir: str) -> List[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, cfg in all_presets().items():
+        path = os.path.join(out_dir, f"{name}.json")
+        with open(path, "w") as f:
+            f.write(cfg.to_json() + "\n")
+        written.append(path)
+    return written

@@ -1,0 +1,146 @@
+"""Training/eval step builders lowered to HLO by compile.aot.
+
+Signatures (mirrored in rust `runtime::artifact`):
+  init : (seed i32[])                                   -> params
+  step : (params, m, v, step f32, lr f32, tok, tgt)     -> (params, m, v, loss, load)
+  grad : (params, gacc, tok, tgt)                       -> (gacc', loss)
+  apply: (params, m, v, gsum, step f32, lr f32, n f32)  -> (params, m, v)
+  eval : (params, tok, tgt)                             -> (nll_sum, count)
+
+AdamW is implemented inline (no optax in the artifact path): beta1=0.9,
+beta2=0.95, eps=1e-8, weight-decay 0.1, gradient clip 1.0 — the paper's §5.1
+settings. The LR schedule itself lives in the rust coordinator and arrives as
+the `lr` scalar each step.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile.model import forward, init_params
+
+BETA1, BETA2, EPS = 0.9, 0.95, 1e-8
+WEIGHT_DECAY = 0.1
+CLIP = 1.0
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, tokens, targets, key=None):
+    """Mean token cross-entropy + optional balance loss. Returns (loss, aux)."""
+    logits, aux = forward(cfg, params, tokens, key)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    total = loss
+    if cfg.rom.balance_loss > 0 or cfg.ffn_moe.balance_loss > 0:
+        coef = max(cfg.rom.balance_loss, cfg.ffn_moe.balance_loss)
+        total = total + coef * aux.balance
+    return total, (loss, aux)
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def adamw_update(params, m, v, grads, step, lr):
+    """One AdamW update; step is 1-based (f32 scalar)."""
+    b1c = 1.0 - BETA1 ** step
+    b2c = 1.0 - BETA2 ** step
+
+    def upd(p, m_, v_, g):
+        m_n = BETA1 * m_ + (1.0 - BETA1) * g
+        v_n = BETA2 * v_ + (1.0 - BETA2) * g * g
+        mhat = m_n / b1c
+        vhat = v_n / b2c
+        p_n = p - lr * (mhat / (jnp.sqrt(vhat) + EPS) + WEIGHT_DECAY * p)
+        return p_n, m_n, v_n
+
+    flat_p, td = jax.tree_util.tree_flatten(params)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    out = [upd(p, m_, v_, g) for p, m_, v_, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    new_p = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(td, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+def make_init_fn(cfg: ModelConfig):
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        return init_params(cfg, key)
+
+    return init
+
+
+def make_step_fn(cfg: ModelConfig):
+    """Fused fwd+bwd+AdamW step (the fast path)."""
+
+    def step(params, m, v, stepnum, lr, tokens, targets):
+        key = jax.random.PRNGKey(jnp.astype(stepnum, jnp.int32)) if (
+            cfg.rom.jitter > 0 or cfg.ffn_moe.jitter > 0) else None
+        (_, (loss, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, targets, key), has_aux=True)(params)
+        grads = _clip_by_global_norm(grads, CLIP)
+        params, m, v = adamw_update(params, m, v, grads, stepnum, lr)
+        return params, m, v, loss, aux.load
+
+    return step
+
+
+def make_grad_fn(cfg: ModelConfig):
+    """Microbatch gradient-accumulation step (the grad-accum path)."""
+
+    def grad(params, gacc, tokens, targets):
+        (_, (loss, _aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, targets, None), has_aux=True)(params)
+        gacc = jax.tree_util.tree_map(jnp.add, gacc, grads)
+        return gacc, loss
+
+    return grad
+
+
+def make_apply_fn(cfg: ModelConfig):
+    def apply(params, m, v, gsum, stepnum, lr, nmicro):
+        grads = jax.tree_util.tree_map(lambda g: g / nmicro, gsum)
+        grads = _clip_by_global_norm(grads, CLIP)
+        return adamw_update(params, m, v, grads, stepnum, lr)
+
+    return apply
+
+
+def make_eval_fn(cfg: ModelConfig):
+    def evaluate(params, tokens, targets):
+        logits, _ = forward(cfg, params, tokens, None)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll), jnp.asarray(nll.size, jnp.float32)
+
+    return evaluate
+
+
+def make_eval_last_fn(cfg: ModelConfig):
+    """NLL of the FINAL position only — the LAMBADA-style probe primitive
+    (rust `coordinator::downstream` ranks cloze options with this)."""
+
+    def evaluate(params, tokens, targets):
+        logits, _ = forward(cfg, params, tokens, None)
+        logp = jax.nn.log_softmax(logits[:, -1, :], axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[:, -1][..., None], axis=-1)[..., 0]
+        return jnp.sum(nll), jnp.asarray(nll.size, jnp.float32)
+
+    return evaluate
+
+
+def zeros_like_params(cfg: ModelConfig) -> Tuple:
+    """Abstract-eval a zeroed param pytree (for grad-accum buffers)."""
+    shapes = jax.eval_shape(make_init_fn(cfg), jnp.zeros((), jnp.int32))
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), shapes)

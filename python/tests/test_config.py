@@ -1,0 +1,61 @@
+"""Config (de)serialization + preset integrity."""
+
+import json
+
+import pytest
+
+from compile.config import ModelConfig, MoEConfig
+from compile.presets import all_presets, get_preset
+
+
+def test_roundtrip():
+    cfg = ModelConfig(name="x", arch="samba", rom_targets=["conv", "out"],
+                      rom=MoEConfig(num_experts=8))
+    cfg2 = ModelConfig.from_json(cfg.to_json())
+    assert cfg == cfg2
+
+
+def test_dt_rank_default():
+    cfg = ModelConfig(d_model=64)
+    assert cfg.dt_rank == 4
+    cfg = ModelConfig(d_model=256)
+    assert cfg.dt_rank == 16  # paper: d_r = d_m / 16
+
+
+def test_rejects_bad_arch():
+    with pytest.raises(ValueError):
+        ModelConfig(arch="transformer")
+    with pytest.raises(ValueError):
+        ModelConfig(routing="magic")
+    with pytest.raises(ValueError):
+        ModelConfig(rom_targets=["zap"], rom=MoEConfig(num_experts=8))
+
+
+def test_rom_targets_require_experts():
+    with pytest.raises(ValueError):
+        ModelConfig(rom_targets=["conv"])  # default num_experts == 1
+
+
+def test_block_layouts():
+    assert ModelConfig(arch="mamba", n_layers=3).block_layout() == ["mamba"] * 3
+    assert ModelConfig(arch="samba", n_layers=2).block_layout() == [
+        "mamba", "swa", "mlp", "mamba", "swa", "mlp"]
+    assert ModelConfig(arch="llama", n_layers=2).block_layout() == [
+        "swa", "mlp", "swa", "mlp"]
+
+
+def test_presets_build_and_are_unique():
+    presets = all_presets()
+    assert len(presets) > 25
+    names = [c.name for c in presets.values()]
+    assert len(set(names)) == len(names)
+    for name, cfg in presets.items():
+        assert name == cfg.name
+        # Every preset must serialize through plain JSON.
+        doc = json.loads(cfg.to_json())
+        assert ModelConfig.from_dict(doc) == cfg
+
+
+def test_get_preset_unknown():
+    with pytest.raises(KeyError):
+        get_preset("nope")

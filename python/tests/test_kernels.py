@@ -1,0 +1,233 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes within CPU-feasible bounds; fixed-seed
+examples pin the exact allclose tolerances. These tests are the core
+correctness signal for everything the rust coordinator later executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import grouped_gemm, make_group_plan, selective_scan, short_conv
+from compile.kernels.grouped_gemm import gather_tokens, scatter_tokens
+from compile.kernels.ref import (
+    grouped_gemm_ref,
+    selective_scan_assoc,
+    selective_scan_ref,
+    short_conv_ref,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+HYP = dict(max_examples=12, deadline=None)
+
+
+def _scan_inputs(key, B, T, Di, N, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    u = jax.random.normal(ks[0], (B, T, Di), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, Di), dtype))
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N), dtype))
+    Bm = jax.random.normal(ks[3], (B, T, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, T, N), dtype)
+    D = jax.random.normal(ks[5], (Di,), dtype)
+    return u, dt, A, Bm, Cm, D
+
+
+class TestSelectiveScan:
+    def test_fixed(self):
+        args = _scan_inputs(jax.random.PRNGKey(0), 2, 64, 16, 8)
+        y_ref = selective_scan_ref(*args)
+        y_pal = selective_scan(*args, chunk=16)
+        np.testing.assert_allclose(y_ref, y_pal, rtol=2e-5, atol=2e-5)
+
+    def test_assoc_matches_loop(self):
+        args = _scan_inputs(jax.random.PRNGKey(1), 3, 48, 12, 4)
+        np.testing.assert_allclose(
+            selective_scan_ref(*args),
+            selective_scan_assoc(*args, chunk=16),
+            rtol=2e-5,
+            atol=2e-5,
+        )
+
+    @settings(**HYP)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        B=st.integers(1, 3),
+        T=st.sampled_from([8, 16, 32, 64]),
+        Di=st.sampled_from([4, 8, 24]),
+        N=st.sampled_from([2, 4, 16]),
+        chunk=st.sampled_from([4, 8, 16]),
+    )
+    def test_sweep(self, seed, B, T, Di, N, chunk):
+        args = _scan_inputs(jax.random.PRNGKey(seed), B, T, Di, N)
+        y_ref = selective_scan_ref(*args)
+        y_pal = selective_scan(*args, chunk=chunk)
+        np.testing.assert_allclose(y_ref, y_pal, rtol=5e-5, atol=5e-5)
+
+    def test_chunk_not_dividing_falls_back(self):
+        args = _scan_inputs(jax.random.PRNGKey(2), 1, 30, 4, 2)
+        y_ref = selective_scan_ref(*args)
+        y_pal = selective_scan(*args, chunk=16)  # 16 does not divide 30
+        np.testing.assert_allclose(y_ref, y_pal, rtol=5e-5, atol=5e-5)
+
+    def test_decay_state(self):
+        # With dt*A very negative, the state forgets: y ~= local response + D*u.
+        u, dt, A, Bm, Cm, D = _scan_inputs(jax.random.PRNGKey(3), 1, 16, 4, 2)
+        y = selective_scan(u, dt, A * 100.0, Bm, Cm, D, chunk=8)
+        assert np.all(np.isfinite(np.asarray(y)))
+
+    def test_grad_matches_ref(self):
+        args = _scan_inputs(jax.random.PRNGKey(4), 1, 16, 4, 2)
+
+        def f_ref(u):
+            return jnp.sum(jnp.tanh(selective_scan_ref(u, *args[1:])))
+
+        def f_pal(u):
+            return jnp.sum(jnp.tanh(selective_scan(u, *args[1:], chunk=8)))
+
+        g_ref = jax.grad(f_ref)(args[0])
+        g_pal = jax.grad(f_pal)(args[0])
+        np.testing.assert_allclose(g_ref, g_pal, rtol=1e-4, atol=1e-4)
+
+
+class TestGroupedGemm:
+    def _inputs(self, seed, T, D, F, E):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(ks[0], (T, D))
+        w = jax.random.normal(ks[1], (E, D, F))
+        route = jax.random.randint(ks[2], (T,), 0, E)
+        return x, w, route
+
+    def test_fixed(self):
+        x, w, route = self._inputs(0, 64, 16, 24, 8)
+        np.testing.assert_allclose(
+            grouped_gemm_ref(x, w, route),
+            grouped_gemm(x, w, route, 16, True),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    @settings(**HYP)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        T=st.integers(1, 70),
+        D=st.sampled_from([3, 8, 17]),
+        F=st.sampled_from([2, 8, 19]),
+        E=st.sampled_from([1, 2, 4, 8]),
+        block=st.sampled_from([4, 8, 16]),
+    )
+    def test_sweep(self, seed, T, D, F, E, block):
+        x, w, route = self._inputs(seed, T, D, F, E)
+        np.testing.assert_allclose(
+            grouped_gemm_ref(x, w, route),
+            grouped_gemm(x, w, route, block, True),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_all_one_expert(self):
+        # Degenerate routing: everything to expert 2 == plain matmul.
+        x, w, _ = self._inputs(7, 32, 8, 8, 4)
+        route = jnp.full((32,), 2, dtype=jnp.int32)
+        np.testing.assert_allclose(
+            x @ w[2], grouped_gemm(x, w, route, 8, True), rtol=1e-5, atol=1e-5
+        )
+
+    def test_grads(self):
+        x, w, route = self._inputs(9, 40, 6, 10, 4)
+
+        def f(fn):
+            def loss(x, w):
+                return jnp.sum(jnp.sin(fn(x, w)))
+
+            return jax.grad(loss, argnums=(0, 1))(x, w)
+
+        gx_r, gw_r = f(lambda x, w: grouped_gemm_ref(x, w, route))
+        gx_k, gw_k = f(lambda x, w: grouped_gemm(x, w, route, 8, True))
+        np.testing.assert_allclose(gx_r, gx_k, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gw_r, gw_k, rtol=1e-4, atol=1e-5)
+
+    @settings(**HYP)
+    @given(seed=st.integers(0, 2**31 - 1), T=st.integers(2, 40),
+           E=st.sampled_from([2, 4, 8]))
+    def test_grad_sweep(self, seed, T, E):
+        x, w, route = self._inputs(seed, T, 5, 7, E)
+
+        def loss_k(x, w):
+            return jnp.sum(grouped_gemm(x, w, route, 8, True) ** 2)
+
+        def loss_r(x, w):
+            return jnp.sum(grouped_gemm_ref(x, w, route) ** 2)
+
+        gk = jax.grad(loss_k, argnums=(0, 1))(x, w)
+        gr = jax.grad(loss_r, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gr[0], gk[0], rtol=2e-4, atol=1e-4)
+        np.testing.assert_allclose(gr[1], gk[1], rtol=2e-4, atol=1e-4)
+
+
+class TestGroupPlan:
+    @settings(**HYP)
+    @given(seed=st.integers(0, 2**31 - 1), T=st.integers(1, 100),
+           E=st.sampled_from([1, 2, 4, 8]), block=st.sampled_from([4, 8, 16]))
+    def test_plan_invariants(self, seed, T, E, block):
+        route = jax.random.randint(jax.random.PRNGKey(seed), (T,), 0, E)
+        plan = make_group_plan(route, E, block)
+        pos = np.asarray(plan.pos)
+        be = np.asarray(plan.block_expert)
+        # Destinations are unique and in range.
+        assert len(set(pos.tolist())) == T
+        assert pos.min() >= 0 and pos.max() < plan.padded_len
+        # Every token lands in a block labelled with its own expert.
+        r = np.asarray(route)
+        assert np.all(be[pos // block] == r)
+        # Scatter/gather round-trips.
+        x = np.random.RandomState(seed % 2**31).randn(T, 3).astype(np.float32)
+        xp = scatter_tokens(jnp.asarray(x), plan)
+        np.testing.assert_allclose(gather_tokens(xp, plan), x)
+
+
+class TestShortConv:
+    def test_fixed(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        x = jax.random.normal(ks[0], (2, 32, 8))
+        w = jax.random.normal(ks[1], (4, 8)) * 0.5
+        np.testing.assert_allclose(
+            short_conv_ref(x, w), short_conv(x, w), rtol=1e-5, atol=1e-6
+        )
+
+    @settings(**HYP)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        B=st.integers(1, 3),
+        T=st.integers(4, 48),
+        Di=st.sampled_from([1, 4, 9]),
+        k=st.sampled_from([2, 3, 4]),
+    )
+    def test_sweep(self, seed, B, T, Di, k):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        x = jax.random.normal(ks[0], (B, T, Di))
+        w = jax.random.normal(ks[1], (k, Di)) * 0.5
+        np.testing.assert_allclose(
+            short_conv_ref(x, w), short_conv(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_causality(self):
+        # Output at position t must not depend on inputs after t.
+        ks = jax.random.split(jax.random.PRNGKey(5), 2)
+        x = jax.random.normal(ks[0], (1, 16, 4))
+        w = jax.random.normal(ks[1], (4, 4))
+        y0 = np.asarray(short_conv(x, w))
+        x2 = x.at[:, 10:].set(99.0)
+        y2 = np.asarray(short_conv(x2, w))
+        np.testing.assert_allclose(y0[:, :10], y2[:, :10], rtol=1e-6, atol=1e-6)
+
+    def test_grad_matches_ref(self):
+        ks = jax.random.split(jax.random.PRNGKey(6), 2)
+        x = jax.random.normal(ks[0], (1, 12, 4))
+        w = jax.random.normal(ks[1], (4, 4)) * 0.3
+        g_r = jax.grad(lambda w: jnp.sum(short_conv_ref(x, w) ** 2))(w)
+        g_k = jax.grad(lambda w: jnp.sum(short_conv(x, w) ** 2))(w)
+        np.testing.assert_allclose(g_r, g_k, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,207 @@
+"""Layer-level invariants: attention masks/RoPE, Mamba2 SSD scan vs naive
+loop, GDN delta-rule vs naive loop, MoE bank semantics, MLP sharing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import ModelConfig, MoEConfig
+from compile.layers.attention import attn_block, init_attn_block, rope
+from compile.layers.gdn import _delta_scan, gdn_block, init_gdn_block
+from compile.layers.mamba2 import _ssd_scan, init_mamba2_block, mamba2_block
+from compile.layers.mlp import init_mlp_block, mlp_block
+from compile.layers.moe_linear import bank_apply, bank_shape
+from compile.layers.router import Routing, _topk, route_tokens
+
+
+def cfg(**kw):
+    base = dict(name="t", arch="samba", n_layers=1, d_model=32, vocab_size=64,
+                n_heads=4, window=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestRope:
+    def test_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 16, 8))
+        y = rope(x)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_position_zero_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 4, 8))
+        y = rope(x)
+        np.testing.assert_allclose(np.asarray(x)[:, :, 0], np.asarray(y)[:, :, 0],
+                                   rtol=1e-6)
+
+    def test_relative_property(self):
+        # <rope(q,i), rope(k,j)> depends only on i-j: shift both positions.
+        q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 8, 8))
+        k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 8, 8))
+        qr, kr = rope(q), rope(k)
+        dots = np.einsum("bhtd,bhsd->ts", np.asarray(qr), np.asarray(kr))
+        # compare (2,0) with (5,3): same offset 2, same q/k content requires
+        # constant q,k across positions:
+        qc = jnp.broadcast_to(q[:, :, :1], q.shape)
+        kc = jnp.broadcast_to(k[:, :, :1], k.shape)
+        d = np.einsum("bhtd,bhsd->ts", np.asarray(rope(qc)), np.asarray(rope(kc)))
+        np.testing.assert_allclose(d[2, 0], d[5, 3], rtol=1e-4)
+        del dots
+
+
+class TestAttention:
+    def test_causality(self):
+        c = cfg(window=0)
+        p = init_attn_block(c, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 32))
+        y0, _ = attn_block(c, p, x, window=None)
+        x2 = x.at[:, 8:].set(9.0)
+        y2, _ = attn_block(c, p, x2, window=None)
+        np.testing.assert_allclose(np.asarray(y0)[:, :8], np.asarray(y2)[:, :8],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_sliding_window_limits_reach(self):
+        c = cfg()
+        p = init_attn_block(c, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 24, 32))
+        y0, _ = attn_block(c, p, x, window=4)
+        # Perturb a token > window before the last position.
+        x2 = x.at[:, 5].set(7.0)
+        y2, _ = attn_block(c, p, x2, window=4)
+        np.testing.assert_allclose(np.asarray(y0)[:, 20:], np.asarray(y2)[:, 20:],
+                                   rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("mode,banks", [("moa", ("q", "o")),
+                                            ("switchhead", ("v", "o"))])
+    def test_attn_moe_param_shapes(self, mode, banks):
+        c = cfg(attn_moe=mode, attn_moe_experts=4)
+        p = init_attn_block(c, jax.random.PRNGKey(0))
+        for b in ("q", "k", "v", "o"):
+            expect_e = 4 if b in banks else 1
+            assert p[f"w_{b}"].shape == bank_shape(expect_e, 32, 32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+        y, stats = attn_block(c, p, x, window=8)
+        assert y.shape == x.shape
+        assert len(stats) == 1
+
+
+class TestMamba2:
+    def test_ssd_scan_matches_naive(self):
+        k = jax.random.split(jax.random.PRNGKey(0), 5)
+        Bz, T, H, P, N = 2, 12, 2, 4, 3
+        x = jax.random.normal(k[0], (Bz, T, H, P))
+        dt = jax.nn.softplus(jax.random.normal(k[1], (Bz, T, H)))
+        a = -jnp.exp(jax.random.normal(k[2], (H,)))
+        Bm = jax.random.normal(k[3], (Bz, T, N))
+        Cm = jax.random.normal(k[4], (Bz, T, N))
+        fast = _ssd_scan(x, dt, a, Bm, Cm, chunk=4)
+        # Naive per-step recurrence.
+        h = np.zeros((Bz, H, P, N))
+        outs = []
+        xn, dtn, Bn, Cn = map(np.asarray, (x, dt, Bm, Cm))
+        an = np.asarray(a)
+        for t in range(T):
+            decay = np.exp(dtn[:, t] * an)[:, :, None, None]
+            inc = np.einsum("bh,bhp,bn->bhpn", dtn[:, t], xn[:, t], Bn[:, t])
+            h = decay * h + inc
+            outs.append(np.einsum("bhpn,bn->bhp", h, Cn[:, t]))
+        naive = np.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(fast), naive, rtol=1e-4, atol=1e-4)
+
+    def test_block_shapes_and_rom(self):
+        c = cfg(arch="mamba2", rom=MoEConfig(num_experts=4))
+        p = init_mamba2_block(c, jax.random.PRNGKey(0))
+        assert p["w_in"].shape[0] == 4
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+        y, r, stats = mamba2_block(c, p, x)
+        assert y.shape == x.shape
+        assert r is not None and len(stats) == 1
+
+
+class TestGDN:
+    def test_delta_scan_matches_naive(self):
+        k = jax.random.split(jax.random.PRNGKey(0), 5)
+        B, T, H, Dk = 1, 10, 2, 3
+        q = jax.random.normal(k[0], (B, T, H, Dk))
+        kk = jax.random.normal(k[1], (B, T, H, Dk))
+        v = jax.random.normal(k[2], (B, T, H, Dk))
+        alpha = jax.nn.sigmoid(jax.random.normal(k[3], (B, T, H)))
+        beta = jax.nn.sigmoid(jax.random.normal(k[4], (B, T, H)))
+        fast = _delta_scan(q, kk, v, alpha, beta)
+        S = np.zeros((B, H, Dk, Dk))
+        outs = []
+        qn, kn, vn, an, bn = map(np.asarray, (q, kk, v, alpha, beta))
+        for t in range(T):
+            Sk = np.einsum("bhmn,bhn->bhm", S, kn[:, t])
+            delta = vn[:, t] - Sk
+            S = an[:, t][..., None, None] * (
+                S + bn[:, t][..., None, None]
+                * np.einsum("bhm,bhn->bhmn", delta, kn[:, t]))
+            outs.append(np.einsum("bhmn,bhn->bhm", S, qn[:, t]))
+        naive = np.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(fast), naive, rtol=1e-4, atol=1e-4)
+
+    def test_block_runs_with_rom(self):
+        c = cfg(arch="gdn", rom=MoEConfig(num_experts=4))
+        p = init_gdn_block(c, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+        y, r, stats = gdn_block(c, p, x)
+        assert y.shape == x.shape and r is not None
+
+
+class TestBankAndRouter:
+    def test_topk_matches_lax(self):
+        probs = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(0), (32, 8)))
+        for k in (1, 2, 3):
+            g_ours, i_ours = _topk(probs, k)
+            g_lax, i_lax = jax.lax.top_k(probs, k)
+            np.testing.assert_allclose(np.asarray(g_ours), np.asarray(g_lax),
+                                       rtol=1e-6)
+            np.testing.assert_array_equal(np.asarray(i_ours), np.asarray(i_lax))
+
+    def test_bank_apply_dense_equals_expert1(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (8, 12))
+        np.testing.assert_allclose(
+            np.asarray(bank_apply(x, w, None)),
+            np.asarray(bank_apply(x, w[None], None)),
+            rtol=1e-6,
+        )
+
+    def test_bank_topk2_sums_experts(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 12))
+        wr = jax.random.normal(jax.random.PRNGKey(2), (8, 4))
+        r = route_tokens(x, wr, top_k=2)
+        y = bank_apply(x, w, r)
+        manual = np.stack([
+            np.asarray(x[i] @ w[int(r.route[i, 0])]) + np.asarray(x[i] @ w[int(r.route[i, 1])])
+            for i in range(16)
+        ])
+        np.testing.assert_allclose(np.asarray(y), manual, rtol=1e-4, atol=1e-5)
+
+
+class TestMLP:
+    def test_ffn_moe_shared_router_has_no_router_param(self):
+        c = cfg(ffn_moe=MoEConfig(num_experts=4), ffn_moe_share_router=True)
+        p = init_mlp_block(c, jax.random.PRNGKey(0))
+        assert "router" not in p
+
+    def test_inherited_routing_used(self):
+        c = cfg(ffn_moe=MoEConfig(num_experts=4), ffn_moe_share_router=True)
+        p = init_mlp_block(c, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+        wr = jax.random.normal(jax.random.PRNGKey(2), (32, 4))
+        r = route_tokens(x.reshape(8, 32), wr, top_k=1)
+        y1, _ = mlp_block(c, p, x, inherited=r)
+        # A different inherited decision changes the output.
+        r2 = Routing(route=(r.route + 1) % 4, gates=r.gates, load=r.load,
+                     balance=r.balance)
+        y2, _ = mlp_block(c, p, x, inherited=r2)
+        assert not np.allclose(np.asarray(y1), np.asarray(y2))

@@ -1,0 +1,165 @@
+"""L2 model invariants: shapes, routing semantics, dense==E1 equivalence,
+grouped==onehot equivalence at the model level, and param accounting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import analysis
+from compile.config import ModelConfig, MoEConfig
+from compile.layers.router import route_tokens
+from compile.model import forward, init_params, num_routers
+from compile.presets import get_preset
+
+
+def tiny(name="t", **kw):
+    base = dict(name=name, arch="mamba", n_layers=2, d_model=32,
+                vocab_size=64, batch_size=2, seq_len=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def run_forward(cfg, seed=0):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    logits, aux = forward(cfg, params, tok)
+    return params, logits, aux
+
+
+class TestShapes:
+    @pytest.mark.parametrize("arch", ["mamba", "mamba2", "gdn", "samba", "llama"])
+    def test_logits_shape(self, arch):
+        cfg = tiny(arch=arch)
+        _, logits, _ = run_forward(cfg)
+        assert logits.shape == (2, 16, 64)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_rom_load_rows_match_num_routers(self):
+        cfg = tiny(rom_targets=["conv", "gate", "out"], routing="shared",
+                   rom=MoEConfig(num_experts=4))
+        _, _, aux = run_forward(cfg)
+        assert aux.load.shape == (num_routers(cfg), 4)
+
+    def test_independent_routing_has_more_routers(self):
+        shared = tiny(rom_targets=["conv", "gate", "out"], routing="shared",
+                      rom=MoEConfig(num_experts=4))
+        indep = tiny(rom_targets=["conv", "gate", "out"], routing="independent",
+                     rom=MoEConfig(num_experts=4))
+        assert num_routers(indep) == 3 * num_routers(shared)
+
+    def test_load_rows_sum_to_one(self):
+        cfg = tiny(rom_targets=["conv", "gate", "out"], routing="shared",
+                   rom=MoEConfig(num_experts=4))
+        _, _, aux = run_forward(cfg)
+        np.testing.assert_allclose(np.asarray(aux.load).sum(axis=1), 1.0,
+                                   rtol=1e-5)
+
+
+class TestEquivalences:
+    def test_single_expert_rom_equals_dense(self):
+        """RoM with E=1 must be numerically a dense Mamba (same seed)."""
+        dense = tiny()
+        rom1 = tiny(rom_targets=[], rom=MoEConfig(num_experts=1))
+        p_d, l_d, _ = run_forward(dense)
+        p_r, l_r, _ = run_forward(rom1)
+        np.testing.assert_allclose(np.asarray(l_d), np.asarray(l_r), rtol=1e-6)
+
+    def test_grouped_matches_onehot_model_level(self):
+        """The megablocks path and the one-hot oracle agree through a whole
+        forward (shared params, same routing)."""
+        kw = dict(rom_targets=["conv", "gate", "out"], routing="shared",
+                  rom=MoEConfig(num_experts=4))
+        c1 = tiny(moe_impl="onehot", **kw)
+        c2 = tiny(moe_impl="grouped", **kw)
+        params = init_params(c1, jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+        l1, _ = forward(c1, params, tok)
+        l2, _ = forward(c2, params, tok)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=5e-4, atol=5e-4)
+
+    def test_scan_impls_agree(self):
+        params = init_params(tiny(), jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+        outs = []
+        for impl in ("loop", "assoc", "pallas"):
+            cfg = tiny(scan_impl=impl)
+            outs.append(np.asarray(forward(cfg, params, tok)[0]))
+        np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=2e-4)
+
+
+class TestRouting:
+    def test_shared_decision_identical_across_banks(self):
+        """The defining invariant of RoM (Eq. 9-11): with shared routing the
+        same top-K indicator drives every bank. We verify via route_tokens
+        determinism: same inputs + same router weights => same decision."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        wr = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+        r1 = route_tokens(x, wr, top_k=1)
+        r2 = route_tokens(x, wr, top_k=1)
+        np.testing.assert_array_equal(np.asarray(r1.route), np.asarray(r2.route))
+
+    def test_gates_are_probabilities(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        wr = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+        r = route_tokens(x, wr, top_k=2)
+        g = np.asarray(r.gates)
+        assert np.all(g >= 0) and np.all(g <= 1)
+        # top-1 gate >= top-2 gate
+        assert np.all(g[:, 0] >= g[:, 1])
+
+    def test_balance_loss_bounds(self):
+        # N * sum f_e p_e == 1 exactly when both are uniform; >= 1 otherwise.
+        x = jax.random.normal(jax.random.PRNGKey(0), (512, 32))
+        wr = jax.random.normal(jax.random.PRNGKey(1), (32, 8)) * 0.01
+        r = route_tokens(x, wr, top_k=1)
+        assert float(r.balance) >= 0.98  # ~1 for near-uniform routing
+
+    def test_jitter_changes_routing(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (256, 32))
+        wr = jax.random.normal(jax.random.PRNGKey(1), (32, 8)) * 0.05
+        r0 = route_tokens(x, wr, top_k=1)
+        r1 = route_tokens(x, wr, top_k=1, jitter=0.5, key=jax.random.PRNGKey(7))
+        assert np.any(np.asarray(r0.route) != np.asarray(r1.route))
+
+
+class TestAnalysis:
+    def test_rom_total_exceeds_active(self):
+        cfg = tiny(rom_targets=["conv", "gate", "out"], routing="shared",
+                   rom=MoEConfig(num_experts=8))
+        total, active = analysis.param_counts(cfg)
+        dense_total, dense_active = analysis.param_counts(tiny())
+        assert total > 2 * active  # 8 experts on the 3 big banks
+        # Active params ~= dense + router (same compute per token).
+        assert abs(active - dense_active) < 0.05 * dense_active + 8 * 32 * 2 * 2
+
+    def test_dense_total_equals_active(self):
+        total, active = analysis.param_counts(tiny())
+        assert total == active
+
+    def test_flops_monotonic_in_experts_only_for_total(self):
+        dense = tiny()
+        rom = tiny(rom_targets=["conv", "gate", "out"], routing="shared",
+                   rom=MoEConfig(num_experts=8))
+        f_d = analysis.flops_per_token(dense, 16)
+        f_r = analysis.flops_per_token(rom, 16)
+        # top-1 RoM adds only router FLOPS.
+        assert f_r < 1.1 * f_d
+
+    def test_samba_e4_more_flops_than_e2(self):
+        e2 = get_preset("samba-e2")
+        e4 = get_preset("samba-e4")
+        assert analysis.flops_per_token(e4, 128) > 1.2 * analysis.flops_per_token(e2, 128)
+
+    def test_rom_flops_saving_vs_expand4(self):
+        """Table 1 headline: RoM on e=2 ~ e=4 quality at ~23% fewer FLOPS.
+        Here we pin the FLOPS relation the claim rests on."""
+        e4 = get_preset("samba-e4")
+        rom2 = get_preset("samba-e2-rom")
+        f4 = analysis.flops_per_token(e4, 128)
+        fr = analysis.flops_per_token(rom2, 128)
+        assert fr < 0.9 * f4  # RoM(e=2) strictly cheaper than dense e=4

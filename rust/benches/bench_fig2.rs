@@ -1,0 +1,8 @@
+//! cargo bench target regenerating the paper's fig2 on the scaled workload
+//! (DESIGN.md §4). Reduced default budget (60 steps/variant); set
+//! ROM_STEPS for the full run recorded in EXPERIMENTS.md.
+fn main() {
+    let rep = rom::experiments::tables::run_experiment("fig2", 60)
+        .expect("experiment fig2 failed (run `make artifacts` first)");
+    rep.print();
+}

@@ -1,0 +1,8 @@
+//! cargo bench target regenerating the paper's fig3 on the scaled workload
+//! (DESIGN.md §4). Reduced default budget (80 steps/variant); set
+//! ROM_STEPS for the full run recorded in EXPERIMENTS.md.
+fn main() {
+    let rep = rom::experiments::tables::run_experiment("fig3", 80)
+        .expect("experiment fig3 failed (run `make artifacts` first)");
+    rep.print();
+}

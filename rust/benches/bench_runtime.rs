@@ -1,0 +1,83 @@
+//! Runtime micro-benchmarks (§Perf): artifact compile latency, fused-step
+//! latency, eval latency, host<->literal conversion cost, and the grad-accum
+//! path vs the fused path. These are the numbers the L3 optimization loop
+//! iterates against (EXPERIMENTS.md §Perf).
+
+use rom::data::corpus::{Corpus, CorpusSpec};
+use rom::data::loader::Loader;
+use rom::experiments::harness::artifacts_root;
+use rom::runtime::artifact::{cpu_client, Bundle};
+use rom::runtime::session::Session;
+use rom::runtime::tensor::Tensor;
+use rom::substrate::bench::{bench, time_once};
+
+fn main() {
+    let variant = std::env::var("ROM_BENCH_VARIANT").unwrap_or_else(|_| "rom-tiny".into());
+    if !artifacts_root().join(&variant).join("manifest.json").exists() {
+        eprintln!("artifacts/{variant} missing — run `make artifacts`");
+        return;
+    }
+    let client = cpu_client().unwrap();
+    let bundle = Bundle::load(client, artifacts_root().join(&variant)).unwrap();
+    let man = bundle.manifest.clone();
+    println!("== runtime micro-benches on {variant} ==");
+
+    // One-time compile latencies.
+    let (_, t_init) = time_once(|| bundle.init().unwrap());
+    println!("compile init:  {t_init:.2}s");
+    let (_, t_step) = time_once(|| bundle.step().unwrap());
+    println!("compile step:  {t_step:.2}s");
+    let (_, t_eval) = time_once(|| bundle.eval(man.eval_lens[0]).unwrap());
+    println!("compile eval:  {t_eval:.2}s");
+
+    let mut sess = Session::init(&bundle, 0).unwrap();
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let stream = corpus.generate(0, 64 * man.batch_size * (man.seq_len + 1));
+    let mut loader = Loader::new(stream, man.batch_size, man.seq_len, 0);
+
+    // Fused train step.
+    let batch = loader.next_batch();
+    let s = bench("fused train_step", 2, 12, || {
+        sess.train_step(1e-3, &batch.tokens, &batch.targets).unwrap();
+    });
+    let toks = (man.batch_size * man.seq_len) as f64;
+    println!(
+        "  -> {:.0} tokens/s steady-state",
+        toks / s.median_secs()
+    );
+
+    // Grad-accum path (2 microbatches) for the same global batch.
+    if man.batch_size % man.micro_batch == 0 {
+        let micro = Loader::split_micro(&batch, man.micro_batch);
+        bench("grad-accum step (micro path)", 1, 6, || {
+            sess.train_step_accum(1e-3, &micro).unwrap();
+        });
+    }
+
+    // Eval at the shortest length.
+    let ctx = man.eval_lens[0];
+    let held = corpus.generate(1234, ctx + 1);
+    let tok = Tensor::i32(&[1, ctx], held[..ctx].to_vec());
+    let tgt = Tensor::i32(&[1, ctx], held[1..ctx + 1].to_vec());
+    bench("eval (1 seq)", 2, 12, || {
+        sess.eval(ctx, &tok, &tgt).unwrap();
+    });
+
+    // Host-side costs the step pays per iteration.
+    bench("batch assembly (loader)", 5, 200, || {
+        std::hint::black_box(loader.next_batch());
+    });
+    bench("tensor->literal (tokens)", 5, 200, || {
+        std::hint::black_box(batch.tokens.to_literal().unwrap());
+    });
+    let (params, _, _) = sess.export().unwrap();
+    let total: usize = params.iter().map(|p| p.len()).sum();
+    let s = bench("state export (checkpoint copy)", 1, 6, || {
+        std::hint::black_box(sess.export().unwrap());
+    });
+    println!(
+        "  -> {:.1} MB state, {:.0} MB/s",
+        total as f64 * 4.0 / 1e6,
+        total as f64 * 4.0 / 1e6 / s.median_secs()
+    );
+}

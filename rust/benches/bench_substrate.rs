@@ -1,0 +1,66 @@
+//! Substrate micro-benchmarks: JSON parse/serialize, RNG throughput, corpus
+//! generation, loader batching, checkpoint IO. Establishes that L3 host-side
+//! work is far off the training hot path's critical cost (§Perf).
+
+use rom::coordinator::checkpoint::Checkpoint;
+use rom::data::corpus::{Corpus, CorpusSpec};
+use rom::data::loader::Loader;
+use rom::runtime::tensor::Tensor;
+use rom::substrate::bench::bench;
+use rom::substrate::json::Json;
+use rom::substrate::rng::Rng;
+
+fn main() {
+    println!("== substrate micro-benches ==");
+
+    // RNG throughput.
+    let mut rng = Rng::new(1);
+    let s = bench("rng 1M u64", 2, 20, || {
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc ^= rng.next_u64();
+        }
+        std::hint::black_box(acc);
+    });
+    println!("  -> {:.0} M u64/s", 1.0 / s.median_secs() / 1e6 * 1e6 / 1e6 * 1_000_000.0 / 1e6);
+
+    // Corpus generation.
+    let corpus = Corpus::new(CorpusSpec::default(), 1);
+    let s = bench("corpus generate 100k tokens", 1, 10, || {
+        std::hint::black_box(corpus.generate(7, 100_000));
+    });
+    println!("  -> {:.1} M tokens/s", 0.1 / s.median_secs());
+
+    // Loader batching.
+    let stream = corpus.generate(0, 2_000_000);
+    let mut loader = Loader::new(stream, 8, 128, 0);
+    bench("loader next_batch 8x128", 10, 500, || {
+        std::hint::black_box(loader.next_batch());
+    });
+
+    // JSON.
+    let mut obj = vec![];
+    for i in 0..200 {
+        obj.push((format!("key_{i}"), Json::Num(i as f64)));
+    }
+    let doc = Json::Obj(obj.into_iter().collect()).to_string();
+    bench("json parse 200-key object", 5, 300, || {
+        std::hint::black_box(Json::parse(&doc).unwrap());
+    });
+
+    // Checkpoint round-trip (1 MB state).
+    let tensors: Vec<Tensor> = (0..16)
+        .map(|i| Tensor::f32(&[128, 128], vec![i as f32; 128 * 128]))
+        .collect();
+    let ck = Checkpoint { step: 1, params: tensors.clone(), m: tensors.clone(), v: tensors };
+    let dir = std::env::temp_dir().join("rom_bench_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.ckpt");
+    bench("checkpoint save 3MB", 1, 10, || {
+        ck.save(&path).unwrap();
+    });
+    bench("checkpoint load 3MB", 1, 10, || {
+        std::hint::black_box(Checkpoint::load(&path).unwrap());
+    });
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,8 @@
+//! cargo bench target regenerating the paper's table11 on the scaled workload
+//! (DESIGN.md §4). Reduced default budget (25 steps/variant); set
+//! ROM_STEPS for the full run recorded in EXPERIMENTS.md.
+fn main() {
+    let rep = rom::experiments::tables::run_experiment("table11", 25)
+        .expect("experiment table11 failed (run `make artifacts` first)");
+    rep.print();
+}

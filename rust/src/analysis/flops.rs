@@ -1,0 +1,136 @@
+//! Forward FLOPS/token for a model config (Table 1's FLOPS column).
+//!
+//! Mirrors python/compile/analysis.py::flops_per_token exactly — the
+//! integration test cross-checks this against every manifest's recorded
+//! value, keeping the two implementations in lockstep.
+
+use anyhow::Result;
+
+use crate::config::ModelCfg;
+
+fn mamba2_in_width(cfg: &ModelCfg) -> usize {
+    let di = cfg.d_inner();
+    2 * di + 2 * cfg.d_state + cfg.n_heads // z, x, B, C, dt
+}
+
+fn gdn_in_width(cfg: &ModelCfg) -> usize {
+    let di = cfg.d_inner();
+    3 * di + di + 2 * cfg.n_heads // q, k, v, gate, alpha, beta
+}
+
+pub fn flops_per_token(cfg: &ModelCfg, seq_len: usize) -> Result<f64> {
+    let d = cfg.d_model as f64;
+    let di = cfg.d_inner() as f64;
+    let n = cfg.d_state as f64;
+    let r = cfg.dt_rank as f64;
+    let k = if cfg.rom.enabled() { cfg.rom.top_k as f64 } else { 1.0 };
+    let mut fl = 0.0;
+    for kind in cfg.block_layout()? {
+        match kind {
+            "mamba" => {
+                fl += 2.0 * k * (d * di) * 2.0; // conv + gate banks
+                fl += 2.0 * k * (di * d); // out bank
+                fl += 2.0 * (di * (r + 2.0 * n) + r * di); // x/dt projections
+                fl += 2.0 * cfg.conv_kernel as f64 * di; // depthwise conv
+                fl += 10.0 * di * n; // discretize + scan + readout
+                if cfg.rom.enabled() && !cfg.rom_targets.is_empty() {
+                    let nr = if cfg.routing == "shared" {
+                        1.0
+                    } else {
+                        cfg.rom_targets.len() as f64
+                    };
+                    fl += 2.0 * nr * d * cfg.rom.num_experts as f64;
+                }
+            }
+            "mamba2" => {
+                fl += 2.0 * k * d * mamba2_in_width(cfg) as f64 + 2.0 * k * di * d;
+                fl += 2.0 * cfg.conv_kernel as f64 * di + 10.0 * di * n;
+                if cfg.rom.enabled() {
+                    fl += 2.0 * d * cfg.rom.num_experts as f64;
+                }
+            }
+            "gdn" => {
+                fl += 2.0 * k * d * gdn_in_width(cfg) as f64 + 2.0 * k * di * d;
+                fl += 2.0 * cfg.conv_kernel as f64 * di;
+                fl += 8.0 * di * (di / cfg.n_heads as f64); // delta rule
+                if cfg.rom.enabled() {
+                    fl += 2.0 * d * cfg.rom.num_experts as f64;
+                }
+            }
+            "swa" => {
+                fl += 2.0 * 4.0 * d * d; // q,k,v,o
+                let t_eff = if cfg.window > 0 {
+                    seq_len.min(cfg.window) as f64
+                } else {
+                    seq_len as f64
+                };
+                fl += 2.0 * 2.0 * d * t_eff;
+                if cfg.attn_moe != "none" {
+                    fl += 2.0 * d * cfg.attn_moe_experts as f64;
+                }
+            }
+            "mlp" => {
+                let ke = if cfg.ffn_moe.enabled() { cfg.ffn_moe.top_k as f64 } else { 1.0 };
+                fl += 2.0 * ke * 3.0 * d * (cfg.mlp_mult as f64 * d);
+                if cfg.ffn_moe.enabled() && !cfg.ffn_moe_share_router {
+                    fl += 2.0 * d * cfg.ffn_moe.num_experts as f64;
+                }
+            }
+            other => anyhow::bail!("unknown block kind {other}"),
+        }
+    }
+    fl += 2.0 * d * cfg.vocab_size as f64; // lm head
+    Ok(fl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::json::Json;
+
+    fn cfg(arch: &str, rom_experts: usize) -> ModelCfg {
+        let rom_targets = if rom_experts > 1 {
+            r#"["conv", "gate", "out"]"#
+        } else {
+            "[]"
+        };
+        let doc = format!(
+            r#"{{
+          "name": "t", "arch": "{arch}", "vocab_size": 512, "d_model": 96,
+          "n_layers": 2, "expand": 2, "d_state": 16, "dt_rank": 6,
+          "conv_kernel": 4, "n_heads": 4, "window": 64, "mlp_mult": 2,
+          "rom_targets": {rom_targets}, "routing": "shared",
+          "rom": {{"num_experts": {rom_experts}, "top_k": 1, "jitter": 0.0, "balance_loss": 0.0}},
+          "ffn_moe": {{"num_experts": 1, "top_k": 1, "jitter": 0.0, "balance_loss": 0.0}},
+          "ffn_moe_share_router": false, "attn_moe": "none", "attn_moe_experts": 8,
+          "batch_size": 8, "seq_len": 128, "eval_lens": [128]
+        }}"#
+        );
+        ModelCfg::parse(&Json::parse(&doc).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn rom_top1_adds_only_router_flops() {
+        let dense = flops_per_token(&cfg("mamba", 1), 128).unwrap();
+        let rom = flops_per_token(&cfg("mamba", 8), 128).unwrap();
+        assert!(rom > dense);
+        assert!(rom < dense * 1.05, "rom {rom} dense {dense}");
+    }
+
+    #[test]
+    fn samba_has_attention_and_mlp_flops() {
+        let mamba = flops_per_token(&cfg("mamba", 1), 128).unwrap();
+        let samba = flops_per_token(&cfg("samba", 1), 128).unwrap();
+        assert!(samba > mamba);
+    }
+
+    #[test]
+    fn window_caps_attention_cost() {
+        let mut c = cfg("llama", 1);
+        c.window = 0; // full attention
+        let full = flops_per_token(&c, 1024).unwrap();
+        c.window = 64;
+        let swa = flops_per_token(&c, 1024).unwrap();
+        assert!(swa < full);
+    }
+}

@@ -1,0 +1,5 @@
+//! Analytic params/FLOPS accounting — the rust mirror of
+//! python/compile/analysis.py (same formulas; the cross-check against the
+//! manifest values emitted by python is an integration test).
+
+pub mod flops;

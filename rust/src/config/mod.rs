@@ -1,0 +1,218 @@
+//! Config mirror of python/compile/config.py. The same JSON drives both
+//! sides; rust parses it for sizing, FLOPS accounting and experiment
+//! orchestration (it never builds the model itself — that is baked into the
+//! artifacts).
+
+use anyhow::{bail, Context, Result};
+
+use crate::substrate::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoECfg {
+    pub num_experts: usize,
+    pub top_k: usize,
+    pub jitter: f64,
+    pub balance_loss: f64,
+}
+
+impl Default for MoECfg {
+    fn default() -> Self {
+        MoECfg { num_experts: 1, top_k: 1, jitter: 0.0, balance_loss: 0.0 }
+    }
+}
+
+impl MoECfg {
+    pub fn enabled(&self) -> bool {
+        self.num_experts > 1
+    }
+
+    fn parse(j: &Json) -> Result<MoECfg> {
+        Ok(MoECfg {
+            num_experts: j.get("num_experts")?.as_usize()?,
+            top_k: j.get("top_k")?.as_usize()?,
+            jitter: j.get("jitter")?.as_f64()?,
+            balance_loss: j.get("balance_loss")?.as_f64()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub arch: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub expand: usize,
+    pub d_state: usize,
+    pub dt_rank: usize,
+    pub conv_kernel: usize,
+    pub n_heads: usize,
+    pub window: usize,
+    pub mlp_mult: usize,
+    pub rom_targets: Vec<String>,
+    pub routing: String,
+    pub rom: MoECfg,
+    pub ffn_moe: MoECfg,
+    pub ffn_moe_share_router: bool,
+    pub attn_moe: String,
+    pub attn_moe_experts: usize,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub eval_lens: Vec<usize>,
+}
+
+impl ModelCfg {
+    pub fn parse(j: &Json) -> Result<ModelCfg> {
+        let j = if j.opt("model").is_some() { j.get("model")? } else { j };
+        Ok(ModelCfg {
+            name: j.get("name")?.as_str()?.to_string(),
+            arch: j.get("arch")?.as_str()?.to_string(),
+            vocab_size: j.get("vocab_size")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            expand: j.get("expand")?.as_usize()?,
+            d_state: j.get("d_state")?.as_usize()?,
+            dt_rank: j.get("dt_rank")?.as_usize()?,
+            conv_kernel: j.get("conv_kernel")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            window: j.get("window")?.as_usize()?,
+            mlp_mult: j.get("mlp_mult")?.as_usize()?,
+            rom_targets: j
+                .get("rom_targets")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            routing: j.get("routing")?.as_str()?.to_string(),
+            rom: MoECfg::parse(j.get("rom")?)?,
+            ffn_moe: MoECfg::parse(j.get("ffn_moe")?)?,
+            ffn_moe_share_router: j.get("ffn_moe_share_router")?.as_bool()?,
+            attn_moe: j.get("attn_moe")?.as_str()?.to_string(),
+            attn_moe_experts: j.get("attn_moe_experts")?.as_usize()?,
+            batch_size: j.get("batch_size")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            eval_lens: j
+                .get("eval_lens")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_, _>>()?,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ModelCfg> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ModelCfg::parse(&Json::parse(&text)?)
+    }
+
+    pub fn d_inner(&self) -> usize {
+        self.expand * self.d_model
+    }
+
+    /// Per-layer block kinds — mirrors ModelConfig.block_layout().
+    pub fn block_layout(&self) -> Result<Vec<&'static str>> {
+        let mut out = Vec::new();
+        match self.arch.as_str() {
+            "mamba" => out.extend(std::iter::repeat_n("mamba", self.n_layers)),
+            "mamba2" => out.extend(std::iter::repeat_n("mamba2", self.n_layers)),
+            "gdn" => out.extend(std::iter::repeat_n("gdn", self.n_layers)),
+            "samba" => {
+                for _ in 0..self.n_layers {
+                    out.extend(["mamba", "swa", "mlp"]);
+                }
+            }
+            "llama" => {
+                for _ in 0..self.n_layers {
+                    out.extend(["swa", "mlp"]);
+                }
+            }
+            other => bail!("unknown arch {other:?}"),
+        }
+        Ok(out)
+    }
+}
+
+/// Training hyperparameters owned by the coordinator (the artifact only sees
+/// the per-step lr scalar).
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub steps: u64,
+    pub max_lr: f64,
+    pub warmup_ratio: f64,
+    pub data_seed: u64,
+    pub grad_accum: bool,
+    pub eval_every: u64,
+    pub checkpoint_every: u64,
+    pub log_every: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        // Paper §5.1: cosine schedule, max lr 4e-4, warmup ratio 0.01.
+        TrainCfg {
+            steps: 300,
+            max_lr: 4e-4,
+            warmup_ratio: 0.01,
+            data_seed: 0,
+            grad_accum: false,
+            eval_every: 0,
+            checkpoint_every: 0,
+            log_every: 20,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "name": "x", "arch": "samba", "vocab_size": 512, "d_model": 96,
+      "n_layers": 2, "expand": 2, "d_state": 16, "dt_rank": 6,
+      "conv_kernel": 4, "n_heads": 4, "window": 64, "mlp_mult": 2,
+      "tie_embeddings": true, "rom_targets": ["conv", "gate", "out"],
+      "routing": "shared",
+      "rom": {"num_experts": 8, "top_k": 1, "jitter": 0.0,
+              "balance_loss": 0.0, "straight_through": true},
+      "ffn_moe": {"num_experts": 1, "top_k": 1, "jitter": 0.0,
+                  "balance_loss": 0.0, "straight_through": true},
+      "ffn_moe_share_router": false,
+      "attn_moe": "none", "attn_moe_experts": 8,
+      "moe_impl": "onehot", "scan_impl": "assoc",
+      "batch_size": 8, "seq_len": 128, "micro_batch": 0,
+      "eval_lens": [128, 256, 512]
+    }"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ModelCfg::parse(&Json::parse(DOC).unwrap()).unwrap();
+        assert_eq!(cfg.arch, "samba");
+        assert_eq!(cfg.rom.num_experts, 8);
+        assert!(cfg.rom.enabled());
+        assert!(!cfg.ffn_moe.enabled());
+        assert_eq!(cfg.rom_targets, vec!["conv", "gate", "out"]);
+        assert_eq!(cfg.d_inner(), 192);
+    }
+
+    #[test]
+    fn block_layouts_mirror_python() {
+        let mut cfg = ModelCfg::parse(&Json::parse(DOC).unwrap()).unwrap();
+        assert_eq!(
+            cfg.block_layout().unwrap(),
+            vec!["mamba", "swa", "mlp", "mamba", "swa", "mlp"]
+        );
+        cfg.arch = "mamba".into();
+        assert_eq!(cfg.block_layout().unwrap(), vec!["mamba", "mamba"]);
+        cfg.arch = "llama".into();
+        assert_eq!(cfg.block_layout().unwrap(), vec!["swa", "mlp", "swa", "mlp"]);
+    }
+
+    #[test]
+    fn wrapped_model_doc() {
+        let wrapped = format!(r#"{{"model": {DOC}, "train": {{}}}}"#);
+        let cfg = ModelCfg::parse(&Json::parse(&wrapped).unwrap()).unwrap();
+        assert_eq!(cfg.name, "x");
+    }
+}

@@ -1,0 +1,104 @@
+//! Downstream probe scoring (Table 2 stand-in): rank multiple-choice options
+//! by model NLL using the eval artifacts.
+//!
+//! Cloze (LAMBADA-shape) uses the eval_last artifact (final-position NLL);
+//! continuation choice (HellaSwag-shape) uses full-sequence NLL — prefix
+//! positions contribute identically to every option, so ranking by total NLL
+//! equals ranking by continuation NLL.
+
+use anyhow::{bail, Result};
+
+use crate::data::probes::{ClozeInstance, ContinuationInstance};
+use crate::runtime::session::Session;
+use crate::runtime::tensor::Tensor;
+
+#[derive(Debug, Clone, Default)]
+pub struct ProbeResult {
+    pub accuracy: f64,
+    /// Mean NLL of the *true* option (the LAMBADA-PPL analogue for cloze).
+    pub true_nll: f64,
+    pub n: usize,
+}
+
+impl ProbeResult {
+    pub fn ppl(&self) -> f64 {
+        self.true_nll.exp()
+    }
+}
+
+/// Score cloze instances: every option substitutes the final target.
+pub fn score_cloze(sess: &Session, instances: &[ClozeInstance]) -> Result<ProbeResult> {
+    if instances.is_empty() {
+        bail!("no cloze instances");
+    }
+    let ctx = instances[0].context.len();
+    let mut correct = 0usize;
+    let mut true_nll = 0.0;
+    for inst in instances {
+        let tokens = Tensor::i32(&[1, ctx], inst.context.clone());
+        let mut best = (f64::INFINITY, 0usize);
+        for (oi, &opt) in inst.options.iter().enumerate() {
+            // Targets: shifted context with the final target = option. Only
+            // the last position is scored by eval_last.
+            let mut tgt: Vec<i32> = inst.context[1..].to_vec();
+            tgt.push(opt);
+            let targets = Tensor::i32(&[1, ctx], tgt);
+            let (nll, _) = sess.eval_last(ctx, &tokens, &targets)?;
+            if oi == inst.answer {
+                true_nll += nll;
+            }
+            if nll < best.0 {
+                best = (nll, oi);
+            }
+        }
+        if best.1 == inst.answer {
+            correct += 1;
+        }
+    }
+    Ok(ProbeResult {
+        accuracy: correct as f64 / instances.len() as f64,
+        true_nll: true_nll / instances.len() as f64,
+        n: instances.len(),
+    })
+}
+
+/// Score continuation choices with full-sequence NLL at a fixed length.
+pub fn score_continuation(
+    sess: &Session,
+    instances: &[ContinuationInstance],
+) -> Result<ProbeResult> {
+    if instances.is_empty() {
+        bail!("no continuation instances");
+    }
+    let total = instances[0].prefix.len() + instances[0].options[0].len();
+    let mut correct = 0usize;
+    let mut true_nll = 0.0;
+    for inst in instances {
+        let mut best = (f64::INFINITY, 0usize);
+        for (oi, opt) in inst.options.iter().enumerate() {
+            let mut seq = inst.prefix.clone();
+            seq.extend_from_slice(opt);
+            debug_assert_eq!(seq.len(), total);
+            let tokens = Tensor::i32(&[1, total], seq[..total].to_vec());
+            let mut tgt = seq[1..].to_vec();
+            tgt.push(0);
+            let targets = Tensor::i32(&[1, total], tgt);
+            let (nll, count) = sess.eval(total, &tokens, &targets)?;
+            let per_tok = nll / count;
+            if oi == inst.answer {
+                true_nll += per_tok;
+            }
+            if per_tok < best.0 {
+                best = (per_tok, oi);
+            }
+        }
+        if best.1 == inst.answer {
+            correct += 1;
+        }
+    }
+    Ok(ProbeResult {
+        accuracy: correct as f64 / instances.len() as f64,
+        true_nll: true_nll / instances.len() as f64,
+        n: instances.len(),
+    })
+}

@@ -1,0 +1,45 @@
+//! Multi-length perplexity evaluation (Figures 3/4, Tables 1/3/7-10).
+//!
+//! Held-out streams come from the same corpus generator with a disjoint seed
+//! space; PPL(ctx) = exp(sum NLL / tokens) over `n_seq` sequences per length.
+
+use anyhow::Result;
+
+use crate::data::corpus::Corpus;
+use crate::runtime::session::Session;
+use crate::runtime::tensor::Tensor;
+
+/// PPL at every eval length baked into the bundle.
+pub fn eval_ppl_sweep(
+    sess: &Session,
+    corpus: &Corpus,
+    seed: u64,
+    n_seq: usize,
+) -> Result<Vec<(usize, f64)>> {
+    let lens = sess.bundle.manifest.eval_lens.clone();
+    lens.into_iter()
+        .map(|ctx| Ok((ctx, eval_ppl(sess, corpus, seed, n_seq, ctx)?)))
+        .collect()
+}
+
+/// PPL at one context length.
+pub fn eval_ppl(
+    sess: &Session,
+    corpus: &Corpus,
+    seed: u64,
+    n_seq: usize,
+    ctx: usize,
+) -> Result<f64> {
+    let mut nll_sum = 0.0;
+    let mut count = 0.0;
+    for i in 0..n_seq {
+        // Disjoint held-out stream space (train streams use small seeds).
+        let stream = corpus.generate(0xE7A1_0000u64.wrapping_add(seed).wrapping_add(i as u64), ctx + 1);
+        let tokens = Tensor::i32(&[1, ctx], stream[..ctx].to_vec());
+        let targets = Tensor::i32(&[1, ctx], stream[1..ctx + 1].to_vec());
+        let (nll, c) = sess.eval(ctx, &tokens, &targets)?;
+        nll_sum += nll;
+        count += c;
+    }
+    Ok((nll_sum / count).exp())
+}

@@ -1,0 +1,173 @@
+//! Training telemetry: loss curve, throughput meter, JSON export.
+//!
+//! Everything here is allocation-light on the hot path (fixed-capacity ring
+//! for the throughput meter, plain Vec pushes for curves) and is drained by
+//! the background telemetry thread, not the step loop.
+
+use std::time::Instant;
+
+use crate::substrate::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct LossPoint {
+    pub step: u64,
+    pub loss: f64,
+    pub lr: f64,
+    pub tokens_seen: u64,
+}
+
+/// Sliding-window tokens/second meter.
+pub struct Throughput {
+    window: Vec<(Instant, u64)>, // (time, cumulative tokens)
+    cap: usize,
+    total_tokens: u64,
+    start: Instant,
+}
+
+impl Throughput {
+    pub fn new() -> Throughput {
+        Throughput { window: Vec::new(), cap: 50, total_tokens: 0, start: Instant::now() }
+    }
+
+    pub fn record(&mut self, tokens: u64) {
+        self.total_tokens += tokens;
+        self.window.push((Instant::now(), self.total_tokens));
+        if self.window.len() > self.cap {
+            self.window.remove(0);
+        }
+    }
+
+    /// Tokens/s over the sliding window (None until 2 samples).
+    pub fn rate(&self) -> Option<f64> {
+        let (t0, c0) = *self.window.first()?;
+        let (t1, c1) = *self.window.last()?;
+        let dt = (t1 - t0).as_secs_f64();
+        if dt <= 0.0 || c1 == c0 {
+            return None;
+        }
+        Some((c1 - c0) as f64 / dt)
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.total_tokens
+    }
+
+    pub fn overall_rate(&self) -> f64 {
+        self.total_tokens as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Run-level metric sink.
+#[derive(Default)]
+pub struct Metrics {
+    pub losses: Vec<LossPoint>,
+    pub evals: Vec<(u64, usize, f64)>, // (step, ctx_len, ppl)
+}
+
+impl Metrics {
+    pub fn log_loss(&mut self, step: u64, loss: f64, lr: f64, tokens_seen: u64) {
+        self.losses.push(LossPoint { step, loss, lr, tokens_seen });
+    }
+
+    pub fn log_eval(&mut self, step: u64, ctx: usize, ppl: f64) {
+        self.evals.push((step, ctx, ppl));
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.losses.last().map(|p| p.loss)
+    }
+
+    /// Mean loss over the last `n` points (smoothed readout for tables).
+    pub fn smoothed_loss(&self, n: usize) -> Option<f64> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        Some(tail.iter().map(|p| p.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "losses",
+                Json::Arr(
+                    self.losses
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("step", Json::num(p.step as f64)),
+                                ("loss", Json::num(p.loss)),
+                                ("lr", Json::num(p.lr)),
+                                ("tokens", Json::num(p.tokens_seen as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|(s, c, p)| {
+                            Json::obj(vec![
+                                ("step", Json::num(*s as f64)),
+                                ("ctx", Json::num(*c as f64)),
+                                ("ppl", Json::num(*p)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothed_loss_window() {
+        let mut m = Metrics::default();
+        for (i, l) in [10.0, 8.0, 6.0, 4.0].iter().enumerate() {
+            m.log_loss(i as u64, *l, 1e-3, 0);
+        }
+        assert_eq!(m.smoothed_loss(2), Some(5.0));
+        assert_eq!(m.last_loss(), Some(4.0));
+        assert_eq!(m.smoothed_loss(100), Some(7.0));
+    }
+
+    #[test]
+    fn throughput_counts_tokens() {
+        let mut t = Throughput::new();
+        t.record(100);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        t.record(100);
+        assert_eq!(t.total_tokens(), 200);
+        assert!(t.rate().unwrap() > 0.0);
+        assert!(t.overall_rate() > 0.0);
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let mut m = Metrics::default();
+        m.log_loss(1, 5.0, 1e-3, 2048);
+        m.log_eval(1, 128, 12.5);
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("losses").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(parsed.get("evals").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

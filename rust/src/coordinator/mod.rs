@@ -1,0 +1,8 @@
+//! L3 coordinator: the training-orchestration layer (DESIGN.md §2).
+pub mod checkpoint;
+pub mod downstream;
+pub mod eval;
+pub mod metrics;
+pub mod monitor;
+pub mod schedule;
+pub mod trainer;

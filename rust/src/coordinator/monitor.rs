@@ -1,0 +1,134 @@
+//! Expert-load monitor: tracks per-router dispatch fractions across steps and
+//! derives the balance diagnostics behind Table 6 ("RoM balances naturally
+//! without an aux loss"): max/mean load ratio, load entropy, dead experts.
+
+#[derive(Debug, Clone)]
+pub struct LoadSnapshot {
+    /// Router-major (R x E) dispatch fractions for one step.
+    pub load: Vec<f32>,
+    pub routers: usize,
+    pub experts: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct BalanceReport {
+    /// max_e load / (1/E), averaged over routers (1.0 = perfectly balanced).
+    pub max_over_uniform: f64,
+    /// Mean normalized entropy of the load distribution (1.0 = uniform).
+    pub norm_entropy: f64,
+    /// Fraction of (router, expert) pairs receiving < 1% of uniform share.
+    pub dead_fraction: f64,
+}
+
+pub struct ExpertMonitor {
+    routers: usize,
+    experts: usize,
+    /// EMA of per-(router, expert) load.
+    ema: Vec<f64>,
+    ema_decay: f64,
+    steps: u64,
+}
+
+impl ExpertMonitor {
+    pub fn new(routers: usize, experts: usize) -> ExpertMonitor {
+        ExpertMonitor {
+            routers,
+            experts,
+            ema: vec![1.0 / experts.max(1) as f64; routers * experts],
+            ema_decay: 0.95,
+            steps: 0,
+        }
+    }
+
+    pub fn observe(&mut self, load: &[f32]) {
+        assert_eq!(load.len(), self.routers * self.experts, "load shape mismatch");
+        self.steps += 1;
+        for (e, &l) in self.ema.iter_mut().zip(load.iter()) {
+            *e = self.ema_decay * *e + (1.0 - self.ema_decay) * l as f64;
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn report(&self) -> BalanceReport {
+        if self.experts <= 1 {
+            return BalanceReport { max_over_uniform: 1.0, norm_entropy: 1.0, dead_fraction: 0.0 };
+        }
+        let uniform = 1.0 / self.experts as f64;
+        let mut max_ratio = 0.0;
+        let mut entropy_sum = 0.0;
+        let mut dead = 0usize;
+        for r in 0..self.routers {
+            let row = &self.ema[r * self.experts..(r + 1) * self.experts];
+            let total: f64 = row.iter().sum();
+            let norm: Vec<f64> = row.iter().map(|&x| x / total.max(1e-12)).collect();
+            let mx = norm.iter().cloned().fold(0.0, f64::max);
+            max_ratio += mx / uniform;
+            let h: f64 = norm
+                .iter()
+                .filter(|&&p| p > 0.0)
+                .map(|&p| -p * p.ln())
+                .sum();
+            entropy_sum += h / (self.experts as f64).ln();
+            dead += norm.iter().filter(|&&p| p < 0.01 * uniform).count();
+        }
+        BalanceReport {
+            max_over_uniform: max_ratio / self.routers as f64,
+            norm_entropy: entropy_sum / self.routers as f64,
+            dead_fraction: dead as f64 / (self.routers * self.experts) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_load_is_balanced() {
+        let mut m = ExpertMonitor::new(2, 4);
+        for _ in 0..50 {
+            m.observe(&[0.25; 8]);
+        }
+        let r = m.report();
+        assert!((r.max_over_uniform - 1.0).abs() < 1e-9);
+        assert!((r.norm_entropy - 1.0).abs() < 1e-9);
+        assert_eq!(r.dead_fraction, 0.0);
+    }
+
+    #[test]
+    fn collapsed_load_is_flagged() {
+        let mut m = ExpertMonitor::new(1, 4);
+        for _ in 0..200 {
+            m.observe(&[1.0, 0.0, 0.0, 0.0]);
+        }
+        let r = m.report();
+        assert!(r.max_over_uniform > 3.5, "{r:?}");
+        assert!(r.norm_entropy < 0.1, "{r:?}");
+        assert!(r.dead_fraction > 0.5, "{r:?}");
+    }
+
+    #[test]
+    fn ema_tracks_shift() {
+        let mut m = ExpertMonitor::new(1, 2);
+        for _ in 0..100 {
+            m.observe(&[1.0, 0.0]);
+        }
+        for _ in 0..100 {
+            m.observe(&[0.0, 1.0]);
+        }
+        let r = m.report();
+        // After the shift the EMA should strongly favour expert 1.
+        assert!(m.ema[1] > 0.9, "{:?}", m.ema);
+        assert!(r.max_over_uniform > 1.8);
+    }
+
+    #[test]
+    #[should_panic(expected = "load shape mismatch")]
+    fn rejects_wrong_shape() {
+        let mut m = ExpertMonitor::new(1, 4);
+        m.observe(&[0.5, 0.5]);
+    }
+}

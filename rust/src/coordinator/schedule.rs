@@ -1,0 +1,71 @@
+//! Learning-rate schedule (paper §5.1): linear warmup over `warmup_ratio` of
+//! total steps, then cosine decay from `max_lr` to `min_lr`.
+
+#[derive(Debug, Clone)]
+pub struct CosineSchedule {
+    pub max_lr: f64,
+    pub min_lr: f64,
+    pub total_steps: u64,
+    pub warmup_steps: u64,
+}
+
+impl CosineSchedule {
+    pub fn new(max_lr: f64, total_steps: u64, warmup_ratio: f64) -> Self {
+        let warmup_steps = ((total_steps as f64) * warmup_ratio).ceil() as u64;
+        CosineSchedule { max_lr, min_lr: max_lr * 0.1, total_steps, warmup_steps: warmup_steps.max(1) }
+    }
+
+    /// LR for a 1-based step index.
+    pub fn lr(&self, step: u64) -> f64 {
+        if step <= self.warmup_steps {
+            return self.max_lr * step as f64 / self.warmup_steps as f64;
+        }
+        if step >= self.total_steps {
+            return self.min_lr;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps) as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        self.min_lr + (self.max_lr - self.min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::proptest::{check, Config};
+
+    #[test]
+    fn warmup_starts_low_peaks_at_max() {
+        let s = CosineSchedule::new(4e-4, 1000, 0.01);
+        assert!(s.lr(1) < 4e-4 * 0.2);
+        assert!((s.lr(s.warmup_steps) - 4e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decays_to_min() {
+        let s = CosineSchedule::new(4e-4, 1000, 0.01);
+        assert!((s.lr(1000) - 4e-5).abs() < 1e-9);
+        assert!(s.lr(1500) == s.lr(1000));
+    }
+
+    #[test]
+    fn prop_bounded_and_post_warmup_monotone() {
+        check("lr-bounds", Config::default(), |rng| {
+            let total = 10 + rng.below(10_000);
+            let s = CosineSchedule::new(1e-3, total, 0.05);
+            let mut prev = f64::INFINITY;
+            for step in 1..=total {
+                let lr = s.lr(step);
+                crate::prop_assert!(lr > 0.0 && lr <= 1e-3 + 1e-12,
+                    "lr {lr} out of bounds at {step}/{total}");
+                if step > s.warmup_steps {
+                    crate::prop_assert!(lr <= prev + 1e-12,
+                        "lr not monotone after warmup at {step}");
+                }
+                prev = lr;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,144 @@
+//! The training coordinator: the L3 contribution glue.
+//!
+//! Owns the loop: data prefetch (background thread) -> LR schedule -> fused
+//! step (fast path) or microbatch grad-accum (memory path) -> telemetry ->
+//! periodic eval + checkpointing. The AOT artifact is the only compute; this
+//! module never touches model math.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::TrainCfg;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::eval::eval_ppl_sweep;
+use crate::coordinator::metrics::{Metrics, Throughput};
+use crate::coordinator::monitor::ExpertMonitor;
+use crate::coordinator::schedule::CosineSchedule;
+use crate::data::corpus::{Corpus, CorpusSpec};
+use crate::data::loader::{Batch, Loader};
+use crate::info;
+use crate::runtime::artifact::Bundle;
+use crate::runtime::session::Session;
+use crate::substrate::pool::Prefetcher;
+
+pub struct TrainReport {
+    pub final_loss: f64,
+    pub smoothed_loss: f64,
+    pub tokens_per_sec: f64,
+    pub metrics: Metrics,
+    pub balance: crate::coordinator::monitor::BalanceReport,
+    pub eval_ppl: Vec<(usize, f64)>,
+}
+
+pub struct Trainer<'a> {
+    pub bundle: &'a Bundle,
+    pub train_cfg: TrainCfg,
+    pub corpus_seed: u64,
+    pub checkpoint_dir: Option<PathBuf>,
+    pub quiet: bool,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(bundle: &'a Bundle, train_cfg: TrainCfg) -> Trainer<'a> {
+        Trainer { bundle, train_cfg, corpus_seed: 17, checkpoint_dir: None, quiet: false }
+    }
+
+    /// Tokens needed to cover `steps` optimizer steps plus eval streams.
+    fn stream_len(&self, steps: u64) -> usize {
+        let man = &self.bundle.manifest;
+        let per_step = man.batch_size * (man.seq_len + 1);
+        (steps as usize + 2) * per_step
+    }
+
+    /// Run the full training loop; returns the report (and writes checkpoints
+    /// if a directory is configured).
+    pub fn run(&self) -> Result<TrainReport> {
+        let man = self.bundle.manifest.clone();
+        let cfg = self.train_cfg.clone();
+        let sched = CosineSchedule::new(cfg.max_lr, cfg.steps, cfg.warmup_ratio);
+
+        // Data pipeline: corpus -> loader -> background prefetch.
+        let corpus = Corpus::new(CorpusSpec::default(), self.corpus_seed);
+        let stream = corpus.generate(cfg.data_seed, self.stream_len(cfg.steps));
+        let mut loader = Loader::new(stream, man.batch_size, man.seq_len, cfg.data_seed);
+        let steps = cfg.steps;
+        let prefetch = Prefetcher::new(4, move || -> Option<Batch> {
+            Some(loader.next_batch())
+        });
+
+        let mut sess = Session::init(self.bundle, 0)?;
+        let mut metrics = Metrics::default();
+        let mut thp = Throughput::new();
+        let mut monitor = ExpertMonitor::new(man.num_routers, man.num_experts);
+        let tokens_per_step = (man.batch_size * man.seq_len) as u64;
+
+        for step in 1..=steps {
+            let batch = prefetch.next().expect("prefetcher ended early");
+            let lr = sched.lr(step) as f32;
+            let loss = if cfg.grad_accum {
+                let micro = Loader::split_micro(&batch, man.micro_batch);
+                sess.train_step_accum(lr, &micro)?
+            } else {
+                let out = sess.train_step(lr, &batch.tokens, &batch.targets)?;
+                monitor.observe(&out.router_load);
+                out.loss
+            };
+            thp.record(tokens_per_step);
+            metrics.log_loss(step, loss, lr as f64, thp.total_tokens());
+
+            if !self.quiet && cfg.log_every > 0 && step % cfg.log_every == 0 {
+                let rate = thp.rate().unwrap_or(0.0);
+                info!(
+                    "[{}] step {step}/{steps} loss {loss:.4} lr {lr:.2e} {:.0} tok/s",
+                    man.name, rate
+                );
+            }
+            if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+                for (ctx, ppl) in eval_ppl_sweep(&sess, &corpus, cfg.data_seed + 999, 4)? {
+                    metrics.log_eval(step, ctx, ppl);
+                    if !self.quiet {
+                        info!("[{}] eval ctx {ctx}: ppl {ppl:.3}", man.name);
+                    }
+                }
+            }
+            if let Some(dir) = &self.checkpoint_dir {
+                if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0 {
+                    self.save_checkpoint(&sess, dir, step)?;
+                }
+            }
+        }
+
+        if let Some(dir) = &self.checkpoint_dir {
+            self.save_checkpoint(&sess, dir, steps)?;
+        }
+
+        // ROM_SKIP_EVAL=1 skips the final PPL sweep (saves the per-length
+        // XLA compiles; used by the fast `cargo bench` sweep).
+        let eval_ppl = if std::env::var("ROM_SKIP_EVAL").as_deref() == Ok("1") {
+            Vec::new()
+        } else {
+            eval_ppl_sweep(&sess, &corpus, cfg.data_seed + 999, 8)?
+        };
+        Ok(TrainReport {
+            final_loss: metrics.last_loss().unwrap_or(f64::NAN),
+            smoothed_loss: metrics.smoothed_loss(10).unwrap_or(f64::NAN),
+            // Steady-state rate (sliding window) — excludes the one-time XLA
+            // compile of the first step, which Table 11 must not charge.
+            tokens_per_sec: thp.rate().unwrap_or_else(|| thp.overall_rate()),
+            metrics,
+            balance: monitor.report(),
+            eval_ppl,
+        })
+    }
+
+    fn save_checkpoint(&self, sess: &Session, dir: &PathBuf, step: u64) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let (params, m, v) = sess.export()?;
+        let ck = Checkpoint { step, params, m, v };
+        let path = dir.join(format!("{}-step{step}.ckpt", self.bundle.manifest.name));
+        ck.save(&path)?;
+        info!("checkpoint written: {}", path.display());
+        Ok(())
+    }
+}

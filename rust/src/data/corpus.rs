@@ -1,0 +1,210 @@
+//! Synthetic hierarchical-Markov corpus (the SlimPajama stand-in; DESIGN.md
+//! §3 substitution table).
+//!
+//! Structure: a slow Markov chain over `n_topics` latent topics; each topic
+//! owns a contiguous token cluster of `cluster` ids and an order-1 Markov
+//! transition table over its cluster (sparse, seeded). 10% of emissions leak
+//! into a *shared* vocabulary band so topics overlap (routers must work for
+//! specialization, not get it for free from disjoint vocabularies).
+//!
+//! Why this preserves the paper-relevant behaviour:
+//!   * per-topic transition tables give capacity-bound structure — bigger
+//!     (total-parameter) models fit more tables, so RoM's sparse capacity
+//!     shows up as lower PPL at equal active params (Fig 3 shape);
+//!   * topic persistence creates long-range predictability — longer eval
+//!     context lets a recurrent model hold the topic, so PPL improves with
+//!     length (Fig 4 shape);
+//!   * token clusters give the router a natural specialization signal
+//!     (the paper's "cat -> expert 3" intuition, Fig 1).
+
+use crate::substrate::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub vocab: usize,
+    pub n_topics: usize,
+    pub cluster: usize,
+    /// Expected topic run length (tokens).
+    pub topic_persistence: f64,
+    /// Probability of emitting from the shared band instead of the cluster.
+    pub leak: f64,
+    /// Markov concentration: higher = more deterministic transitions.
+    pub sharpness: f64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            vocab: 512,
+            n_topics: 8,
+            cluster: 56, // 8*56 = 448 topic tokens + 64 shared band
+            topic_persistence: 200.0,
+            leak: 0.1,
+            sharpness: 2.5,
+        }
+    }
+}
+
+/// The generator: seeded transition tables + a streaming sampler.
+pub struct Corpus {
+    spec: CorpusSpec,
+    /// Per (topic, within) categorical over `cluster` successors,
+    /// flattened: trans[topic][within * cluster + next].
+    trans: Vec<Vec<f64>>,
+    shared_base: usize,
+}
+
+impl Corpus {
+    pub fn new(spec: CorpusSpec, seed: u64) -> Corpus {
+        assert!(spec.n_topics * spec.cluster <= spec.vocab);
+        let shared_base = spec.n_topics * spec.cluster;
+        let mut rng = Rng::new(seed ^ 0xC02B_0B5);
+        let mut trans = Vec::with_capacity(spec.n_topics);
+        for _t in 0..spec.n_topics {
+            let mut table = vec![0.0f64; spec.cluster * spec.cluster];
+            for row in 0..spec.cluster {
+                for col in 0..spec.cluster {
+                    // log-normal-ish weights sharpened: few likely successors.
+                    let u = rng.next_f64();
+                    table[row * spec.cluster + col] =
+                        (-u.ln()).powf(spec.sharpness);
+                }
+            }
+            trans.push(table);
+        }
+        Corpus { spec, trans, shared_base }
+    }
+
+    pub fn spec(&self) -> &CorpusSpec {
+        &self.spec
+    }
+
+    /// Stream `len` tokens from an independent seeded stream.
+    pub fn generate(&self, stream_seed: u64, len: usize) -> Vec<i32> {
+        let mut rng = Rng::new(stream_seed ^ 0x5EED_DA7A);
+        let spec = &self.spec;
+        let mut topic = rng.below(spec.n_topics as u64) as usize;
+        let mut within = rng.below(spec.cluster as u64) as usize;
+        let switch_p = 1.0 / spec.topic_persistence;
+        let shared_band = spec.vocab - self.shared_base;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            // Topic switching (slow chain).
+            if rng.next_f64() < switch_p {
+                topic = rng.below(spec.n_topics as u64) as usize;
+                within = rng.below(spec.cluster as u64) as usize;
+            }
+            // Emit: cluster token (following the topic's Markov row) or leak
+            // into the shared band.
+            if shared_band > 0 && rng.next_f64() < spec.leak {
+                out.push((self.shared_base + rng.below(shared_band as u64) as usize) as i32);
+                // Shared emissions do not advance the within-topic state.
+            } else {
+                let row = &self.trans[topic]
+                    [within * spec.cluster..(within + 1) * spec.cluster];
+                within = rng.weighted(row);
+                out.push((topic * spec.cluster + within) as i32);
+            }
+        }
+        out
+    }
+
+    /// Topic of a token id (None for the shared band) — used by router
+    /// specialization diagnostics.
+    pub fn topic_of(&self, token: i32) -> Option<usize> {
+        let t = token as usize;
+        if t < self.shared_base {
+            Some(t / self.spec.cluster)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::proptest::{check, Config};
+
+    #[test]
+    fn deterministic_streams() {
+        let c = Corpus::new(CorpusSpec::default(), 1);
+        assert_eq!(c.generate(5, 1000), c.generate(5, 1000));
+        assert_ne!(c.generate(5, 1000), c.generate(6, 1000));
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let c = Corpus::new(CorpusSpec::default(), 2);
+        let toks = c.generate(0, 10_000);
+        assert!(toks.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn topic_runs_are_persistent() {
+        // Consecutive cluster tokens should usually share a topic.
+        let c = Corpus::new(CorpusSpec::default(), 3);
+        let toks = c.generate(1, 20_000);
+        let topics: Vec<usize> = toks.iter().filter_map(|&t| c.topic_of(t)).collect();
+        let same: usize = topics.windows(2).filter(|w| w[0] == w[1]).count();
+        let frac = same as f64 / (topics.len() - 1) as f64;
+        assert!(frac > 0.9, "topic persistence too low: {frac}");
+    }
+
+    #[test]
+    fn all_topics_visited() {
+        let c = Corpus::new(CorpusSpec::default(), 4);
+        let toks = c.generate(2, 50_000);
+        let mut seen = vec![false; 8];
+        for &t in &toks {
+            if let Some(tp) = c.topic_of(t) {
+                seen[tp] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn transitions_are_structured_not_uniform() {
+        // The bigram distribution within a topic must be far from uniform —
+        // otherwise there is nothing for models to learn.
+        let c = Corpus::new(CorpusSpec::default(), 5);
+        let toks = c.generate(3, 100_000);
+        let mut counts = std::collections::HashMap::new();
+        for w in toks.windows(2) {
+            if c.topic_of(w[0]) == Some(0) && c.topic_of(w[1]) == Some(0) {
+                *counts.entry((w[0], w[1])).or_insert(0usize) += 1;
+            }
+        }
+        let total: usize = counts.values().sum();
+        let max = counts.values().copied().max().unwrap_or(0);
+        // With 56 successors uniform would give max ~ total/56/56*hits...
+        // just require strong concentration: some bigram takes >0.2% of mass
+        // while uniform over 56^2 rows*cols would put 0.03% on each.
+        assert!(max as f64 / total as f64 > 0.002, "{max}/{total}");
+    }
+
+    #[test]
+    fn prop_spec_bounds_respected() {
+        check("corpus-bounds", Config { cases: 16, seed: 9 }, |rng| {
+            let spec = CorpusSpec {
+                vocab: 128,
+                n_topics: 1 + rng.below(4) as usize,
+                cluster: 8 + rng.below(16) as usize,
+                topic_persistence: 10.0 + rng.next_f64() * 100.0,
+                leak: rng.next_f64() * 0.3,
+                sharpness: 1.0 + rng.next_f64() * 3.0,
+            };
+            if spec.n_topics * spec.cluster > spec.vocab {
+                return Ok(()); // invalid spec: constructor would assert
+            }
+            let c = Corpus::new(spec.clone(), rng.next_u64());
+            let toks = c.generate(rng.next_u64(), 2000);
+            crate::prop_assert!(
+                toks.iter().all(|&t| (t as usize) < spec.vocab),
+                "token out of range"
+            );
+            Ok(())
+        });
+    }
+}

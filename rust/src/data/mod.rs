@@ -1,0 +1,5 @@
+//! Data pipeline: synthetic corpus, tokenizer, sharded loader, probes.
+pub mod corpus;
+pub mod loader;
+pub mod probes;
+pub mod tokenizer;

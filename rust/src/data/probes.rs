@@ -1,0 +1,139 @@
+//! Downstream-task probes (the Table 2 stand-ins; DESIGN.md §3).
+//!
+//! Built from *held-out* corpus streams, both probes exercise the exact code
+//! path the real benchmarks use (scored multiple-choice by per-option NLL):
+//!
+//!  * Cloze (LAMBADA-shape): predict the final token of a context window;
+//!    candidates = the true token + 3 distractors sampled from other topics.
+//!  * Continuation choice (HellaSwag-shape): given a prefix, pick the true
+//!    `cont_len`-token continuation among 4 (3 shuffled/resampled).
+//!
+//! Scoring happens in coordinator::downstream using eval artifacts; this
+//! module only *generates* the probe instances deterministically.
+
+use crate::data::corpus::Corpus;
+use crate::substrate::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ClozeInstance {
+    /// Full window including the final (answer) position, length = ctx.
+    pub context: Vec<i32>,
+    /// 4 candidate final tokens; index 0 is NOT necessarily the answer.
+    pub options: Vec<i32>,
+    pub answer: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ContinuationInstance {
+    pub prefix: Vec<i32>,
+    /// 4 candidate continuations of equal length.
+    pub options: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+pub fn make_cloze(corpus: &Corpus, seed: u64, n: usize, ctx: usize) -> Vec<ClozeInstance> {
+    let mut rng = Rng::new(seed ^ 0xC102E);
+    (0..n)
+        .map(|i| {
+            let stream = corpus.generate(0xDEAD_0000u64.wrapping_add(seed).wrapping_add(i as u64), ctx + 1);
+            let context = stream[..ctx].to_vec();
+            let truth = stream[ctx - 1 + 1]; // token after the window's last input
+            let mut options = vec![truth];
+            while options.len() < 4 {
+                let cand = rng.below(corpus.spec().vocab as u64) as i32;
+                if !options.contains(&cand) {
+                    options.push(cand);
+                }
+            }
+            rng.shuffle(&mut options);
+            let answer = options.iter().position(|&o| o == truth).unwrap();
+            ClozeInstance { context, options, answer }
+        })
+        .collect()
+}
+
+pub fn make_continuation(
+    corpus: &Corpus,
+    seed: u64,
+    n: usize,
+    prefix_len: usize,
+    cont_len: usize,
+) -> Vec<ContinuationInstance> {
+    let mut rng = Rng::new(seed ^ 0x00C0117);
+    (0..n)
+        .map(|i| {
+            let stream =
+                corpus.generate(0xBEEF_0000u64.wrapping_add(seed).wrapping_add(i as u64), prefix_len + cont_len);
+            let prefix = stream[..prefix_len].to_vec();
+            let truth = stream[prefix_len..].to_vec();
+            let mut options = vec![truth.clone()];
+            for d in 0..3u64 {
+                // Distractor: continuation drawn from an unrelated stream.
+                let alt = corpus.generate(
+                    0xFACE_0000u64
+                        .wrapping_add(seed.wrapping_mul(31))
+                        .wrapping_add(i as u64 * 7)
+                        .wrapping_add(d),
+                    cont_len,
+                );
+                options.push(alt);
+            }
+            rng.shuffle(&mut options);
+            let answer = options.iter().position(|o| *o == truth).unwrap();
+            ContinuationInstance { prefix, options, answer }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusSpec;
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusSpec::default(), 1)
+    }
+
+    #[test]
+    fn cloze_has_answer_among_options() {
+        let c = corpus();
+        for inst in make_cloze(&c, 0, 20, 32) {
+            assert_eq!(inst.context.len(), 32);
+            assert_eq!(inst.options.len(), 4);
+            assert!(inst.answer < 4);
+            let uniq: std::collections::HashSet<_> = inst.options.iter().collect();
+            assert_eq!(uniq.len(), 4, "duplicate options");
+        }
+    }
+
+    #[test]
+    fn cloze_deterministic() {
+        let c = corpus();
+        let a = make_cloze(&c, 3, 5, 16);
+        let b = make_cloze(&c, 3, 5, 16);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.options, y.options);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn continuation_options_equal_length_and_contain_truth() {
+        let c = corpus();
+        for inst in make_continuation(&c, 1, 10, 24, 8) {
+            assert_eq!(inst.prefix.len(), 24);
+            assert_eq!(inst.options.len(), 4);
+            assert!(inst.options.iter().all(|o| o.len() == 8));
+            assert!(inst.answer < 4);
+        }
+    }
+
+    #[test]
+    fn answers_are_spread() {
+        // Shuffling must not leave the answer always at index 0.
+        let c = corpus();
+        let pos: Vec<usize> = make_cloze(&c, 5, 40, 16).iter().map(|i| i.answer).collect();
+        assert!(pos.iter().any(|&p| p != pos[0]), "{pos:?}");
+    }
+}

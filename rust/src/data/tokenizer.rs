@@ -1,0 +1,161 @@
+//! Byte-level tokenizer with a greedy merge table (BPE-lite) for ingesting
+//! real text corpora as an alternative to the synthetic generator
+//! (`rom train --corpus text --text-file ...`).
+//!
+//! Vocabulary layout: 0..=255 raw bytes, then merge tokens. Merges are
+//! learned offline from a sample by counting adjacent pairs (the classic BPE
+//! loop, greedy, no regex pre-splitting).
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merges[i] = (left, right) producing token id 256 + i.
+    merges: Vec<(i32, i32)>,
+    rank: HashMap<(i32, i32), usize>,
+}
+
+impl Tokenizer {
+    pub fn byte_level() -> Tokenizer {
+        Tokenizer { merges: Vec::new(), rank: HashMap::new() }
+    }
+
+    /// Learn `n_merges` merges from sample text (greedy BPE).
+    pub fn train(sample: &[u8], n_merges: usize) -> Tokenizer {
+        let mut ids: Vec<i32> = sample.iter().map(|&b| b as i32).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        for m in 0..n_merges {
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // Deterministic tie-break: highest count, then smallest pair.
+            let Some((&pair, &cnt)) = counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = 256 + m as i32;
+            merges.push(pair);
+            ids = merge_pass(&ids, pair, new_id);
+        }
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i))
+            .collect();
+        Tokenizer { merges, rank }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        let mut ids: Vec<i32> = text.iter().map(|&b| b as i32).collect();
+        // Apply merges in rank order until none applies (standard BPE encode).
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, position)
+            for (i, w) in ids.windows(2).enumerate() {
+                if let Some(&r) = self.rank.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(br, _)| r < br) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            match best {
+                Some((r, _)) => {
+                    let pair = self.merges[r];
+                    ids = merge_pass(&ids, pair, 256 + r as i32);
+                }
+                None => return ids,
+            }
+        }
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &id in ids {
+            self.decode_one(id, &mut out);
+        }
+        out
+    }
+
+    fn decode_one(&self, id: i32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id as u8);
+        } else {
+            let (l, r) = self.merges[(id - 256) as usize];
+            self.decode_one(l, out);
+            self.decode_one(r, out);
+        }
+    }
+}
+
+fn merge_pass(ids: &[i32], pair: (i32, i32), new_id: i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::proptest::{check, Config};
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let t = Tokenizer::byte_level();
+        let text = b"hello, mamba! \xf0\x9f\x90\x8d";
+        assert_eq!(t.decode(&t.encode(text)), text.to_vec());
+        assert_eq!(t.vocab_size(), 256);
+    }
+
+    #[test]
+    fn training_learns_frequent_pairs() {
+        let sample = b"the cat sat on the mat. the cat sat on the mat.".repeat(20);
+        let t = Tokenizer::train(&sample, 16);
+        assert!(t.merges.len() > 4);
+        let enc = t.encode(&sample);
+        assert!(enc.len() < sample.len() / 2, "compression too weak");
+        assert_eq!(t.decode(&enc), sample);
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        let sample = b"abababab cdcdcdcd".repeat(10);
+        let t = Tokenizer::train(&sample, 8);
+        assert_eq!(t.encode(b"abcd"), t.encode(b"abcd"));
+    }
+
+    #[test]
+    fn prop_roundtrip_random_bytes() {
+        let sample: Vec<u8> = (0..4000).map(|i| (i % 7 * 13 % 251) as u8).collect();
+        let t = Tokenizer::train(&sample, 32);
+        check("bpe-roundtrip", Config { cases: 24, seed: 6 }, |rng: &mut Rng| {
+            let len = rng.below(200) as usize;
+            let text: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let ids = t.encode(&text);
+            crate::prop_assert!(
+                ids.iter().all(|&i| (i as usize) < t.vocab_size()),
+                "id out of range"
+            );
+            crate::prop_assert_eq!(t.decode(&ids), text);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,114 @@
+//! Shared experiment plumbing: train a variant's artifact bundle on the
+//! synthetic corpus, evaluate PPL at every context length, and collect the
+//! paper-table columns (active/total params, FLOPS, PPL@len...).
+//!
+//! Every bench_* target and `rom experiment <id>` row goes through
+//! `run_variant`, so table rows are produced identically everywhere.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainCfg;
+use crate::coordinator::trainer::Trainer;
+use crate::runtime::artifact::{cpu_client, Bundle};
+
+pub fn artifacts_root() -> PathBuf {
+    // target/ binaries run from the workspace root; override via env.
+    if let Ok(p) = std::env::var("ROM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from("artifacts")
+}
+
+pub fn have_variant(name: &str) -> bool {
+    artifacts_root().join(name).join("manifest.json").exists()
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantResult {
+    pub name: String,
+    pub active_params: u64,
+    pub total_params: u64,
+    pub flops_per_token: f64,
+    pub final_loss: f64,
+    pub smoothed_loss: f64,
+    pub tokens_per_sec: f64,
+    /// (ctx_len, ppl) at every eval length of the bundle.
+    pub ppl: Vec<(usize, f64)>,
+    pub balance_max_over_uniform: f64,
+    pub balance_entropy: f64,
+}
+
+impl VariantResult {
+    pub fn ppl_at(&self, ctx: usize) -> Option<f64> {
+        self.ppl.iter().find(|(c, _)| *c == ctx).map(|(_, p)| *p)
+    }
+
+    pub fn fmt_params(n: u64) -> String {
+        if n >= 1_000_000 {
+            format!("{:.2}M", n as f64 / 1e6)
+        } else {
+            format!("{:.0}K", n as f64 / 1e3)
+        }
+    }
+}
+
+/// Train `steps` optimizer steps on the shared synthetic corpus and return
+/// the table columns. `max_lr` is typically lr_budget() = 3e-3 (scaled up
+/// from the paper's 4e-4 because the models are ~100x smaller — see
+/// EXPERIMENTS.md).
+pub fn run_variant(name: &str, steps: u64, max_lr: f64) -> Result<VariantResult> {
+    let client = cpu_client()?;
+    run_variant_with(client, name, steps, max_lr, false)
+}
+
+pub fn run_variant_with(
+    client: Rc<xla::PjRtClient>,
+    name: &str,
+    steps: u64,
+    max_lr: f64,
+    grad_accum: bool,
+) -> Result<VariantResult> {
+    let bundle = Bundle::load(client, artifacts_root().join(name))
+        .with_context(|| format!("variant {name} (run `make artifacts`)"))?;
+    let train_cfg = TrainCfg {
+        steps,
+        max_lr,
+        grad_accum,
+        log_every: (steps / 5).max(1),
+        ..TrainCfg::default()
+    };
+    let trainer = Trainer::new(&bundle, train_cfg);
+    let report = trainer.run()?;
+    let man = &bundle.manifest;
+    Ok(VariantResult {
+        name: name.to_string(),
+        active_params: man.analysis.active_params,
+        total_params: man.analysis.total_params,
+        flops_per_token: man.analysis.fwd_flops_per_token,
+        final_loss: report.final_loss,
+        smoothed_loss: report.smoothed_loss,
+        tokens_per_sec: report.tokens_per_sec,
+        ppl: report.eval_ppl,
+        balance_max_over_uniform: report.balance.max_over_uniform,
+        balance_entropy: report.balance.norm_entropy,
+    })
+}
+
+/// Step budget for experiment rows; overridable via ROM_STEPS to trade
+/// fidelity for wall-clock (benches use smaller defaults than `rom experiment`).
+pub fn step_budget(default: u64) -> u64 {
+    std::env::var("ROM_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn lr_budget() -> f64 {
+    std::env::var("ROM_LR")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3e-3)
+}

@@ -1,0 +1,3 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §4).
+pub mod harness;
+pub mod tables;

@@ -1,0 +1,13 @@
+//! Routing Mamba (RoM) reproduction — rust L3 coordinator.
+//!
+//! Architecture (DESIGN.md): python/jax+pallas author the model at build time
+//! and AOT-lower it to HLO-text artifacts; this crate loads them via PJRT and
+//! owns everything else — config, data pipeline, train loop, schedules,
+//! telemetry, eval, checkpoints, experiments. Python never runs at runtime.
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod substrate;

@@ -1,0 +1,203 @@
+//! `rom` — the RoM training coordinator CLI (the launcher of DESIGN.md §2).
+//!
+//! Subcommands:
+//!   info <variant>                      manifest + analytic accounting
+//!   train <variant> [--steps N] [--lr X] [--accum] [--ckpt-dir D]
+//!                   [--eval-every N] [--metrics FILE]
+//!   eval <variant> --ckpt FILE          PPL sweep from a checkpoint
+//!   probes <variant> [--steps N]        downstream probe scores (Table 2)
+//!   experiment <id> [--steps N]         regenerate a paper table/figure
+//!   list                                variants with artifacts present
+
+use anyhow::{bail, Context, Result};
+use rom::config::TrainCfg;
+use rom::coordinator::checkpoint::Checkpoint;
+use rom::coordinator::downstream::{score_cloze, score_continuation};
+use rom::coordinator::eval::eval_ppl_sweep;
+use rom::coordinator::trainer::Trainer;
+use rom::data::corpus::{Corpus, CorpusSpec};
+use rom::data::probes::{make_cloze, make_continuation};
+use rom::experiments::harness::{artifacts_root, lr_budget};
+use rom::experiments::tables::run_experiment;
+use rom::info;
+use rom::runtime::artifact::{cpu_client, Bundle};
+use rom::runtime::session::Session;
+use rom::substrate::cli::Args;
+
+const USAGE: &str = "\
+rom — Routing Mamba training coordinator
+usage: rom <subcommand> [options]
+  list                              show variants with artifacts
+  info <variant>                    manifest + analytic accounting
+  train <variant> [--steps N] [--lr X] [--accum] [--ckpt-dir D]
+                  [--eval-every N] [--metrics FILE] [--seed N]
+  eval <variant> --ckpt FILE        PPL sweep from a checkpoint
+  probes <variant> [--steps N]      downstream probes (Table 2 stand-in)
+  experiment <id> [--steps N]       regenerate a table/figure
+                                    (fig2 fig3 fig4 table1 table2 table3
+                                     table6 table10 table11)
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["accum", "quiet"]);
+    match args.subcommand.as_deref() {
+        Some("list") => list(),
+        Some("info") => info_cmd(&args),
+        Some("train") => train(&args),
+        Some("eval") => eval_cmd(&args),
+        Some("probes") => probes(&args),
+        Some("experiment") => experiment(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn variant_arg(args: &Args) -> Result<String> {
+    args.positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("missing <variant> argument\n{USAGE}"))
+}
+
+fn list() -> Result<()> {
+    let root = artifacts_root();
+    if !root.exists() {
+        bail!("no artifacts/ directory — run `make artifacts`");
+    }
+    let mut names: Vec<String> = std::fs::read_dir(&root)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().join("manifest.json").exists())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    for n in &names {
+        println!("{n}");
+    }
+    info!("{} variants under {}", names.len(), root.display());
+    Ok(())
+}
+
+fn info_cmd(args: &Args) -> Result<()> {
+    let name = variant_arg(args)?;
+    let client = cpu_client()?;
+    let bundle = Bundle::load(client, artifacts_root().join(&name))?;
+    let m = &bundle.manifest;
+    println!("variant:        {}", m.name);
+    println!("param leaves:   {}", m.num_leaves());
+    println!("total params:   {}", m.analysis.total_params);
+    println!("active params:  {}", m.analysis.active_params);
+    println!("fwd GFLOPs/tok: {:.4}", m.analysis.fwd_flops_per_token / 1e9);
+    println!("batch x seq:    {} x {}", m.batch_size, m.seq_len);
+    println!("eval lengths:   {:?}", m.eval_lens);
+    println!("routers x experts: {} x {}", m.num_routers, m.num_experts);
+    // Cross-check the rust FLOPS mirror against the python-emitted value.
+    let cfg = rom::config::ModelCfg::parse(&m.model)?;
+    let mirrored = rom::analysis::flops::flops_per_token(&cfg, m.seq_len)?;
+    let rel = (mirrored - m.analysis.fwd_flops_per_token).abs()
+        / m.analysis.fwd_flops_per_token;
+    println!(
+        "flops mirror:   {:.4} GF/tok (rel err {:.2e})",
+        mirrored / 1e9,
+        rel
+    );
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let name = variant_arg(args)?;
+    let client = cpu_client()?;
+    let bundle = Bundle::load(client, artifacts_root().join(&name))
+        .with_context(|| format!("loading variant {name}"))?;
+    let cfg = TrainCfg {
+        steps: args.get_u64("steps", 300),
+        max_lr: args.get_f64("lr", lr_budget()),
+        warmup_ratio: args.get_f64("warmup", 0.01),
+        data_seed: args.get_u64("seed", 0),
+        grad_accum: args.has_flag("accum"),
+        eval_every: args.get_u64("eval-every", 0),
+        checkpoint_every: args.get_u64("ckpt-every", 0),
+        log_every: args.get_u64("log-every", 20),
+    };
+    let mut trainer = Trainer::new(&bundle, cfg);
+    trainer.quiet = args.has_flag("quiet");
+    if let Some(dir) = args.get("ckpt-dir") {
+        trainer.checkpoint_dir = Some(dir.into());
+    }
+    let report = trainer.run()?;
+    println!("final loss:     {:.4}", report.final_loss);
+    println!("smoothed loss:  {:.4}", report.smoothed_loss);
+    println!("throughput:     {:.0} tokens/s", report.tokens_per_sec);
+    for (ctx, ppl) in &report.eval_ppl {
+        println!("ppl@{ctx}:        {ppl:.3}");
+    }
+    println!(
+        "expert balance: max/uniform {:.2}, entropy {:.3}",
+        report.balance.max_over_uniform, report.balance.norm_entropy
+    );
+    if let Some(path) = args.get("metrics") {
+        report.metrics.save(std::path::Path::new(path))?;
+        info!("metrics written to {path}");
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let name = variant_arg(args)?;
+    let ckpt_path = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow::anyhow!("--ckpt FILE required"))?;
+    let client = cpu_client()?;
+    let bundle = Bundle::load(client, artifacts_root().join(&name))?;
+    let ck = Checkpoint::load(std::path::Path::new(ckpt_path))?;
+    let sess = Session::restore(&bundle, &ck.params, &ck.m, &ck.v, ck.step)?;
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    for (ctx, ppl) in eval_ppl_sweep(&sess, &corpus, 999, 8)? {
+        println!("ppl@{ctx}: {ppl:.3}");
+    }
+    Ok(())
+}
+
+fn probes(args: &Args) -> Result<()> {
+    let name = variant_arg(args)?;
+    let steps = args.get_u64("steps", 150);
+    let client = cpu_client()?;
+    let bundle = Bundle::load(client, artifacts_root().join(&name))?;
+    let mut sess = Session::init(&bundle, 0)?;
+    // Short inline training so probe scores are above chance.
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    {
+        use rom::coordinator::schedule::CosineSchedule;
+        use rom::data::loader::Loader;
+        let man = &bundle.manifest;
+        let stream =
+            corpus.generate(0, (steps as usize + 2) * man.batch_size * (man.seq_len + 1));
+        let mut loader = Loader::new(stream, man.batch_size, man.seq_len, 0);
+        let sched = CosineSchedule::new(args.get_f64("lr", lr_budget()), steps, 0.01);
+        for s in 1..=steps {
+            let b = loader.next_batch();
+            sess.train_step(sched.lr(s) as f32, &b.tokens, &b.targets)?;
+        }
+    }
+    let ctx = bundle.manifest.eval_lens[0];
+    let cloze = score_cloze(&sess, &make_cloze(&corpus, 7, 32, ctx))?;
+    println!(
+        "cloze   (n={}): acc {:.1}%  true-token ppl {:.2}",
+        cloze.n,
+        cloze.accuracy * 100.0,
+        cloze.ppl()
+    );
+    let pre = ctx / 2;
+    let cont = score_continuation(&sess, &make_continuation(&corpus, 8, 16, ctx - pre, pre))?;
+    println!("contin. (n={}): acc {:.1}%", cont.n, cont.accuracy * 100.0);
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let id = variant_arg(args)?;
+    let steps = args.get_u64("steps", 200);
+    let rep = run_experiment(&id, steps)?;
+    rep.print();
+    Ok(())
+}

@@ -1,0 +1,268 @@
+//! Artifact bundles: manifest parsing + lazy compilation of the HLO-text
+//! programs emitted by `python -m compile.aot` (DESIGN.md §2 contract).
+//!
+//! A bundle directory holds init/step/grad/apply/eval_L*.hlo.txt plus
+//! manifest.json. Executables are compiled on first use and cached for the
+//! life of the bundle (compilation is seconds; steps are milliseconds).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::{DType, Tensor};
+use crate::substrate::json::Json;
+
+/// One parameter leaf as recorded by the python manifest (flat order is the
+/// calling convention for every artifact).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Analytic accounting mirrored from python/compile/analysis.py.
+#[derive(Debug, Clone, Default)]
+pub struct Analysis {
+    pub total_params: u64,
+    pub active_params: u64,
+    pub fwd_flops_per_token: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub params: Vec<ParamSpec>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub micro_batch: usize,
+    pub eval_lens: Vec<usize>,
+    pub num_routers: usize,
+    pub num_experts: usize,
+    pub vocab_size: usize,
+    pub analysis: Analysis,
+    pub model: Json,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json")?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_, _>>()?,
+                    dtype: DType::from_str(p.get("dtype")?.as_str()?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let a = j.get("analysis")?;
+        Ok(Manifest {
+            name: j.get("name")?.as_str()?.to_string(),
+            params,
+            batch_size: j.get("batch_size")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            micro_batch: j.get("micro_batch")?.as_usize()?,
+            eval_lens: j
+                .get("eval_lens")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_, _>>()?,
+            num_routers: j.get("num_routers")?.as_usize()?,
+            num_experts: j.get("num_experts")?.as_usize()?,
+            vocab_size: j.get("model")?.get("vocab_size")?.as_usize()?,
+            analysis: Analysis {
+                total_params: a.get("total_params")?.as_i64()? as u64,
+                active_params: a.get("active_params")?.as_i64()? as u64,
+                fwd_flops_per_token: a.get("fwd_flops_per_token")?.as_f64()?,
+            },
+            model: j.get("model")?.clone(),
+        })
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Zeroed optimizer-state tensors matching the param leaves.
+    pub fn zeros_like_params(&self) -> Vec<Tensor> {
+        self.params
+            .iter()
+            .map(|p| Tensor::zeros(&p.shape, p.dtype))
+            .collect()
+    }
+}
+
+/// A compiled program + its expected output arity (for tuple decomposition).
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Program {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    /// (All artifacts are lowered with return_tuple=True — the single tuple
+    /// buffer is fetched to host and decomposed; see DESIGN.md §6 L3 notes.)
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Lazily compiled artifact bundle for one model variant.
+pub struct Bundle {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    client: Rc<xla::PjRtClient>,
+    cache: RefCell<BTreeMap<String, Rc<Program>>>,
+}
+
+impl Bundle {
+    pub fn load(client: Rc<xla::PjRtClient>, dir: impl AsRef<Path>) -> Result<Bundle> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        Ok(Bundle { manifest, dir, client, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Compile (or fetch cached) one program of this bundle by artifact stem.
+    pub fn program(&self, stem: &str) -> Result<Rc<Program>> {
+        if let Some(p) = self.cache.borrow().get(stem) {
+            return Ok(Rc::clone(p));
+        }
+        let path = self.dir.join(format!("{stem}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {} missing (run `make artifacts`)", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let prog = Rc::new(Program { exe, name: format!("{}:{stem}", self.manifest.name) });
+        self.cache.borrow_mut().insert(stem.to_string(), Rc::clone(&prog));
+        Ok(prog)
+    }
+
+    pub fn init(&self) -> Result<Rc<Program>> {
+        self.program("init")
+    }
+    pub fn step(&self) -> Result<Rc<Program>> {
+        self.program("step")
+    }
+    pub fn grad(&self) -> Result<Rc<Program>> {
+        self.program("grad")
+    }
+    pub fn apply(&self) -> Result<Rc<Program>> {
+        self.program("apply")
+    }
+    pub fn eval(&self, len: usize) -> Result<Rc<Program>> {
+        if !self.manifest.eval_lens.contains(&len) {
+            bail!(
+                "no eval artifact for length {len}; have {:?}",
+                self.manifest.eval_lens
+            );
+        }
+        self.program(&format!("eval_L{len}"))
+    }
+
+    /// Final-position-only NLL (emitted for eval_lens[0]; cloze probes).
+    pub fn eval_last(&self, len: usize) -> Result<Rc<Program>> {
+        self.program(&format!("eval_last_L{len}"))
+    }
+
+    /// Golden losses recorded by `compile.aot --golden` (if present).
+    pub fn golden(&self) -> Result<Option<(u64, f64, Vec<f64>)>> {
+        let path = self.dir.join("golden.json");
+        if !path.exists() {
+            return Ok(None);
+        }
+        let j = Json::parse(&std::fs::read_to_string(path)?)?;
+        let losses = j
+            .get("losses")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64())
+            .collect::<Result<_, _>>()?;
+        Ok(Some((
+            j.get("data_seed")?.as_i64()? as u64,
+            j.get("lr")?.as_f64()?,
+            losses,
+        )))
+    }
+}
+
+/// Open the shared CPU PJRT client.
+pub fn cpu_client() -> Result<Rc<xla::PjRtClient>> {
+    Ok(Rc::new(xla::PjRtClient::cpu()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "name": "t", "batch_size": 2, "seq_len": 16, "micro_batch": 1,
+      "eval_lens": [16, 32], "num_routers": 1, "num_experts": 8,
+      "params": [
+        {"name": "embed", "shape": [64, 32], "dtype": "float32"},
+        {"name": "blocks.0.w_in", "shape": [8, 32, 64], "dtype": "float32"}
+      ],
+      "num_param_leaves": 2,
+      "analysis": {"total_params": 18432, "active_params": 4096,
+                   "fwd_flops_per_token": 1000.0, "fwd_flops_seq": 16000.0},
+      "model": {"vocab_size": 64}
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.num_leaves(), 2);
+        assert_eq!(m.params[1].shape, vec![8, 32, 64]);
+        assert_eq!(m.params[1].numel(), 8 * 32 * 64);
+        assert_eq!(m.eval_lens, vec![16, 32]);
+        assert_eq!(m.vocab_size, 64);
+        assert_eq!(m.analysis.total_params, 18432);
+    }
+
+    #[test]
+    fn zeros_like_params_shapes() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        let z = m.zeros_like_params();
+        assert_eq!(z.len(), 2);
+        assert_eq!(z[0].len(), 64 * 32);
+        assert_eq!(z[1].shape, vec![8, 32, 64]);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
+//! coordinator hot path. See DESIGN.md §2 for the artifact contract.
+pub mod artifact;
+pub mod session;
+pub mod tensor;

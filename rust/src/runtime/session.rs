@@ -1,0 +1,232 @@
+//! Training session: owns the model/optimizer state (as XLA literals) and
+//! drives the step/grad/apply/eval programs of one `Bundle`.
+//!
+//! This is the boundary between the rust coordinator (batches, schedules,
+//! telemetry) and the AOT-compiled jax computation. State stays in
+//! `xla::Literal`s between steps; only loss + router-load scalars are decoded
+//! per step.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::Bundle;
+use crate::runtime::tensor::Tensor;
+
+/// Loss + telemetry decoded from one training step.
+#[derive(Debug, Clone)]
+pub struct StepOut {
+    pub loss: f64,
+    /// (num_routers x num_experts) dispatch fractions, row-major.
+    pub router_load: Vec<f32>,
+}
+
+pub struct Session<'a> {
+    pub bundle: &'a Bundle,
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    step_count: u64,
+}
+
+impl<'a> Session<'a> {
+    /// Initialize model params on device from `seed`; optimizer state zeroed.
+    pub fn init(bundle: &'a Bundle, seed: i32) -> Result<Session<'a>> {
+        let p = bundle.init()?;
+        let seed_lit = Tensor::scalar_i32(seed).to_literal()?;
+        let params = p.run(&[&seed_lit]).context("init artifact")?;
+        let n = bundle.manifest.num_leaves();
+        if params.len() != n {
+            bail!("init returned {} leaves, manifest says {n}", params.len());
+        }
+        // Build the zero tensors once, upload twice (m and v) — avoids the
+        // per-leaf literal->host->literal round-trip of a naive clone
+        // (§Perf L3 log in EXPERIMENTS.md).
+        let zero_tensors = bundle.manifest.zeros_like_params();
+        let m = zero_tensors.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let v = zero_tensors.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        Ok(Session { bundle, params, m, v, step_count: 0 })
+    }
+
+    /// Restore from checkpointed tensors (params, m, v, step_count).
+    pub fn restore(
+        bundle: &'a Bundle,
+        params: &[Tensor],
+        m: &[Tensor],
+        v: &[Tensor],
+        step_count: u64,
+    ) -> Result<Session<'a>> {
+        let n = bundle.manifest.num_leaves();
+        if params.len() != n || m.len() != n || v.len() != n {
+            bail!("checkpoint leaf count mismatch");
+        }
+        let conv = |ts: &[Tensor]| -> Result<Vec<xla::Literal>> {
+            ts.iter().map(|t| t.to_literal()).collect()
+        };
+        Ok(Session {
+            bundle,
+            params: conv(params)?,
+            m: conv(m)?,
+            v: conv(v)?,
+            step_count,
+        })
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step_count
+    }
+
+    /// Fused train step on a full (B, T) batch.
+    pub fn train_step(&mut self, lr: f32, tokens: &Tensor, targets: &Tensor) -> Result<StepOut> {
+        let man = &self.bundle.manifest;
+        expect_shape(tokens, &[man.batch_size, man.seq_len], "tokens")?;
+        expect_shape(targets, &[man.batch_size, man.seq_len], "targets")?;
+        let prog = self.bundle.step()?;
+        self.step_count += 1;
+        let stepnum = Tensor::scalar_f32(self.step_count as f32).to_literal()?;
+        let lr_lit = Tensor::scalar_f32(lr).to_literal()?;
+        let tok = tokens.to_literal()?;
+        let tgt = targets.to_literal()?;
+
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(3 * self.params.len() + 4);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        inputs.push(&stepnum);
+        inputs.push(&lr_lit);
+        inputs.push(&tok);
+        inputs.push(&tgt);
+
+        let mut outs = prog.run(&inputs)?;
+        let n = self.params.len();
+        if outs.len() != 3 * n + 2 {
+            bail!("step returned {} outputs, expected {}", outs.len(), 3 * n + 2);
+        }
+        let load_lit = outs.pop().unwrap();
+        let loss_lit = outs.pop().unwrap();
+        self.v = outs.split_off(2 * n);
+        self.m = outs.split_off(n);
+        self.params = outs;
+
+        Ok(StepOut {
+            loss: Tensor::from_literal(&loss_lit)?.item_f32()? as f64,
+            router_load: Tensor::from_literal(&load_lit)?.as_f32()?.to_vec(),
+        })
+    }
+
+    /// Microbatch grad-accumulation path: accumulate over `micro` batches of
+    /// (micro_batch, T), then apply once. Returns the mean loss.
+    pub fn train_step_accum(
+        &mut self,
+        lr: f32,
+        microbatches: &[(Tensor, Tensor)],
+    ) -> Result<f64> {
+        if microbatches.is_empty() {
+            bail!("no microbatches");
+        }
+        let man = &self.bundle.manifest;
+        let grad = self.bundle.grad()?;
+        let apply = self.bundle.apply()?;
+        let n = self.params.len();
+
+        let mut gacc: Vec<xla::Literal> = man
+            .zeros_like_params()
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let mut loss_sum = 0.0f64;
+        for (tokens, targets) in microbatches {
+            expect_shape(tokens, &[man.micro_batch, man.seq_len], "micro tokens")?;
+            let tok = tokens.to_literal()?;
+            let tgt = targets.to_literal()?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 * n + 2);
+            inputs.extend(self.params.iter());
+            inputs.extend(gacc.iter());
+            inputs.push(&tok);
+            inputs.push(&tgt);
+            let mut outs = grad.run(&inputs)?;
+            if outs.len() != n + 1 {
+                bail!("grad returned {} outputs, expected {}", outs.len(), n + 1);
+            }
+            let loss_lit = outs.pop().unwrap();
+            gacc = outs;
+            loss_sum += Tensor::from_literal(&loss_lit)?.item_f32()? as f64;
+        }
+
+        self.step_count += 1;
+        let stepnum = Tensor::scalar_f32(self.step_count as f32).to_literal()?;
+        let lr_lit = Tensor::scalar_f32(lr).to_literal()?;
+        let nmicro = Tensor::scalar_f32(microbatches.len() as f32).to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(4 * n + 3);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        inputs.extend(gacc.iter());
+        inputs.push(&stepnum);
+        inputs.push(&lr_lit);
+        inputs.push(&nmicro);
+        let mut outs = apply.run(&inputs)?;
+        if outs.len() != 3 * n {
+            bail!("apply returned {} outputs, expected {}", outs.len(), 3 * n);
+        }
+        self.v = outs.split_off(2 * n);
+        self.m = outs.split_off(n);
+        self.params = outs;
+        Ok(loss_sum / microbatches.len() as f64)
+    }
+
+    /// Evaluate summed NLL + token count on one (1, L) sequence pair.
+    pub fn eval(&self, len: usize, tokens: &Tensor, targets: &Tensor) -> Result<(f64, f64)> {
+        expect_shape(tokens, &[1, len], "eval tokens")?;
+        let prog = self.bundle.eval(len)?;
+        let tok = tokens.to_literal()?;
+        let tgt = targets.to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+        inputs.extend(self.params.iter());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        let outs = prog.run(&inputs)?;
+        if outs.len() != 2 {
+            bail!("eval returned {} outputs, expected 2", outs.len());
+        }
+        Ok((
+            Tensor::from_literal(&outs[0])?.item_f32()? as f64,
+            Tensor::from_literal(&outs[1])?.item_f32()? as f64,
+        ))
+    }
+
+    /// Final-position-only NLL (cloze probe primitive; see Bundle::eval_last).
+    pub fn eval_last(&self, len: usize, tokens: &Tensor, targets: &Tensor) -> Result<(f64, f64)> {
+        expect_shape(tokens, &[1, len], "eval_last tokens")?;
+        let prog = self.bundle.eval_last(len)?;
+        let tok = tokens.to_literal()?;
+        let tgt = targets.to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+        inputs.extend(self.params.iter());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        let outs = prog.run(&inputs)?;
+        if outs.len() != 2 {
+            bail!("eval_last returned {} outputs, expected 2", outs.len());
+        }
+        Ok((
+            Tensor::from_literal(&outs[0])?.item_f32()? as f64,
+            Tensor::from_literal(&outs[1])?.item_f32()? as f64,
+        ))
+    }
+
+    /// Copy current state to host tensors (checkpointing).
+    pub fn export(&self) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
+        let conv = |ls: &[xla::Literal]| -> Result<Vec<Tensor>> {
+            ls.iter().map(Tensor::from_literal).collect()
+        };
+        Ok((conv(&self.params)?, conv(&self.m)?, conv(&self.v)?))
+    }
+}
+
+
+fn expect_shape(t: &Tensor, shape: &[usize], what: &str) -> Result<()> {
+    if t.shape != shape {
+        bail!("{what}: shape {:?} != expected {:?}", t.shape, shape);
+    }
+    Ok(())
+}

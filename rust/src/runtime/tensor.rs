@@ -1,0 +1,213 @@
+//! Host tensor: a thin shape+dtype wrapper over flat data, converting to and
+//! from `xla::Literal`. This is the coordinator's lingua franca for batches,
+//! parameters (checkpointing) and metrics.
+
+use crate::substrate::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+        }
+    }
+}
+
+/// Flat host tensor (row-major).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(&[], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(&[], vec![v])
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Tensor {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor::f32(shape, vec![0.0; n]),
+            DType::I32 => Tensor::i32(shape, vec![0; n]),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// Scalar extraction (shape [] or [1]).
+    pub fn item_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("item() on tensor of {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    // ---- Literal conversion ------------------------------------------------
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(&dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::i32(&dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    // ---- JSON (checkpoint format) ------------------------------------------
+    pub fn to_json(&self) -> Json {
+        let data = match &self.data {
+            TensorData::F32(v) => Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect()),
+            TensorData::I32(v) => Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect()),
+        };
+        Json::obj(vec![
+            ("shape", Json::arr_usize(&self.shape)),
+            ("dtype", Json::str(self.dtype().name())),
+            ("data", data),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Tensor> {
+        let shape: Vec<usize> = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_, _>>()?;
+        let dtype = DType::from_str(j.get("dtype")?.as_str()?)?;
+        let raw = j.get("data")?.as_arr()?;
+        Ok(match dtype {
+            DType::F32 => Tensor::f32(
+                &shape,
+                raw.iter().map(|v| v.as_f64().map(|x| x as f32)).collect::<Result<_, _>>()?,
+            ),
+            DType::I32 => Tensor::i32(
+                &shape,
+                raw.iter().map(|v| v.as_f64().map(|x| x as i32)).collect::<Result<_, _>>()?,
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_product_checked() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Tensor::f32(&[2, 2], vec![1.0, -2.5, 3.0, 0.0]);
+        let j = t.to_json();
+        let t2 = Tensor::from_json(&j).unwrap();
+        assert_eq!(t2.shape, t.shape);
+        assert_eq!(t2.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn json_roundtrip_i32() {
+        let t = Tensor::i32(&[3], vec![1, -2, 3]);
+        let t2 = Tensor::from_json(&t.to_json()).unwrap();
+        assert_eq!(t2.as_i32().unwrap(), t.as_i32().unwrap());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::f32(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let t2 = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t2.shape, vec![2, 3]);
+        assert_eq!(t2.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar_i32() {
+        let t = Tensor::scalar_i32(42);
+        let lit = t.to_literal().unwrap();
+        let t2 = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t2.as_i32().unwrap(), &[42]);
+        assert!(t2.shape.is_empty());
+    }
+}

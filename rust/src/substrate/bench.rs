@@ -1,0 +1,167 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations, robust statistics (median / p10 / p90 over
+//! per-iteration wall times), and a one-line report compatible with
+//! `cargo bench` custom-harness targets. Table/figure benches use `Reporter`
+//! to print paper-style rows.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "bench {:<40} {:>10} med {:>12} p10 {:>12} p90 {:>12} ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            fmt_ns(self.mean_ns),
+            self.iters
+        );
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: times.len(),
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+        mean_ns: times.iter().sum::<f64>() / times.len() as f64,
+    };
+    stats.print();
+    stats
+}
+
+/// Time a single run of `f` (for end-to-end experiment benches where one
+/// iteration is already seconds long).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Paper-style table printer: fixed-width columns, one row per variant.
+pub struct Reporter {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Reporter {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Reporter {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged reporter row");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    s.push_str(&format!("{:<w$}", c, w = widths[i] + 2));
+                } else {
+                    s.push_str(&format!("{:>w$}", c, w = widths[i] + 2));
+                }
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_quantiles() {
+        let s = bench("noop", 2, 20, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert_eq!(s.iters, 20);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn reporter_rejects_ragged_rows() {
+        let mut r = Reporter::new("t", &["a", "b"]);
+        r.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn reporter_prints() {
+        let mut r = Reporter::new("demo", &["arch", "ppl"]);
+        r.row(&["mamba".into(), "10.7".into()]);
+        r.row(&["rom".into(), "9.5".into()]);
+        r.print(); // smoke: no panic
+    }
+}

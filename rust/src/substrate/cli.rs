@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [positional...] [--flag] [--key value]`.
+//! Flags may also be written `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]). `known_flags` lists boolean
+    /// switches that never consume a following value.
+    pub fn parse(raw: &[String], known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(stripped.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, known_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(
+            &s(&["train", "rom-e2e", "--steps", "100", "--lr=0.001", "--quiet"]),
+            &["quiet"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["rom-e2e"]);
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 0.001);
+        assert!(a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_trailing_flag_is_boolean() {
+        let a = Args::parse(&s(&["x", "--verbose"]), &[]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&s(&[]), &[]);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // "--key value" where value starts with '-' but not '--'.
+        let a = Args::parse(&s(&["x", "--delta", "-3.5"]), &[]);
+        assert_eq!(a.get_f64("delta", 0.0), -3.5);
+    }
+}

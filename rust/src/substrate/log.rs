@@ -1,0 +1,57 @@
+//! Minimal leveled logger writing to stderr; level from ROM_LOG (error,
+//! warn, info, debug; default info). Timestamps are relative to process
+//! start (monotonic) — good enough for training logs and greppable.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(PartialEq, PartialOrd, Clone, Copy, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static START: OnceLock<Instant> = OnceLock::new();
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| match std::env::var("ROM_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    })
+}
+
+pub fn log(lvl: Level, msg: &str) {
+    if lvl > level() {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {lvl:?}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info { ($($t:tt)*) => { $crate::substrate::log::log($crate::substrate::log::Level::Info, &format!($($t)*)) } }
+#[macro_export]
+macro_rules! warnln { ($($t:tt)*) => { $crate::substrate::log::log($crate::substrate::log::Level::Warn, &format!($($t)*)) } }
+#[macro_export]
+macro_rules! debugln { ($($t:tt)*) => { $crate::substrate::log::log($crate::substrate::log::Level::Debug, &format!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn log_smoke() {
+        log(Level::Info, "hello from test");
+    }
+}

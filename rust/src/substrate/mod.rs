@@ -1,0 +1,10 @@
+//! Hand-rolled substrates for the offline crate set (DESIGN.md §3):
+//! JSON, CLI parsing, RNG, thread pool, bench harness, property testing,
+//! logging.
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod proptest;
+pub mod rng;

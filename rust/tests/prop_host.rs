@@ -1,0 +1,235 @@
+//! Host-side property suites (no XLA): cross-module coordinator invariants
+//! exercised with the proptest-lite framework. These complement the
+//! per-module unit tests with randomized, seed-reproducible coverage.
+
+use rom::coordinator::checkpoint::Checkpoint;
+use rom::coordinator::metrics::Metrics;
+use rom::coordinator::monitor::ExpertMonitor;
+use rom::coordinator::schedule::CosineSchedule;
+use rom::data::corpus::{Corpus, CorpusSpec};
+use rom::data::loader::Loader;
+use rom::data::probes::{make_cloze, make_continuation};
+use rom::data::tokenizer::Tokenizer;
+use rom::runtime::tensor::Tensor;
+use rom::substrate::json::Json;
+use rom::substrate::proptest::{check, Config};
+use rom::substrate::rng::Rng;
+use rom::{prop_assert, prop_assert_eq};
+
+#[test]
+fn prop_json_roundtrip_arbitrary_docs() {
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0).round()),
+            3 => Json::Str(format!("s{}-\"quoted\"\n", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json-rt", Config { cases: 100, seed: 21 }, |rng| {
+        let doc = gen_json(rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert_eq!(back, doc);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_json_roundtrip() {
+    check("tensor-json", Config { cases: 50, seed: 22 }, |rng| {
+        let d0 = 1 + rng.below(6) as usize;
+        let d1 = 1 + rng.below(6) as usize;
+        let data: Vec<f32> = (0..d0 * d1)
+            .map(|_| (rng.next_f64() as f32 - 0.5) * 100.0)
+            .collect();
+        let t = Tensor::f32(&[d0, d1], data);
+        let back = Tensor::from_json(&t.to_json()).map_err(|e| e.to_string())?;
+        prop_assert_eq!(back.shape, t.shape);
+        prop_assert!(
+            back.as_f32().unwrap().iter().zip(t.as_f32().unwrap()).all(
+                |(a, b)| (a - b).abs() < 1e-4 * b.abs().max(1.0)
+            ),
+            "data drift through json"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_states() {
+    let dir = std::env::temp_dir().join("rom_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    check("ckpt-rt", Config { cases: 12, seed: 23 }, |rng| {
+        let leaves = 1 + rng.below(6) as usize;
+        let mk = |rng: &mut Rng| -> Vec<Tensor> {
+            (0..leaves)
+                .map(|_| {
+                    let n = 1 + rng.below(64) as usize;
+                    Tensor::f32(&[n], (0..n).map(|_| rng.next_f64() as f32).collect())
+                })
+                .collect()
+        };
+        let ck = Checkpoint { step: rng.below(10_000), params: mk(rng), m: mk(rng), v: mk(rng) };
+        let path = dir.join(format!("p{}.ckpt", rng.below(u64::MAX)));
+        ck.save(&path).map_err(|e| e.to_string())?;
+        let back = Checkpoint::load(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        prop_assert_eq!(back.step, ck.step);
+        prop_assert_eq!(back.params.len(), leaves);
+        for (a, b) in back.params.iter().zip(ck.params.iter()) {
+            prop_assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_monitor_load_conservation() {
+    // Feeding valid per-router distributions keeps the EMA a distribution.
+    check("monitor-conserve", Config { cases: 24, seed: 24 }, |rng| {
+        let routers = 1 + rng.below(4) as usize;
+        let experts = 2 + rng.below(7) as usize;
+        let mut mon = ExpertMonitor::new(routers, experts);
+        for _ in 0..30 {
+            let mut load = vec![0f32; routers * experts];
+            for r in 0..routers {
+                let mut total = 0f32;
+                for e in 0..experts {
+                    let w = rng.next_f64() as f32;
+                    load[r * experts + e] = w;
+                    total += w;
+                }
+                for e in 0..experts {
+                    load[r * experts + e] /= total;
+                }
+            }
+            mon.observe(&load);
+        }
+        let rep = mon.report();
+        prop_assert!(rep.max_over_uniform >= 1.0 - 1e-6, "max ratio < 1");
+        prop_assert!(
+            rep.norm_entropy > 0.0 && rep.norm_entropy <= 1.0 + 1e-9,
+            "entropy {} out of range",
+            rep.norm_entropy
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_warmup_peak_equals_max() {
+    check("sched-peak", Config { cases: 40, seed: 25 }, |rng| {
+        let total = 20 + rng.below(5000);
+        let max_lr = 1e-5 + rng.next_f64() * 1e-2;
+        let s = CosineSchedule::new(max_lr, total, 0.01 + rng.next_f64() * 0.2);
+        let peak = (1..=total).map(|t| s.lr(t)).fold(0.0, f64::max);
+        prop_assert!(
+            (peak - max_lr).abs() < 1e-12,
+            "peak {peak} != max_lr {max_lr}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_loader_covers_stream_once_per_epoch() {
+    check("loader-cover", Config { cases: 16, seed: 26 }, |rng| {
+        let t = 4 + rng.below(10) as usize;
+        let windows = 3 + rng.below(8) as usize;
+        let stream: Vec<i32> = (0..(t + 1) * windows).map(|i| i as i32).collect();
+        let mut loader = Loader::new(stream, 1, t, rng.next_u64());
+        let mut starts = std::collections::HashSet::new();
+        for _ in 0..windows {
+            let b = loader.next_batch();
+            starts.insert(b.tokens.as_i32().unwrap()[0]);
+        }
+        // One epoch: every window visited exactly once.
+        prop_assert_eq!(starts.len(), windows);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_probe_instances_well_formed() {
+    let corpus = Corpus::new(CorpusSpec::default(), 5);
+    check("probe-form", Config { cases: 12, seed: 27 }, |rng| {
+        let ctx = 8 + rng.below(48) as usize;
+        for inst in make_cloze(&corpus, rng.next_u64(), 6, ctx) {
+            prop_assert_eq!(inst.context.len(), ctx);
+            prop_assert!(inst.answer < 4, "bad answer idx");
+            prop_assert!(
+                inst.options
+                    .iter()
+                    .all(|&o| (o as usize) < corpus.spec().vocab),
+                "option out of vocab"
+            );
+        }
+        let pre = 4 + rng.below(16) as usize;
+        let cont = 2 + rng.below(8) as usize;
+        for inst in make_continuation(&corpus, rng.next_u64(), 4, pre, cont) {
+            prop_assert_eq!(inst.prefix.len(), pre);
+            prop_assert!(inst.options.iter().all(|o| o.len() == cont), "ragged opts");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tokenizer_never_loses_bytes() {
+    let sample: Vec<u8> = (0u32..3000).map(|i| ((i * 17 + i / 9) % 251) as u8).collect();
+    let tok = Tokenizer::train(&sample, 24);
+    check("bpe-lossless", Config { cases: 40, seed: 28 }, |rng| {
+        let len = rng.below(300) as usize;
+        let text: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        prop_assert_eq!(tok.decode(&tok.encode(&text)), text);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metrics_smoothing_bounded_by_extremes() {
+    check("metrics-smooth", Config { cases: 30, seed: 29 }, |rng| {
+        let mut m = Metrics::default();
+        let n = 1 + rng.below(50);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for i in 0..n {
+            let loss = rng.next_f64() * 10.0;
+            lo = lo.min(loss);
+            hi = hi.max(loss);
+            m.log_loss(i, loss, 1e-3, 0);
+        }
+        let s = m.smoothed_loss(10).unwrap();
+        prop_assert!(s >= lo - 1e-12 && s <= hi + 1e-12, "{s} not in [{lo},{hi}]");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corpus_topic_clusters_align_with_ids() {
+    let spec = CorpusSpec::default();
+    let corpus = Corpus::new(spec.clone(), 11);
+    check("corpus-topics", Config { cases: 20, seed: 30 }, |rng| {
+        let toks = corpus.generate(rng.next_u64(), 500);
+        for &t in &toks {
+            match corpus.topic_of(t) {
+                Some(topic) => {
+                    prop_assert!(topic < spec.n_topics, "topic out of range");
+                    prop_assert_eq!(topic, (t as usize) / spec.cluster);
+                }
+                None => prop_assert!(
+                    (t as usize) >= spec.n_topics * spec.cluster,
+                    "shared-band id misclassified"
+                ),
+            }
+        }
+        Ok(())
+    });
+}
