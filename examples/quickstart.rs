@@ -43,7 +43,9 @@ fn main() -> anyhow::Result<()> {
         let batch = loader.next_batch();
         let out = sess.train_step(sched.lr(step) as f32, &batch.tokens, &batch.targets)?;
         if step % 5 == 0 || step == 1 {
-            let load = &out.router_load[..man.num_experts.min(8)];
+            // The Tensor-path train_step always decodes router telemetry.
+            let full_load = out.router_load.as_deref().expect("telemetry decoded");
+            let load = &full_load[..man.num_experts.min(8)];
             println!(
                 "step {step:>3}  loss {:.4}  router0 load {:?}",
                 out.loss,

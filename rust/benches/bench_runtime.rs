@@ -1,8 +1,17 @@
 //! Runtime micro-benchmarks (§Perf): artifact compile latency, fused-step
-//! latency, eval latency, host<->literal conversion cost, and the grad-accum
-//! path vs the fused path. These are the numbers the L3 optimization loop
-//! iterates against (EXPERIMENTS.md §Perf).
+//! latency, eval latency, host<->literal conversion cost, the grad-accum
+//! path vs the fused path, and checkpoint save/load. These are the numbers
+//! the L3 optimization loop iterates against (EXPERIMENTS.md §Perf L3 log).
+//!
+//! Besides the human-readable report, this bench emits machine-readable
+//! `BENCH_runtime.json` at the repo root (override the path with
+//! ROM_BENCH_JSON) so subsequent PRs can track the perf trajectory:
+//! steady-state tokens/sec (first-step XLA compile excluded by warmup),
+//! checkpoint save/load wall time, and peak host RSS.
 
+use std::path::PathBuf;
+
+use rom::coordinator::checkpoint::Checkpoint;
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::loader::Loader;
 use rom::experiments::harness::artifacts_root;
@@ -10,6 +19,24 @@ use rom::runtime::artifact::{cpu_client, Bundle};
 use rom::runtime::session::Session;
 use rom::runtime::tensor::Tensor;
 use rom::substrate::bench::{bench, time_once};
+use rom::substrate::json::Json;
+
+/// Peak resident set size in bytes (linux VmHWM); None elsewhere.
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+fn bench_json_path() -> PathBuf {
+    if let Ok(p) = std::env::var("ROM_BENCH_JSON") {
+        return PathBuf::from(p);
+    }
+    // CARGO_MANIFEST_DIR is <repo>/rust; the trajectory file lives at the
+    // repo root next to ROADMAP.md.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_runtime.json")
+}
 
 fn main() {
     let variant = std::env::var("ROM_BENCH_VARIANT").unwrap_or_else(|_| "rom-tiny".into());
@@ -35,23 +62,43 @@ fn main() {
     let stream = corpus.generate(0, 64 * man.batch_size * (man.seq_len + 1));
     let mut loader = Loader::new(stream, man.batch_size, man.seq_len, 0);
 
-    // Fused train step.
+    // Fused train step on pre-encoded literals — the pipelined hot path.
+    // Warmup iterations absorb the first-step compile/transfer, so the
+    // reported median is steady-state.
     let batch = loader.next_batch();
-    let s = bench("fused train_step", 2, 12, || {
-        sess.train_step(1e-3, &batch.tokens, &batch.targets).unwrap();
+    let tok_lit = batch.tokens.to_literal().unwrap();
+    let tgt_lit = batch.targets.to_literal().unwrap();
+    let fused_s = bench("fused train_step (device literals)", 2, 12, || {
+        sess.train_step_device(1e-3, &tok_lit, &tgt_lit, false).unwrap();
     });
     let toks = (man.batch_size * man.seq_len) as f64;
-    println!(
-        "  -> {:.0} tokens/s steady-state",
-        toks / s.median_secs()
-    );
+    let steady_tps = toks / fused_s.median_secs();
+    println!("  -> {steady_tps:.0} tokens/s steady-state");
 
-    // Grad-accum path (2 microbatches) for the same global batch.
+    // Telemetry decode overhead (the cost the sampled decode avoids).
+    bench("fused train_step (+router decode)", 1, 6, || {
+        sess.train_step_device(1e-3, &tok_lit, &tgt_lit, true).unwrap();
+    });
+
+    // Grad-accum path for the same global batch, microbatches pre-encoded.
+    let mut accum_median_s = None;
     if man.batch_size % man.micro_batch == 0 {
         let micro = Loader::split_micro(&batch, man.micro_batch);
-        bench("grad-accum step (micro path)", 1, 6, || {
-            sess.train_step_accum(1e-3, &micro).unwrap();
+        let lits: Vec<(xla::Literal, xla::Literal)> = micro
+            .iter()
+            .map(|m| {
+                (
+                    rom::runtime::tensor::literal_from_i32(&m.shape(), m.tokens).unwrap(),
+                    rom::runtime::tensor::literal_from_i32(&m.shape(), m.targets).unwrap(),
+                )
+            })
+            .collect();
+        let refs: Vec<(&xla::Literal, &xla::Literal)> =
+            lits.iter().map(|(t, g)| (t, g)).collect();
+        let s = bench("grad-accum step (micro path)", 1, 6, || {
+            sess.train_step_accum_device(1e-3, &refs).unwrap();
         });
+        accum_median_s = Some(s.median_secs());
     }
 
     // Eval at the shortest length.
@@ -63,21 +110,61 @@ fn main() {
         sess.eval(ctx, &tok, &tgt).unwrap();
     });
 
-    // Host-side costs the step pays per iteration.
+    // Host-side costs the step loop no longer pays inline (both stages now
+    // run on the prefetch pipeline's background threads).
     bench("batch assembly (loader)", 5, 200, || {
         std::hint::black_box(loader.next_batch());
     });
     bench("tensor->literal (tokens)", 5, 200, || {
         std::hint::black_box(batch.tokens.to_literal().unwrap());
     });
-    let (params, _, _) = sess.export().unwrap();
+    let (params, m, v) = sess.export().unwrap();
     let total: usize = params.iter().map(|p| p.len()).sum();
-    let s = bench("state export (checkpoint copy)", 1, 6, || {
+    let export_s = bench("state export (checkpoint copy)", 1, 6, || {
         std::hint::black_box(sess.export().unwrap());
     });
     println!(
         "  -> {:.1} MB state, {:.0} MB/s",
         total as f64 * 4.0 / 1e6,
-        total as f64 * 4.0 / 1e6 / s.median_secs()
+        total as f64 * 4.0 / 1e6 / export_s.median_secs()
     );
+
+    // Checkpoint save/load through the streaming writer.
+    let dir = std::env::temp_dir().join("rom_bench_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{variant}.ckpt"));
+    let ck = Checkpoint { step: sess.step_count(), params, m, v };
+    let save_s = bench("checkpoint save (streamed)", 1, 6, || {
+        ck.save(&path).unwrap();
+    });
+    let load_s = bench("checkpoint load (streamed)", 1, 6, || {
+        std::hint::black_box(Checkpoint::load(&path).unwrap());
+    });
+    let ckpt_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let _ = std::fs::remove_file(&path);
+
+    // Machine-readable trajectory record.
+    let mut fields = vec![
+        ("variant", Json::str(variant.as_str())),
+        ("steady_state_tokens_per_sec", Json::num(steady_tps)),
+        ("fused_step_ms", Json::num(s_ms(fused_s.median_secs()))),
+        ("checkpoint_save_ms", Json::num(s_ms(save_s.median_secs()))),
+        ("checkpoint_load_ms", Json::num(s_ms(load_s.median_secs()))),
+        ("checkpoint_bytes", Json::num(ckpt_bytes as f64)),
+        ("compile_init_s", Json::num(t_init)),
+        ("compile_step_s", Json::num(t_step)),
+    ];
+    if let Some(a) = accum_median_s {
+        fields.push(("grad_accum_step_ms", Json::num(s_ms(a))));
+    }
+    if let Some(rss) = peak_rss_bytes() {
+        fields.push(("peak_rss_bytes", Json::num(rss as f64)));
+    }
+    let out_path = bench_json_path();
+    std::fs::write(&out_path, Json::obj(fields).to_string()).unwrap();
+    println!("wrote {}", out_path.display());
+}
+
+fn s_ms(secs: f64) -> f64 {
+    secs * 1e3
 }

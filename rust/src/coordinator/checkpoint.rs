@@ -5,8 +5,13 @@
 //! JSON-in-header keeps the format self-describing; raw payloads keep a
 //! multi-MB state fast to write/restore (a pure-JSON checkpoint would be
 //! ~10x larger and slower to parse).
+//!
+//! Both directions stream: `save` precomputes payload offsets from the tensor
+//! shapes and writes each leaf through a `BufWriter` (peak extra host memory
+//! is one buffer, not a full model-size `Vec<u8>`); `load` seeks to each
+//! leaf's offset and reads it through a single reusable scratch buffer.
 
-use std::io::{Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -15,6 +20,8 @@ use crate::runtime::tensor::{DType, Tensor};
 use crate::substrate::json::Json;
 
 const MAGIC: &[u8; 8] = b"ROMCKPT1";
+/// magic + header-length prefix.
+const PREAMBLE_LEN: u64 = 16;
 
 pub struct Checkpoint {
     pub step: u64,
@@ -27,29 +34,20 @@ impl Checkpoint {
     pub fn save(&self, path: &Path) -> Result<()> {
         let groups: [(&str, &Vec<Tensor>); 3] =
             [("params", &self.params), ("m", &self.m), ("v", &self.v)];
+
+        // Pass 1 (metadata only): assign contiguous payload offsets from the
+        // shapes — no payload bytes are materialized.
+        let mut offset = 0usize;
         let mut header_groups = Vec::new();
-        let mut payload: Vec<u8> = Vec::new();
         for (name, tensors) in groups {
             let mut specs = Vec::new();
             for t in tensors.iter() {
-                let offset = payload.len();
-                match &t.data {
-                    crate::runtime::tensor::TensorData::F32(v) => {
-                        for x in v {
-                            payload.extend_from_slice(&x.to_le_bytes());
-                        }
-                    }
-                    crate::runtime::tensor::TensorData::I32(v) => {
-                        for x in v {
-                            payload.extend_from_slice(&x.to_le_bytes());
-                        }
-                    }
-                }
                 specs.push(Json::obj(vec![
                     ("shape", Json::arr_usize(&t.shape)),
                     ("dtype", Json::str(t.dtype().name())),
                     ("offset", Json::num(offset as f64)),
                 ]));
+                offset += t.byte_len();
             }
             header_groups.push((name, Json::Arr(specs)));
         }
@@ -61,38 +59,57 @@ impl Checkpoint {
         ])
         .to_string();
 
+        // Pass 2: stream preamble + header + per-leaf payloads.
         let tmp = path.with_extension("tmp");
         {
-            let mut f = std::fs::File::create(&tmp)
+            let f = std::fs::File::create(&tmp)
                 .with_context(|| format!("creating {}", tmp.display()))?;
-            f.write_all(MAGIC)?;
-            f.write_all(&(header.len() as u64).to_le_bytes())?;
-            f.write_all(header.as_bytes())?;
-            f.write_all(&payload)?;
-            f.sync_all()?;
+            let mut w = BufWriter::new(f);
+            w.write_all(MAGIC)?;
+            w.write_all(&(header.len() as u64).to_le_bytes())?;
+            w.write_all(header.as_bytes())?;
+            for (_, tensors) in groups {
+                for t in tensors.iter() {
+                    t.write_le_bytes(&mut w)?;
+                }
+            }
+            w.flush()?;
+            w.get_ref().sync_all()?;
         }
         std::fs::rename(&tmp, path)?; // atomic publish
         Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::fs::File::open(path)
+        let f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
+        let file_len = f.metadata()?.len();
+        let mut r = BufReader::new(f);
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
+        r.read_exact(&mut magic)?;
         if &magic != MAGIC {
             bail!("{} is not a ROM checkpoint", path.display());
         }
         let mut len8 = [0u8; 8];
-        f.read_exact(&mut len8)?;
-        let hlen = u64::from_le_bytes(len8) as usize;
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
+        r.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8);
+        // Reject a corrupt length prefix before trusting it as an allocation
+        // size: the header cannot extend past the file.
+        if hlen > file_len.saturating_sub(PREAMBLE_LEN) {
+            bail!(
+                "{}: corrupt header length {hlen} (file is {file_len} bytes)",
+                path.display()
+            );
+        }
+        let mut hbuf = vec![0u8; hlen as usize];
+        r.read_exact(&mut hbuf)?;
         let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
-        let mut payload = Vec::new();
-        f.read_to_end(&mut payload)?;
+        let payload_base = PREAMBLE_LEN + hlen;
+        let payload_len = (file_len - payload_base) as usize;
 
-        let read_group = |name: &str| -> Result<Vec<Tensor>> {
+        // Stream each leaf through one reusable scratch buffer.
+        let mut scratch: Vec<u8> = Vec::new();
+        let mut read_group = |name: &str| -> Result<Vec<Tensor>> {
             header
                 .get(name)?
                 .as_arr()?
@@ -106,26 +123,23 @@ impl Checkpoint {
                         .collect::<Result<_, _>>()?;
                     let dtype = DType::from_str(spec.get("dtype")?.as_str()?)?;
                     let offset = spec.get("offset")?.as_usize()?;
-                    let n: usize = shape.iter().product();
-                    let bytes = payload
-                        .get(offset..offset + 4 * n)
-                        .ok_or_else(|| anyhow::anyhow!("checkpoint payload truncated"))?;
-                    Ok(match dtype {
-                        DType::F32 => Tensor::f32(
-                            &shape,
-                            bytes
-                                .chunks_exact(4)
-                                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                                .collect(),
-                        ),
-                        DType::I32 => Tensor::i32(
-                            &shape,
-                            bytes
-                                .chunks_exact(4)
-                                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                                .collect(),
-                        ),
-                    })
+                    // Checked arithmetic throughout: a corrupt header must
+                    // produce an error, not an overflow panic/wrap.
+                    let nbytes = shape
+                        .iter()
+                        .try_fold(4usize, |acc, &d| acc.checked_mul(d))
+                        .filter(|&b| b <= payload_len)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("corrupt header: shape {shape:?} overflows payload")
+                        })?;
+                    if offset.checked_add(nbytes).map_or(true, |end| end > payload_len) {
+                        bail!("checkpoint payload truncated");
+                    }
+                    r.seek(SeekFrom::Start(payload_base + offset as u64))?;
+                    scratch.resize(nbytes, 0);
+                    r.read_exact(&mut scratch)
+                        .context("checkpoint payload truncated")?;
+                    Tensor::from_le_bytes(&shape, dtype, &scratch)
                 })
                 .collect()
         };
@@ -156,6 +170,12 @@ mod tests {
             .collect()
     }
 
+    fn tmp_path(dir: &str, file: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(dir);
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(file)
+    }
+
     #[test]
     fn roundtrip() {
         let mut rng = Rng::new(1);
@@ -165,9 +185,7 @@ mod tests {
             m: rand_tensors(&mut rng, 5),
             v: rand_tensors(&mut rng, 5),
         };
-        let dir = std::env::temp_dir().join("rom_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("test.ckpt");
+        let path = tmp_path("rom_ckpt_test", "test.ckpt");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.step, 123);
@@ -176,14 +194,15 @@ mod tests {
             assert_eq!(a.shape, b.shape);
             assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
         }
+        for (a, b) in ck.v.iter().zip(back.v.iter()) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
         std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
     fn rejects_non_checkpoint() {
-        let dir = std::env::temp_dir().join("rom_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("junk.ckpt");
+        let path = tmp_path("rom_ckpt_test2", "junk.ckpt");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(&path).unwrap();
@@ -197,12 +216,80 @@ mod tests {
             m: vec![],
             v: vec![],
         };
-        let dir = std::env::temp_dir().join("rom_ckpt_test3");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("i32.ckpt");
+        let path = tmp_path("rom_ckpt_test3", "i32.ckpt");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.params[0].as_i32().unwrap(), &[1, -5, 7]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn zero_leaf_roundtrip() {
+        // A checkpoint with no leaves at all must survive the streaming
+        // writer (empty payload region, header only).
+        let ck = Checkpoint { step: 9, params: vec![], m: vec![], v: vec![] };
+        let path = tmp_path("rom_ckpt_test4", "empty.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 9);
+        assert!(back.params.is_empty() && back.m.is_empty() && back.v.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        let mut rng = Rng::new(2);
+        let ck = Checkpoint {
+            step: 5,
+            params: rand_tensors(&mut rng, 3),
+            m: vec![],
+            v: vec![],
+        };
+        let path = tmp_path("rom_ckpt_test5", "trunc.ckpt");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Chop the last 5 payload bytes: load must fail with a clear error,
+        // not return short tensors.
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "got: {err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn overflowing_header_shape_is_an_error() {
+        // A header whose shape product overflows usize (or exceeds the
+        // payload) must load as Err, not panic or fabricate a tensor.
+        let header = r#"{"step":1,"params":[{"shape":[4611686018427387904,4],"dtype":"float32","offset":0}],"m":[],"v":[]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        let path = tmp_path("rom_ckpt_test7", "overflow.ckpt");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("overflows payload"), "got: {err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_header_length_is_an_error() {
+        let mut rng = Rng::new(3);
+        let ck = Checkpoint {
+            step: 5,
+            params: rand_tensors(&mut rng, 1),
+            m: vec![],
+            v: vec![],
+        };
+        let path = tmp_path("rom_ckpt_test6", "hdr.ckpt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Overwrite the u64 header-length prefix with an absurd value: load
+        // must reject it up front instead of attempting a giant allocation.
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupt header length"), "got: {err:#}");
         std::fs::remove_file(&path).unwrap();
     }
 }

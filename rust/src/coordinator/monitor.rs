@@ -43,6 +43,17 @@ impl ExpertMonitor {
     pub fn observe(&mut self, load: &[f32]) {
         assert_eq!(load.len(), self.routers * self.experts, "load shape mismatch");
         self.steps += 1;
+        if self.steps == 1 {
+            // Seed the EMA from the first observation rather than blending it
+            // into the uniform prior: telemetry is sampled (every log_every
+            // steps), so with few observations a prior-seeded EMA would
+            // report near-uniform balance no matter how collapsed the real
+            // dispatch is.
+            for (e, &l) in self.ema.iter_mut().zip(load.iter()) {
+                *e = l as f64;
+            }
+            return;
+        }
         for (e, &l) in self.ema.iter_mut().zip(load.iter()) {
             *e = self.ema_decay * *e + (1.0 - self.ema_decay) * l as f64;
         }
@@ -123,6 +134,20 @@ mod tests {
         // After the shift the EMA should strongly favour expert 1.
         assert!(m.ema[1] > 0.9, "{:?}", m.ema);
         assert!(r.max_over_uniform > 1.8);
+    }
+
+    #[test]
+    fn sparse_sampling_still_flags_collapse() {
+        // Telemetry is decoded every log_every steps, so a run may observe
+        // only a handful of loads; a collapsed router must still be flagged
+        // (the EMA is seeded from the first observation, not a uniform prior).
+        let mut m = ExpertMonitor::new(1, 4);
+        for _ in 0..5 {
+            m.observe(&[1.0, 0.0, 0.0, 0.0]);
+        }
+        let r = m.report();
+        assert!(r.max_over_uniform > 3.5, "{r:?}");
+        assert!(r.norm_entropy < 0.1, "{r:?}");
     }
 
     #[test]

@@ -1,9 +1,16 @@
 //! The training coordinator: the L3 contribution glue.
 //!
-//! Owns the loop: data prefetch (background thread) -> LR schedule -> fused
-//! step (fast path) or microbatch grad-accum (memory path) -> telemetry ->
+//! Owns the loop: two-stage data pipeline (window assembly -> device encode,
+//! both on background threads, double-buffered) -> LR schedule -> fused step
+//! (fast path) or microbatch grad-accum (memory path) -> sampled telemetry ->
 //! periodic eval + checkpointing. The AOT artifact is the only compute; this
 //! module never touches model math.
+//!
+//! The step loop consumes *device-ready* literals: `Tensor -> xla::Literal`
+//! encode happens on the pipeline's second stage, so `Session` never blocks
+//! on host-side encode between steps. Set `pipelined = false` to fall back to
+//! the synchronous in-loop path (the determinism guard in
+//! tests/integration_coordinator.rs pins the two paths to identical losses).
 
 use std::path::PathBuf;
 
@@ -18,9 +25,10 @@ use crate::coordinator::schedule::CosineSchedule;
 use crate::data::corpus::{Corpus, CorpusSpec};
 use crate::data::loader::{Batch, Loader};
 use crate::info;
-use crate::runtime::artifact::Bundle;
+use crate::runtime::artifact::{Bundle, Manifest};
 use crate::runtime::session::Session;
-use crate::substrate::pool::Prefetcher;
+use crate::runtime::tensor::{literal_from_i32, SendLiteral};
+use crate::substrate::pool::Pipeline;
 
 pub struct TrainReport {
     pub final_loss: f64,
@@ -31,17 +39,59 @@ pub struct TrainReport {
     pub eval_ppl: Vec<(usize, f64)>,
 }
 
+/// One batch, already encoded for the device by the pipeline's second stage.
+enum DeviceBatch {
+    /// Full (B, T) pair for the fused step program.
+    Fused { tokens: SendLiteral, targets: SendLiteral },
+    /// (micro_batch, T) pairs for the grad-accum path.
+    Micro(Vec<(SendLiteral, SendLiteral)>),
+}
+
+/// Stage-2 encode: host batch -> device literals. Shared by the pipelined and
+/// synchronous paths so the bytes reaching the device are identical either way.
+fn encode_batch(man: &Manifest, grad_accum: bool, batch: &Batch) -> Result<DeviceBatch> {
+    if grad_accum {
+        let micro = Loader::split_micro(batch, man.micro_batch);
+        let enc = micro
+            .iter()
+            .map(|m| {
+                Ok((
+                    SendLiteral(literal_from_i32(&m.shape(), m.tokens)?),
+                    SendLiteral(literal_from_i32(&m.shape(), m.targets)?),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceBatch::Micro(enc))
+    } else {
+        Ok(DeviceBatch::Fused {
+            tokens: SendLiteral(batch.tokens.to_literal()?),
+            targets: SendLiteral(batch.targets.to_literal()?),
+        })
+    }
+}
+
 pub struct Trainer<'a> {
     pub bundle: &'a Bundle,
     pub train_cfg: TrainCfg,
     pub corpus_seed: u64,
     pub checkpoint_dir: Option<PathBuf>,
     pub quiet: bool,
+    /// Background assembly + encode (default). `false` runs both stages
+    /// inline in the step loop — slower, but the same encode function on the
+    /// same loader stream; kept as the baseline for the determinism guard.
+    pub pipelined: bool,
 }
 
 impl<'a> Trainer<'a> {
     pub fn new(bundle: &'a Bundle, train_cfg: TrainCfg) -> Trainer<'a> {
-        Trainer { bundle, train_cfg, corpus_seed: 17, checkpoint_dir: None, quiet: false }
+        Trainer {
+            bundle,
+            train_cfg,
+            corpus_seed: 17,
+            checkpoint_dir: None,
+            quiet: false,
+            pipelined: true,
+        }
     }
 
     /// Tokens needed to cover `steps` optimizer steps plus eval streams.
@@ -58,14 +108,28 @@ impl<'a> Trainer<'a> {
         let cfg = self.train_cfg.clone();
         let sched = CosineSchedule::new(cfg.max_lr, cfg.steps, cfg.warmup_ratio);
 
-        // Data pipeline: corpus -> loader -> background prefetch.
+        // Data pipeline: corpus -> loader -> (assembly thread) -> (encode
+        // thread) -> device-ready literals, double-buffered at each stage.
         let corpus = Corpus::new(CorpusSpec::default(), self.corpus_seed);
         let stream = corpus.generate(cfg.data_seed, self.stream_len(cfg.steps));
         let mut loader = Loader::new(stream, man.batch_size, man.seq_len, cfg.data_seed);
         let steps = cfg.steps;
-        let prefetch = Prefetcher::new(4, move || -> Option<Batch> {
-            Some(loader.next_batch())
-        });
+        let grad_accum = cfg.grad_accum;
+        // Encode failures travel through the channel as Err so `run` returns
+        // them, instead of panicking an anonymous background thread.
+        let mut source: Box<dyn FnMut() -> Option<Result<DeviceBatch>>> = if self.pipelined
+        {
+            let enc_man = man.clone();
+            let pipeline = Pipeline::new(
+                2,
+                move || -> Option<Batch> { Some(loader.next_batch()) },
+                move |batch: Batch| encode_batch(&enc_man, grad_accum, &batch),
+            );
+            Box::new(move || pipeline.next())
+        } else {
+            let enc_man = man.clone();
+            Box::new(move || Some(encode_batch(&enc_man, grad_accum, &loader.next_batch())))
+        };
 
         let mut sess = Session::init(self.bundle, 0)?;
         let mut metrics = Metrics::default();
@@ -74,15 +138,27 @@ impl<'a> Trainer<'a> {
         let tokens_per_step = (man.batch_size * man.seq_len) as u64;
 
         for step in 1..=steps {
-            let batch = prefetch.next().expect("prefetcher ended early");
+            let batch = source().expect("prefetch pipeline ended early")?;
             let lr = sched.lr(step) as f32;
-            let loss = if cfg.grad_accum {
-                let micro = Loader::split_micro(&batch, man.micro_batch);
-                sess.train_step_accum(lr, &micro)?
-            } else {
-                let out = sess.train_step(lr, &batch.tokens, &batch.targets)?;
-                monitor.observe(&out.router_load);
-                out.loss
+            // Router telemetry costs a device->host transfer per decode;
+            // sample it at the logging cadence instead of paying it every
+            // step (the balance EMA converges the same either way).
+            let decode_load =
+                cfg.log_every > 0 && (step % cfg.log_every == 0 || step == steps);
+            let loss = match &batch {
+                DeviceBatch::Micro(micro) => {
+                    let refs: Vec<(&xla::Literal, &xla::Literal)> =
+                        micro.iter().map(|(t, g)| (&t.0, &g.0)).collect();
+                    sess.train_step_accum_device(lr, &refs)?
+                }
+                DeviceBatch::Fused { tokens, targets } => {
+                    let out =
+                        sess.train_step_device(lr, &tokens.0, &targets.0, decode_load)?;
+                    if let Some(load) = &out.router_load {
+                        monitor.observe(load);
+                    }
+                    out.loss
+                }
             };
             thp.record(tokens_per_step);
             metrics.log_loss(step, loss, lr as f64, thp.total_tokens());

@@ -15,6 +15,31 @@ pub struct Batch {
     pub targets: Tensor, // i32 (B, T)
 }
 
+/// One microbatch as borrowed row ranges into the parent `Batch` — the
+/// grad-accum hot path encodes these straight to device literals, so copying
+/// them into fresh `Tensor`s first would be pure overhead.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroBatch<'a> {
+    pub tokens: &'a [i32],  // (rows * seq_len) row-major
+    pub targets: &'a [i32], // (rows * seq_len) row-major
+    pub rows: usize,
+    pub seq_len: usize,
+}
+
+impl<'a> MicroBatch<'a> {
+    pub fn shape(&self) -> [usize; 2] {
+        [self.rows, self.seq_len]
+    }
+
+    /// Materialize as owned tensors (slow path / tests).
+    pub fn to_tensors(&self) -> (Tensor, Tensor) {
+        (
+            Tensor::i32(&self.shape(), self.tokens.to_vec()),
+            Tensor::i32(&self.shape(), self.targets.to_vec()),
+        )
+    }
+}
+
 pub struct Loader {
     stream: Vec<i32>,
     seq_len: usize,
@@ -42,6 +67,17 @@ impl Loader {
     ) -> Loader {
         assert!(rank < world);
         assert!(stream.len() > seq_len + 1, "stream shorter than one window");
+        let num_windows = stream.len() / (seq_len + 1);
+        // Every rank must own at least one window per epoch; otherwise
+        // `next_batch` on the starved rank would reshuffle forever into an
+        // empty order and index out of bounds. Fail loudly at construction.
+        assert!(
+            num_windows >= world,
+            "world size {world} exceeds {num_windows} windows \
+             ({}-token stream, seq_len {seq_len}): rank {rank} would starve — \
+             shrink world or provide a longer stream",
+            stream.len()
+        );
         let mut l = Loader {
             stream,
             seq_len,
@@ -73,6 +109,13 @@ impl Loader {
             .filter(|(i, _)| i % self.world == self.rank)
             .map(|(_, w)| w)
             .collect();
+        debug_assert!(
+            !self.order.is_empty(),
+            "rank {}/{} drew an empty shard from {} windows",
+            self.rank,
+            self.world,
+            n
+        );
         self.cursor = 0;
     }
 
@@ -104,18 +147,19 @@ impl Loader {
     }
 
     /// Slice one batch into microbatches of `mb` rows (grad accumulation).
-    pub fn split_micro(batch: &Batch, mb: usize) -> Vec<(Tensor, Tensor)> {
+    /// Yields borrowed row ranges into `batch` — no payload copies.
+    pub fn split_micro(batch: &Batch, mb: usize) -> Vec<MicroBatch<'_>> {
         let b = batch.tokens.shape[0];
         let t = batch.tokens.shape[1];
         assert!(b % mb == 0, "micro batch {mb} does not divide batch {b}");
         let tok = batch.tokens.as_i32().unwrap();
         let tgt = batch.targets.as_i32().unwrap();
         (0..b / mb)
-            .map(|c| {
-                (
-                    Tensor::i32(&[mb, t], tok[c * mb * t..(c + 1) * mb * t].to_vec()),
-                    Tensor::i32(&[mb, t], tgt[c * mb * t..(c + 1) * mb * t].to_vec()),
-                )
+            .map(|c| MicroBatch {
+                tokens: &tok[c * mb * t..(c + 1) * mb * t],
+                targets: &tgt[c * mb * t..(c + 1) * mb * t],
+                rows: mb,
+                seq_len: t,
             })
             .collect()
     }
@@ -213,10 +257,39 @@ mod tests {
         let b = l.next_batch();
         let micro = Loader::split_micro(&b, 2);
         assert_eq!(micro.len(), 2);
-        let all: Vec<i32> = micro
-            .iter()
-            .flat_map(|(t, _)| t.as_i32().unwrap().to_vec())
-            .collect();
+        for m in &micro {
+            assert_eq!(m.shape(), [2, 8]);
+            assert_eq!(m.tokens.len(), m.targets.len());
+        }
+        let all: Vec<i32> = micro.iter().flat_map(|m| m.tokens.to_vec()).collect();
         assert_eq!(all, b.tokens.as_i32().unwrap());
+        // Borrowed views: same backing memory as the parent batch, no copy.
+        assert_eq!(micro[0].tokens.as_ptr(), b.tokens.as_i32().unwrap().as_ptr());
+        let (t0, g0) = micro[0].to_tensors();
+        assert_eq!(t0.shape, vec![2, 8]);
+        assert_eq!(g0.as_i32().unwrap(), micro[0].targets);
+    }
+
+    #[test]
+    #[should_panic(expected = "would starve")]
+    fn empty_shard_rejected_at_construction() {
+        // 2 windows, world 3: rank 2 would never receive a window and the old
+        // code hung/panicked deep inside next_batch. Must fail loudly instead.
+        let s = stream(2 * 9 + 1); // seq_len 8 -> exactly 2 windows
+        let _ = Loader::sharded(s, 1, 8, 0, 3, 2);
+    }
+
+    #[test]
+    fn minimal_world_per_window_ok() {
+        // world == num_windows is the boundary case: every rank gets exactly
+        // one window and batches keep flowing across epoch rollovers.
+        let s = stream(3 * 9); // 3 windows of seq_len 8
+        for rank in 0..3 {
+            let mut l = Loader::sharded(s.clone(), 1, 8, 5, 3, rank);
+            for _ in 0..4 {
+                let b = l.next_batch();
+                assert_eq!(b.tokens.shape, vec![1, 8]);
+            }
+        }
     }
 }

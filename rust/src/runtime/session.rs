@@ -3,8 +3,13 @@
 //!
 //! This is the boundary between the rust coordinator (batches, schedules,
 //! telemetry) and the AOT-compiled jax computation. State stays in
-//! `xla::Literal`s between steps; only loss + router-load scalars are decoded
-//! per step.
+//! `xla::Literal`s between steps; only the loss scalar is decoded per step —
+//! router-load telemetry is decoded opt-in (sampled by the trainer at its
+//! logging cadence), and the gradient-accumulation zero buffer is uploaded
+//! once at `init`/`restore` and reused for the life of the session
+//! (§Perf L3 log in EXPERIMENTS.md).
+
+use std::cell::Cell;
 
 use anyhow::{bail, Context, Result};
 
@@ -15,8 +20,10 @@ use crate::runtime::tensor::Tensor;
 #[derive(Debug, Clone)]
 pub struct StepOut {
     pub loss: f64,
-    /// (num_routers x num_experts) dispatch fractions, row-major.
-    pub router_load: Vec<f32>,
+    /// (num_routers x num_experts) dispatch fractions, row-major. `None`
+    /// when the caller skipped the decode (telemetry is sampled, not free:
+    /// it forces a device->host transfer every step).
+    pub router_load: Option<Vec<f32>>,
 }
 
 pub struct Session<'a> {
@@ -24,6 +31,16 @@ pub struct Session<'a> {
     params: Vec<xla::Literal>,
     m: Vec<xla::Literal>,
     v: Vec<xla::Literal>,
+    /// Zeroed per-leaf gradient accumulator, uploaded once; `train_step_accum`
+    /// seeds every optimizer step from these literals instead of re-allocating
+    /// and re-uploading a full model's worth of zeros per step.
+    grad_zero: Vec<xla::Literal>,
+    /// Every session-side `Tensor -> Literal` conversion goes through
+    /// `upload()` and bumps this. The perf regression test asserts the exact
+    /// per-step delta (batch encodes + scalars), which catches any
+    /// reintroduced per-step gradient-buffer upload — that would add
+    /// `num_leaves` to the count.
+    host_uploads: Cell<u64>,
     step_count: u64,
 }
 
@@ -37,13 +54,23 @@ impl<'a> Session<'a> {
         if params.len() != n {
             bail!("init returned {} leaves, manifest says {n}", params.len());
         }
-        // Build the zero tensors once, upload twice (m and v) — avoids the
-        // per-leaf literal->host->literal round-trip of a naive clone
-        // (§Perf L3 log in EXPERIMENTS.md).
+        // Build the zero tensors once, upload three times (m, v, grad_zero) —
+        // avoids the per-leaf literal->host->literal round-trip of a naive
+        // clone (§Perf L3 log in EXPERIMENTS.md).
         let zero_tensors = bundle.manifest.zeros_like_params();
         let m = zero_tensors.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
         let v = zero_tensors.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        Ok(Session { bundle, params, m, v, step_count: 0 })
+        let grad_zero =
+            zero_tensors.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+        Ok(Session {
+            bundle,
+            params,
+            m,
+            v,
+            host_uploads: Cell::new(1 + 3 * grad_zero.len() as u64),
+            grad_zero,
+            step_count: 0,
+        })
     }
 
     /// Restore from checkpointed tensors (params, m, v, step_count).
@@ -61,11 +88,19 @@ impl<'a> Session<'a> {
         let conv = |ts: &[Tensor]| -> Result<Vec<xla::Literal>> {
             ts.iter().map(|t| t.to_literal()).collect()
         };
+        let grad_zero = bundle
+            .manifest
+            .zeros_like_params()
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
         Ok(Session {
             bundle,
             params: conv(params)?,
             m: conv(m)?,
             v: conv(v)?,
+            host_uploads: Cell::new(4 * grad_zero.len() as u64),
+            grad_zero,
             step_count,
         })
     }
@@ -74,17 +109,46 @@ impl<'a> Session<'a> {
         self.step_count
     }
 
-    /// Fused train step on a full (B, T) batch.
+    /// Total host->device uploads (Tensor -> Literal conversions) this
+    /// session has performed, constructors included. Tests pin the per-step
+    /// delta of this counter to catch reintroduced hot-path uploads.
+    pub fn host_uploads(&self) -> u64 {
+        self.host_uploads.get()
+    }
+
+    /// Sole session-side upload point: converts and counts.
+    fn upload(&self, t: &Tensor) -> Result<xla::Literal> {
+        self.host_uploads.set(self.host_uploads.get() + 1);
+        t.to_literal()
+    }
+
+    /// Fused train step on a full (B, T) host batch: encodes to literals and
+    /// delegates. Decodes router telemetry unconditionally (the historical
+    /// behavior; the pipelined trainer calls `train_step_device` and samples).
     pub fn train_step(&mut self, lr: f32, tokens: &Tensor, targets: &Tensor) -> Result<StepOut> {
         let man = &self.bundle.manifest;
         expect_shape(tokens, &[man.batch_size, man.seq_len], "tokens")?;
         expect_shape(targets, &[man.batch_size, man.seq_len], "targets")?;
+        let tok = self.upload(tokens)?;
+        let tgt = self.upload(targets)?;
+        self.train_step_device(lr, &tok, &tgt, true)
+    }
+
+    /// Fused train step on pre-encoded (B, T) literals — the pipelined hot
+    /// path. The caller owns shape discipline (the loader/pipeline already
+    /// produce exact (B, T) windows); `decode_router_load` gates the
+    /// device->host telemetry transfer.
+    pub fn train_step_device(
+        &mut self,
+        lr: f32,
+        tokens: &xla::Literal,
+        targets: &xla::Literal,
+        decode_router_load: bool,
+    ) -> Result<StepOut> {
         let prog = self.bundle.step()?;
         self.step_count += 1;
-        let stepnum = Tensor::scalar_f32(self.step_count as f32).to_literal()?;
-        let lr_lit = Tensor::scalar_f32(lr).to_literal()?;
-        let tok = tokens.to_literal()?;
-        let tgt = targets.to_literal()?;
+        let stepnum = self.upload(&Tensor::scalar_f32(self.step_count as f32))?;
+        let lr_lit = self.upload(&Tensor::scalar_f32(lr))?;
 
         let mut inputs: Vec<&xla::Literal> =
             Vec::with_capacity(3 * self.params.len() + 4);
@@ -93,8 +157,8 @@ impl<'a> Session<'a> {
         inputs.extend(self.v.iter());
         inputs.push(&stepnum);
         inputs.push(&lr_lit);
-        inputs.push(&tok);
-        inputs.push(&tgt);
+        inputs.push(tokens);
+        inputs.push(targets);
 
         let mut outs = prog.run(&inputs)?;
         let n = self.params.len();
@@ -107,55 +171,79 @@ impl<'a> Session<'a> {
         self.m = outs.split_off(n);
         self.params = outs;
 
+        let router_load = if decode_router_load {
+            Some(Tensor::from_literal(&load_lit)?.as_f32()?.to_vec())
+        } else {
+            None
+        };
         Ok(StepOut {
             loss: Tensor::from_literal(&loss_lit)?.item_f32()? as f64,
-            router_load: Tensor::from_literal(&load_lit)?.as_f32()?.to_vec(),
+            router_load,
         })
     }
 
-    /// Microbatch grad-accumulation path: accumulate over `micro` batches of
-    /// (micro_batch, T), then apply once. Returns the mean loss.
+    /// Microbatch grad-accumulation path on host tensors: encodes each
+    /// microbatch and delegates to the device path. Returns the mean loss.
     pub fn train_step_accum(
         &mut self,
         lr: f32,
         microbatches: &[(Tensor, Tensor)],
     ) -> Result<f64> {
+        let man = &self.bundle.manifest;
+        let mut device = Vec::with_capacity(microbatches.len());
+        for (tokens, targets) in microbatches {
+            expect_shape(tokens, &[man.micro_batch, man.seq_len], "micro tokens")?;
+            device.push((self.upload(tokens)?, self.upload(targets)?));
+        }
+        let refs: Vec<(&xla::Literal, &xla::Literal)> =
+            device.iter().map(|(t, g)| (t, g)).collect();
+        self.train_step_accum_device(lr, &refs)
+    }
+
+    /// Microbatch grad-accumulation on pre-encoded literals: accumulate over
+    /// `micro` batches of (micro_batch, T), then apply once. The accumulator
+    /// is seeded from the session's persistent `grad_zero` literals — zero
+    /// gradient-buffer allocations or uploads happen here. Returns the mean
+    /// loss.
+    pub fn train_step_accum_device(
+        &mut self,
+        lr: f32,
+        microbatches: &[(&xla::Literal, &xla::Literal)],
+    ) -> Result<f64> {
         if microbatches.is_empty() {
             bail!("no microbatches");
         }
-        let man = &self.bundle.manifest;
         let grad = self.bundle.grad()?;
         let apply = self.bundle.apply()?;
         let n = self.params.len();
 
-        let mut gacc: Vec<xla::Literal> = man
-            .zeros_like_params()
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
+        // First microbatch reads the persistent zero literals; afterwards the
+        // accumulator is whatever the grad program last returned.
+        let mut gacc: Option<Vec<xla::Literal>> = None;
         let mut loss_sum = 0.0f64;
-        for (tokens, targets) in microbatches {
-            expect_shape(tokens, &[man.micro_batch, man.seq_len], "micro tokens")?;
-            let tok = tokens.to_literal()?;
-            let tgt = targets.to_literal()?;
+        for &(tok, tgt) in microbatches {
             let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 * n + 2);
             inputs.extend(self.params.iter());
-            inputs.extend(gacc.iter());
-            inputs.push(&tok);
-            inputs.push(&tgt);
+            match &gacc {
+                Some(g) => inputs.extend(g.iter()),
+                None => inputs.extend(self.grad_zero.iter()),
+            }
+            inputs.push(tok);
+            inputs.push(tgt);
             let mut outs = grad.run(&inputs)?;
             if outs.len() != n + 1 {
                 bail!("grad returned {} outputs, expected {}", outs.len(), n + 1);
             }
             let loss_lit = outs.pop().unwrap();
-            gacc = outs;
+            gacc = Some(outs);
             loss_sum += Tensor::from_literal(&loss_lit)?.item_f32()? as f64;
         }
+        let gacc = gacc.expect("at least one microbatch");
 
         self.step_count += 1;
-        let stepnum = Tensor::scalar_f32(self.step_count as f32).to_literal()?;
-        let lr_lit = Tensor::scalar_f32(lr).to_literal()?;
-        let nmicro = Tensor::scalar_f32(microbatches.len() as f32).to_literal()?;
+        let stepnum = self.upload(&Tensor::scalar_f32(self.step_count as f32))?;
+        let lr_lit = self.upload(&Tensor::scalar_f32(lr))?;
+        let nmicro = self.upload(&Tensor::scalar_f32(microbatches.len() as f32))?;
         let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(4 * n + 3);
         inputs.extend(self.params.iter());
         inputs.extend(self.m.iter());
@@ -178,8 +266,8 @@ impl<'a> Session<'a> {
     pub fn eval(&self, len: usize, tokens: &Tensor, targets: &Tensor) -> Result<(f64, f64)> {
         expect_shape(tokens, &[1, len], "eval tokens")?;
         let prog = self.bundle.eval(len)?;
-        let tok = tokens.to_literal()?;
-        let tgt = targets.to_literal()?;
+        let tok = self.upload(tokens)?;
+        let tgt = self.upload(targets)?;
         let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 2);
         inputs.extend(self.params.iter());
         inputs.push(&tok);
@@ -198,8 +286,8 @@ impl<'a> Session<'a> {
     pub fn eval_last(&self, len: usize, tokens: &Tensor, targets: &Tensor) -> Result<(f64, f64)> {
         expect_shape(tokens, &[1, len], "eval_last tokens")?;
         let prog = self.bundle.eval_last(len)?;
-        let tok = tokens.to_literal()?;
-        let tgt = targets.to_literal()?;
+        let tok = self.upload(tokens)?;
+        let tgt = self.upload(targets)?;
         let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 2);
         inputs.extend(self.params.iter());
         inputs.push(&tok);
@@ -222,7 +310,6 @@ impl<'a> Session<'a> {
         Ok((conv(&self.params)?, conv(&self.m)?, conv(&self.v)?))
     }
 }
-
 
 fn expect_shape(t: &Tensor, shape: &[usize], what: &str) -> Result<()> {
     if t.shape != shape {

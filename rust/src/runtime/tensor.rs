@@ -2,6 +2,8 @@
 //! from `xla::Literal`. This is the coordinator's lingua franca for batches,
 //! parameters (checkpointing) and metrics.
 
+use std::io::Write;
+
 use crate::substrate::json::Json;
 use anyhow::{anyhow, bail, Result};
 
@@ -105,6 +107,41 @@ impl Tensor {
         Ok(v[0])
     }
 
+    /// Payload size in bytes (both dtypes are 4-byte).
+    pub fn byte_len(&self) -> usize {
+        4 * self.len()
+    }
+
+    // ---- Bulk little-endian transport --------------------------------------
+    // Checkpoints and any future wire format move multi-MB parameter state;
+    // these helpers work at slice granularity (one memcpy on little-endian
+    // hosts) instead of pushing 4 bytes per element through an iterator.
+
+    /// Stream the payload as little-endian bytes into `w`.
+    pub fn write_le_bytes<W: Write>(&self, w: &mut W) -> Result<()> {
+        match &self.data {
+            TensorData::F32(v) => write_slice_le(w, v.as_slice(), |x| x.to_le_bytes()),
+            TensorData::I32(v) => write_slice_le(w, v.as_slice(), |x| x.to_le_bytes()),
+        }
+    }
+
+    /// Rebuild a tensor from the little-endian payload written by
+    /// `write_le_bytes`. `bytes` must be exactly `4 * shape.product()` long.
+    pub fn from_le_bytes(shape: &[usize], dtype: DType, bytes: &[u8]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != 4 * n {
+            bail!(
+                "payload is {} bytes, shape {shape:?} ({dtype:?}) needs {}",
+                bytes.len(),
+                4 * n
+            );
+        }
+        Ok(match dtype {
+            DType::F32 => Tensor::f32(shape, read_slice_le(bytes, f32::from_le_bytes)),
+            DType::I32 => Tensor::i32(shape, read_slice_le(bytes, i32::from_le_bytes)),
+        })
+    }
+
     // ---- Literal conversion ------------------------------------------------
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
@@ -160,6 +197,69 @@ impl Tensor {
     }
 }
 
+/// Bulk little-endian write of a `[f32]`/`[i32]` slice. On little-endian
+/// targets (every platform this repo runs on) the in-memory representation is
+/// already the wire format, so this is a single `write_all` over the
+/// reinterpreted slice; the per-element path only exists for big-endian hosts.
+fn write_slice_le<W: Write, T: Copy, const N: usize>(
+    w: &mut W,
+    v: &[T],
+    to_le: fn(T) -> [u8; N],
+) -> Result<()> {
+    if cfg!(target_endian = "little") {
+        // SAFETY: T is a 4-byte plain-old-data scalar (f32/i32) with no
+        // padding; viewing its memory as bytes is always valid.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+        };
+        w.write_all(bytes)?;
+    } else {
+        for &x in v {
+            w.write_all(&to_le(x))?;
+        }
+    }
+    Ok(())
+}
+
+/// Bulk little-endian read into a freshly allocated scalar vec (inverse of
+/// `write_slice_le`). Caller has already validated `bytes.len() % 4 == 0`.
+fn read_slice_le<T: Copy + Default>(bytes: &[u8], from_le: fn([u8; 4]) -> T) -> Vec<T> {
+    let n = bytes.len() / 4;
+    if cfg!(target_endian = "little") {
+        let mut out = vec![T::default(); n];
+        // SAFETY: out is n 4-byte POD scalars = bytes.len() bytes of valid,
+        // writable memory; every bit pattern is a valid f32/i32.
+        unsafe {
+            std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, bytes.len())
+                .copy_from_slice(bytes);
+        }
+        out
+    } else {
+        bytes
+            .chunks_exact(4)
+            .map(|c| from_le([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+/// Encode a borrowed i32 slice straight to a device literal, skipping the
+/// intermediate `Tensor` allocation (hot path: microbatch dispatch).
+pub fn literal_from_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// `xla::Literal` owns plain host memory and carries no thread-affine state
+/// (it is independent of the PJRT client), but the FFI wrapper does not
+/// declare `Send`. The prefetch pipeline encodes literals on a background
+/// thread and hands them to the step loop; this newtype carries them across.
+pub struct SendLiteral(pub xla::Literal);
+
+// SAFETY: a Literal is an owned host-side buffer + shape metadata; moving it
+// between threads is moving a heap allocation. No interior shared state.
+unsafe impl Send for SendLiteral {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +300,42 @@ mod tests {
         let t2 = Tensor::from_literal(&lit).unwrap();
         assert_eq!(t2.shape, vec![2, 3]);
         assert_eq!(t2.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_f32() {
+        let t = Tensor::f32(&[2, 3], vec![1.5, -2.25, 0.0, f32::MIN, f32::MAX, 3e-9]);
+        let mut buf = Vec::new();
+        t.write_le_bytes(&mut buf).unwrap();
+        assert_eq!(buf.len(), t.byte_len());
+        // Wire format is exactly per-element to_le_bytes.
+        assert_eq!(&buf[..4], &1.5f32.to_le_bytes());
+        let back = Tensor::from_le_bytes(&t.shape, DType::F32, &buf).unwrap();
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_i32() {
+        let t = Tensor::i32(&[4], vec![i32::MIN, -1, 0, i32::MAX]);
+        let mut buf = Vec::new();
+        t.write_le_bytes(&mut buf).unwrap();
+        let back = Tensor::from_le_bytes(&[4], DType::I32, &buf).unwrap();
+        assert_eq!(back.as_i32().unwrap(), t.as_i32().unwrap());
+    }
+
+    #[test]
+    fn le_bytes_rejects_wrong_length() {
+        assert!(Tensor::from_le_bytes(&[3], DType::F32, &[0u8; 8]).is_err());
+        assert!(Tensor::from_le_bytes(&[0], DType::I32, &[]).is_ok());
+    }
+
+    #[test]
+    fn literal_from_slice_matches_tensor_path() {
+        let data = vec![7i32, 8, 9, 10, 11, 12];
+        let lit = literal_from_i32(&[2, 3], &data).unwrap();
+        let t = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.as_i32().unwrap(), &data[..]);
     }
 
     #[test]

@@ -1,20 +1,48 @@
-//! Fixed-size thread pool + bounded SPSC prefetch channel (tokio is not in
-//! the offline crate set; threads + std::sync::mpsc satisfy the coordinator's
-//! needs: data prefetch and telemetry I/O off the training hot path).
+//! Fixed-size thread pool + bounded prefetch channels (tokio is not in the
+//! offline crate set; threads + std::sync::mpsc satisfy the coordinator's
+//! needs: data prefetch, device encode, and telemetry I/O off the training
+//! hot path).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Job counter shared between submitters, workers and `join`: a mutex-guarded
+/// count plus a condvar signaled when it reaches zero (no busy-wait).
+struct InFlight {
+    count: Mutex<usize>,
+    all_done: Condvar,
+}
+
+impl InFlight {
+    fn incr(&self) {
+        *self.count.lock().unwrap() += 1;
+    }
+
+    fn decr(&self) {
+        let mut n = self.count.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    fn wait_zero(&self) {
+        let mut n = self.count.lock().unwrap();
+        while *n != 0 {
+            n = self.all_done.wait(n).unwrap();
+        }
+    }
+}
 
 /// Work-queue thread pool. Jobs run FIFO; `join` blocks until the queue
 /// drains and all workers are idle.
 pub struct ThreadPool {
     tx: Option<SyncSender<Job>>,
     workers: Vec<JoinHandle<()>>,
-    in_flight: Arc<AtomicUsize>,
+    in_flight: Arc<InFlight>,
 }
 
 impl ThreadPool {
@@ -22,7 +50,8 @@ impl ThreadPool {
         let n = n.max(1);
         let (tx, rx) = sync_channel::<Job>(n * 4);
         let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new(AtomicUsize::new(0));
+        let in_flight =
+            Arc::new(InFlight { count: Mutex::new(0), all_done: Condvar::new() });
         let workers = (0..n)
             .map(|_| {
                 let rx = Arc::clone(&rx);
@@ -35,7 +64,7 @@ impl ThreadPool {
                     match job {
                         Ok(job) => {
                             job();
-                            in_flight.fetch_sub(1, Ordering::Release);
+                            in_flight.decr();
                         }
                         Err(_) => break, // sender dropped: shut down
                     }
@@ -46,7 +75,7 @@ impl ThreadPool {
     }
 
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.in_flight.fetch_add(1, Ordering::Acquire);
+        self.in_flight.incr();
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -54,11 +83,9 @@ impl ThreadPool {
             .expect("worker panicked");
     }
 
-    /// Busy-wait (with yield) until all submitted jobs completed.
+    /// Block until all submitted jobs completed (condvar wait, not a spin).
     pub fn join(&self) {
-        while self.in_flight.load(Ordering::Acquire) != 0 {
-            std::thread::yield_now();
-        }
+        self.in_flight.wait_zero();
     }
 }
 
@@ -101,10 +128,57 @@ impl<T: Send + 'static> Prefetcher<T> {
     }
 }
 
+/// Two-stage prefetch pipeline: stage 1 runs `make()` (e.g. window assembly),
+/// stage 2 runs `convert()` on each item (e.g. `Tensor -> xla::Literal`
+/// encode). Each stage owns a thread and a bounded channel of depth `depth`,
+/// so with `depth >= 2` the pipeline is double-buffered: the consumer drains
+/// device-ready items while assembly of batch k+1 and encode of batch k
+/// proceed concurrently. Item order is preserved end to end (single thread
+/// per stage, FIFO channels).
+pub struct Pipeline<T: Send + 'static> {
+    rx: Receiver<T>,
+    _stage1: JoinHandle<()>,
+    _stage2: JoinHandle<()>,
+}
+
+impl<T: Send + 'static> Pipeline<T> {
+    pub fn new<U, F, G>(depth: usize, mut make: F, mut convert: G) -> Self
+    where
+        U: Send + 'static,
+        F: FnMut() -> Option<U> + Send + 'static,
+        G: FnMut(U) -> T + Send + 'static,
+    {
+        let depth = depth.max(1);
+        let (tx1, rx1) = sync_channel::<U>(depth);
+        let (tx2, rx2) = sync_channel::<T>(depth);
+        let stage1 = std::thread::spawn(move || {
+            while let Some(item) = make() {
+                if tx1.send(item).is_err() {
+                    break; // stage 2 gone: consumer dropped
+                }
+            }
+        });
+        let stage2 = std::thread::spawn(move || {
+            while let Ok(item) = rx1.recv() {
+                if tx2.send(convert(item)).is_err() {
+                    break; // consumer dropped
+                }
+            }
+        });
+        Pipeline { rx: rx2, _stage1: stage1, _stage2: stage2 }
+    }
+
+    /// Next device-ready item; None when stage 1 is exhausted and the
+    /// pipeline has drained.
+    pub fn next(&self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn pool_runs_all_jobs() {
@@ -137,6 +211,27 @@ mod tests {
     }
 
     #[test]
+    fn pool_join_waits_for_slow_jobs() {
+        // join must actually block on the condvar until a deliberately slow
+        // job finishes, not return early on an empty queue snapshot.
+        let pool = ThreadPool::new(1);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_join_on_idle_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join(); // no jobs submitted: must not deadlock
+    }
+
+    #[test]
     fn prefetcher_yields_in_order_and_terminates() {
         let mut n = 0u32;
         let pf = Prefetcher::new(2, move || {
@@ -149,5 +244,74 @@ mod tests {
         });
         let got: Vec<u32> = std::iter::from_fn(|| pf.next()).collect();
         assert_eq!(got, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn pipeline_preserves_order_and_terminates() {
+        let mut n = 0u32;
+        let pl = Pipeline::new(
+            2,
+            move || {
+                n += 1;
+                if n <= 20 {
+                    Some(n)
+                } else {
+                    None
+                }
+            },
+            |x| x * 10,
+        );
+        let got: Vec<u32> = std::iter::from_fn(|| pl.next()).collect();
+        assert_eq!(got, (1..=20).map(|x| x * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pipeline_stages_overlap() {
+        // Stage 1 marks the highest item it has produced; by the time the
+        // consumer sees item k, stage 1 must have run ahead of it (double
+        // buffering), proving the stages are not in lockstep with the consumer.
+        let produced = Arc::new(AtomicU64::new(0));
+        let p = Arc::clone(&produced);
+        let mut n = 0u64;
+        let pl = Pipeline::new(
+            2,
+            move || {
+                n += 1;
+                if n <= 10 {
+                    p.store(n, Ordering::SeqCst);
+                    Some(n)
+                } else {
+                    None
+                }
+            },
+            |x| x,
+        );
+        // Let the pipeline fill its buffers before consuming anything.
+        let first = pl.next().unwrap();
+        assert_eq!(first, 1);
+        for _ in 0..200 {
+            if produced.load(Ordering::SeqCst) > 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(
+            produced.load(Ordering::SeqCst) > 1,
+            "stage 1 never ran ahead of the consumer"
+        );
+        while pl.next().is_some() {}
+    }
+
+    #[test]
+    fn pipeline_drops_cleanly_mid_stream() {
+        // Consumer drops with items still buffered: threads must exit (the
+        // Drop of the JoinHandles would not hang the test binary).
+        let mut n = 0u32;
+        let pl = Pipeline::new(1, move || {
+            n += 1;
+            Some(n) // infinite producer
+        }, |x| x);
+        assert_eq!(pl.next(), Some(1));
+        drop(pl);
     }
 }

@@ -111,6 +111,52 @@ fn probes_score_and_flops_mirror() {
 }
 
 #[test]
+fn pipelined_trainer_matches_synchronous_exactly() {
+    // Determinism guard for the two-stage prefetch pipeline: background
+    // assembly + device encode must hand the step loop the exact same batch
+    // stream as the synchronous in-loop path — bit-identical per-step losses,
+    // for both the fused and the grad-accum path.
+    if !have("mamba-tiny") {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let client = cpu_client().unwrap();
+    let bundle = Bundle::load(client, artifacts_root().join("mamba-tiny")).unwrap();
+    for grad_accum in [false, true] {
+        if grad_accum && bundle.manifest.batch_size % bundle.manifest.micro_batch != 0 {
+            continue;
+        }
+        let cfg = TrainCfg {
+            steps: 8,
+            max_lr: 3e-3,
+            grad_accum,
+            log_every: 3, // off-cadence sampling must not perturb the loop
+            eval_every: 0,
+            ..Default::default()
+        };
+        let run = |pipelined: bool| {
+            let mut trainer = Trainer::new(&bundle, cfg.clone());
+            trainer.quiet = true;
+            trainer.pipelined = pipelined;
+            trainer.run().unwrap()
+        };
+        let piped = run(true);
+        let sync = run(false);
+        assert_eq!(piped.metrics.losses.len(), sync.metrics.losses.len());
+        for (a, b) in piped.metrics.losses.iter().zip(sync.metrics.losses.iter()) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "grad_accum={grad_accum} step {}: pipelined {} != synchronous {}",
+                a.step,
+                a.loss,
+                b.loss
+            );
+        }
+    }
+}
+
+#[test]
 fn trainer_grad_accum_path_runs() {
     if !have("mamba-tiny") {
         eprintln!("skipping: artifacts missing");

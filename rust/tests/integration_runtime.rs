@@ -41,14 +41,22 @@ fn init_step_eval_roundtrip() {
 
     let out1 = sess.train_step(4e-4, &tok, &tgt).unwrap();
     assert!(out1.loss.is_finite() && out1.loss > 0.0, "loss {}", out1.loss);
-    assert_eq!(out1.router_load.len(), man.num_routers * man.num_experts);
+    // The Tensor-path train_step always decodes router telemetry.
+    let load = out1.router_load.as_ref().expect("train_step decodes router load");
+    assert_eq!(load.len(), man.num_routers * man.num_experts);
     // Each router's dispatch fractions sum to 1.
     for r in 0..man.num_routers {
-        let s: f32 = out1.router_load[r * man.num_experts..(r + 1) * man.num_experts]
-            .iter()
-            .sum();
+        let s: f32 = load[r * man.num_experts..(r + 1) * man.num_experts].iter().sum();
         assert!((s - 1.0).abs() < 1e-3, "router {r} load sums to {s}");
     }
+
+    // Opt-out path: skipping the telemetry decode must not change the loss
+    // stream, and must report no load.
+    let tok_lit = tok.to_literal().unwrap();
+    let tgt_lit = tgt.to_literal().unwrap();
+    let quiet = sess.train_step_device(4e-4, &tok_lit, &tgt_lit, false).unwrap();
+    assert!(quiet.router_load.is_none());
+    assert!(quiet.loss.is_finite());
 
     // Same batch again: loss must drop (the step actually updated params).
     let out2 = sess.train_step(4e-4, &tok, &tgt).unwrap();
@@ -151,4 +159,20 @@ fn grad_accum_matches_fused() {
             assert!((x - y).abs() < 5e-4 + 1e-3 * x.abs(), "{x} vs {y}");
         }
     }
+
+    // Perf guard: the grad accumulator is seeded from the persistent zero
+    // literals uploaded at init, so one accum step uploads exactly the
+    // microbatch encodes (2 per microbatch) plus 3 control scalars. A
+    // reintroduced per-step gradient-buffer upload would add num_leaves to
+    // the delta and trip this.
+    let before = accum.host_uploads();
+    for _ in 0..3 {
+        accum.train_step_accum(1e-3, &micro).unwrap();
+    }
+    let delta = accum.host_uploads() - before;
+    assert_eq!(
+        delta as usize,
+        3 * (2 * micro.len() + 3),
+        "unexpected per-step uploads: accum step uploaded more than batch + scalars"
+    );
 }

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Repo check gate: release build + tests + formatting. Run from anywhere.
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+
+# The cargo workspace lives wherever Cargo.toml is (repo root or rust/).
+if [[ -f "$repo_root/Cargo.toml" ]]; then
+  cd "$repo_root"
+elif [[ -f "$repo_root/rust/Cargo.toml" ]]; then
+  cd "$repo_root/rust"
+else
+  echo "error: no Cargo.toml under $repo_root or $repo_root/rust" >&2
+  exit 1
+fi
+
+cargo build --release
+cargo test -q
+cargo fmt --check
