@@ -1,10 +1,13 @@
 //! Head-to-head example: dense Mamba vs RoM at equal ACTIVE parameters
 //! (the paper's headline comparison), trained side by side on the same data
-//! with the same budget.
+//! with the same budget — literally side by side when ROM_JOBS>1: the two
+//! variants fan out across scheduler workers and the rows come back in
+//! order, byte-identical to a serial run.
 //!
 //!     cargo run --release --example compare_arch -- [steps]
 
-use rom::experiments::harness::{artifacts_root, run_variant};
+use rom::experiments::harness::{runnable_variants, RunSpec};
+use rom::experiments::scheduler::{collect_ok, default_jobs, run_sweep};
 use rom::substrate::bench::Reporter;
 
 fn main() -> anyhow::Result<()> {
@@ -17,22 +20,26 @@ fn main() -> anyhow::Result<()> {
         "dense Mamba vs RoM (equal active params, equal budget)",
         &["variant", "active", "total", "loss", "ppl@128", "ppl@512"],
     );
-    for name in ["mamba-tiny", "rom-tiny"] {
-        if !artifacts_root().join(name).exists() {
-            eprintln!("missing artifacts for {name}; run `make artifacts`");
-            continue;
-        }
-        let r = run_variant(name, steps, 3e-3)?;
+    // Same skip semantics as `rom experiment` (missing artifacts warn,
+    // ROM_VARIANT_FILTER honored).
+    let variants = runnable_variants(&["mamba-tiny", "rom-tiny"]);
+    let spec = RunSpec::new(steps, 3e-3);
+    let results = run_sweep(&variants, &spec, default_jobs());
+    let (rows, failed) = collect_ok(&variants, results);
+    for (_name, r) in rows {
         rep.row(&[
             r.name.clone(),
             format!("{:.2}M", r.active_params as f64 / 1e6),
             format!("{:.2}M", r.total_params as f64 / 1e6),
             format!("{:.3}", r.smoothed_loss),
-            r.ppl_at(128).map(|p| format!("{p:.2}")).unwrap_or("-".into()),
-            r.ppl_at(512).map(|p| format!("{p:.2}")).unwrap_or("-".into()),
+            r.ppl_at(128).map(|p| format!("{p:.2}")).unwrap_or_else(|| "-".into()),
+            r.ppl_at(512).map(|p| format!("{p:.2}")).unwrap_or_else(|| "-".into()),
         ]);
     }
     rep.print();
+    if failed > 0 {
+        anyhow::bail!("{failed} variant(s) failed — see warnings above");
+    }
     println!("expected shape (paper Fig 3): RoM reaches lower PPL than dense");
     println!("Mamba at the same active-parameter count.");
     Ok(())

@@ -7,7 +7,7 @@
 use rom::config::TrainCfg;
 use rom::coordinator::trainer::Trainer;
 use rom::experiments::harness::artifacts_root;
-use rom::runtime::artifact::{cpu_client, Bundle};
+use rom::runtime::artifact::Bundle;
 
 fn main() -> anyhow::Result<()> {
     let variant = std::env::args().nth(1).unwrap_or_else(|| "rom-tiny".into());
@@ -16,14 +16,13 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(120);
 
-    let client = cpu_client()?;
-    let bundle = Bundle::load(client, artifacts_root().join(&variant))?;
+    let bundle = Bundle::open(artifacts_root().join(&variant))?;
     println!(
         "{}: trained at T={}, evaluating at {:?}",
         variant, bundle.manifest.seq_len, bundle.manifest.eval_lens
     );
     let cfg = TrainCfg { steps, max_lr: 3e-3, log_every: (steps / 4).max(1), ..Default::default() };
-    let trainer = Trainer::new(&bundle, cfg);
+    let trainer = Trainer::new(std::sync::Arc::clone(&bundle), cfg);
     let report = trainer.run()?;
 
     println!("\nctx_len  ppl      (train T = {})", bundle.manifest.seq_len);

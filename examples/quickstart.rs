@@ -8,13 +8,12 @@ use rom::coordinator::schedule::CosineSchedule;
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::loader::Loader;
 use rom::experiments::harness::artifacts_root;
-use rom::runtime::artifact::{cpu_client, Bundle};
+use rom::runtime::artifact::Bundle;
 use rom::runtime::session::Session;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Open the PJRT CPU client and the AOT artifact bundle.
-    let client = cpu_client()?;
-    let bundle = Bundle::load(client, artifacts_root().join("rom-tiny"))?;
+    // 1. Open the AOT artifact bundle (on its own PJRT CPU client).
+    let bundle = Bundle::open(artifacts_root().join("rom-tiny"))?;
     let man = bundle.manifest.clone();
     println!(
         "loaded {}: {} leaves, {:.2}M total / {:.2}M active params",
@@ -25,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 2. Initialize model + optimizer state on device.
-    let mut sess = Session::init(&bundle, 0)?;
+    let mut sess = Session::init(std::sync::Arc::clone(&bundle), 0)?;
 
     // 3. Data pipeline: synthetic topic-Markov corpus -> batched loader.
     let cfg = TrainCfg::default();

@@ -12,7 +12,7 @@
 use rom::config::TrainCfg;
 use rom::coordinator::trainer::Trainer;
 use rom::experiments::harness::artifacts_root;
-use rom::runtime::artifact::{cpu_client, Bundle};
+use rom::runtime::artifact::Bundle;
 
 fn main() -> anyhow::Result<()> {
     let steps: u64 = std::env::args()
@@ -20,10 +20,9 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
 
-    let client = cpu_client()?;
     // rom-e2e = 4-layer Mamba + RoM(conv,gate,out; 8 experts top-1), with
     // scan_impl="pallas": the L1 kernels are in this artifact's HLO.
-    let bundle = Bundle::load(client, artifacts_root().join("rom-e2e"))?;
+    let bundle = Bundle::open(artifacts_root().join("rom-e2e"))?;
     println!(
         "e2e model: {} ({:.2}M total / {:.2}M active, pallas hot path)",
         bundle.manifest.name,
@@ -39,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         log_every: (steps / 20).max(1),
         ..TrainCfg::default()
     };
-    let mut trainer = Trainer::new(&bundle, cfg);
+    let mut trainer = Trainer::new(std::sync::Arc::clone(&bundle), cfg);
     trainer.checkpoint_dir = Some("checkpoints".into());
     let report = trainer.run()?;
 

@@ -3,9 +3,13 @@
 Signatures (mirrored in rust `runtime::artifact`):
   init : (seed i32[])                                   -> params
   step : (params, m, v, step f32, lr f32, tok, tgt)     -> (params, m, v, loss, load)
-  grad : (params, gacc, tok, tgt)                       -> (gacc', loss)
+  grad : (params, gacc, tok, tgt)                       -> (gacc', loss, load)
   apply: (params, m, v, gsum, step f32, lr f32, n f32)  -> (params, m, v)
   eval : (params, tok, tgt)                             -> (nll_sum, count)
+
+(grad's trailing `load` output is new: the rust session samples router
+telemetry from it on the grad-accum path, and still accepts legacy grad
+artifacts that emit only (gacc', loss).)
 
 AdamW is implemented inline (no optax in the artifact path): beta1=0.9,
 beta2=0.95, eps=1e-8, weight-decay 0.1, gradient clip 1.0 — the paper's §5.1
@@ -96,13 +100,17 @@ def make_step_fn(cfg: ModelConfig):
 
 
 def make_grad_fn(cfg: ModelConfig):
-    """Microbatch gradient-accumulation step (the grad-accum path)."""
+    """Microbatch gradient-accumulation step (the grad-accum path).
+
+    Returns the router load alongside (gacc', loss) so the coordinator's
+    expert monitor observes dispatch under --accum too (it samples the last
+    microbatch of each optimizer step)."""
 
     def grad(params, gacc, tokens, targets):
-        (_, (loss, _aux)), grads = jax.value_and_grad(
+        (_, (loss, aux)), grads = jax.value_and_grad(
             lambda p: loss_fn(cfg, p, tokens, targets, None), has_aux=True)(params)
         gacc = jax.tree_util.tree_map(jnp.add, gacc, grads)
-        return gacc, loss
+        return gacc, loss, aux.load
 
     return grad
 

@@ -61,14 +61,17 @@ def test_grad_accum_matches_fused():
     tgt = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 64)
 
     step = jax.jit(train.make_step_fn(cfg))
-    p_f, m_f, v_f, loss_f, _ = step(params, m, v, jnp.asarray(1.0),
-                                    jnp.asarray(1e-3), tok, tgt)
+    p_f, m_f, v_f, loss_f, load_f = step(params, m, v, jnp.asarray(1.0),
+                                         jnp.asarray(1e-3), tok, tgt)
 
     grad = jax.jit(train.make_grad_fn(cfg))
     apply = jax.jit(train.make_apply_fn(cfg))
     gacc = jax.tree_util.tree_map(jnp.zeros_like, params)
-    gacc, l1 = grad(params, gacc, tok[:2], tgt[:2])
-    gacc, l2 = grad(params, gacc, tok[2:], tgt[2:])
+    gacc, l1, load1 = grad(params, gacc, tok[:2], tgt[:2])
+    gacc, l2, _load2 = grad(params, gacc, tok[2:], tgt[2:])
+    # grad's telemetry output mirrors step's (R, E) dispatch-fraction shape,
+    # so the rust session can decode either program's load identically.
+    assert np.asarray(load1).shape == np.asarray(load_f).shape
     p_a, m_a, v_a = apply(params, m, v, gacc, jnp.asarray(1.0),
                           jnp.asarray(1e-3), jnp.asarray(2.0))
 
@@ -78,6 +81,23 @@ def test_grad_accum_matches_fused():
                     jax.tree_util.tree_leaves(p_a)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=5e-4, atol=1e-6)
+
+
+def test_grad_emits_router_load():
+    """The grad artifact's new trailing output: per-router dispatch
+    fractions, same semantics as the fused step's load output."""
+    cfg = tiny(rom_targets=["conv", "gate", "out"], routing="shared",
+               rom=MoEConfig(num_experts=4))
+    params, _, _ = fresh_state(cfg)
+    grad = jax.jit(train.make_grad_fn(cfg))
+    gacc = jax.tree_util.tree_map(jnp.zeros_like, params)
+    tok = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0, 64)
+    _, loss, load = grad(params, gacc, tok, tok)
+    load = np.asarray(load)
+    assert load.ndim == 2 and load.shape[1] == 4
+    np.testing.assert_allclose(load.sum(axis=-1), np.ones(load.shape[0]),
+                               rtol=1e-5)
+    assert float(loss) > 0
 
 
 def test_adamw_step_math():

@@ -1,21 +1,25 @@
 //! Runtime micro-benchmarks (§Perf): artifact compile latency, fused-step
 //! latency, eval latency, host<->literal conversion cost, the grad-accum
-//! path vs the fused path, and checkpoint save/load. These are the numbers
-//! the L3 optimization loop iterates against (EXPERIMENTS.md §Perf L3 log).
+//! path vs the fused path, checkpoint save/load, and the parallel variant
+//! sweep (serial vs scheduler workers). These are the numbers the L3
+//! optimization loop iterates against (EXPERIMENTS.md §Perf L3 log).
 //!
 //! Besides the human-readable report, this bench emits machine-readable
 //! `BENCH_runtime.json` at the repo root (override the path with
 //! ROM_BENCH_JSON) so subsequent PRs can track the perf trajectory:
 //! steady-state tokens/sec (first-step XLA compile excluded by warmup),
-//! checkpoint save/load wall time, and peak host RSS.
+//! checkpoint save/load wall time, sweep wall-clock + speedup, and peak
+//! host RSS.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use rom::coordinator::checkpoint::Checkpoint;
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::loader::Loader;
-use rom::experiments::harness::artifacts_root;
-use rom::runtime::artifact::{cpu_client, Bundle};
+use rom::experiments::harness::{artifacts_root, have_variant, RunSpec};
+use rom::experiments::scheduler::run_sweep;
+use rom::runtime::artifact::Bundle;
 use rom::runtime::session::Session;
 use rom::runtime::tensor::Tensor;
 use rom::substrate::bench::{bench, time_once};
@@ -44,8 +48,7 @@ fn main() {
         eprintln!("artifacts/{variant} missing — run `make artifacts`");
         return;
     }
-    let client = cpu_client().unwrap();
-    let bundle = Bundle::load(client, artifacts_root().join(&variant)).unwrap();
+    let bundle = Bundle::open(artifacts_root().join(&variant)).unwrap();
     let man = bundle.manifest.clone();
     println!("== runtime micro-benches on {variant} ==");
 
@@ -57,7 +60,7 @@ fn main() {
     let (_, t_eval) = time_once(|| bundle.eval(man.eval_lens[0]).unwrap());
     println!("compile eval:  {t_eval:.2}s");
 
-    let mut sess = Session::init(&bundle, 0).unwrap();
+    let mut sess = Session::init(Arc::clone(&bundle), 0).unwrap();
     let corpus = Corpus::new(CorpusSpec::default(), 17);
     let stream = corpus.generate(0, 64 * man.batch_size * (man.seq_len + 1));
     let mut loader = Loader::new(stream, man.batch_size, man.seq_len, 0);
@@ -96,7 +99,7 @@ fn main() {
         let refs: Vec<(&xla::Literal, &xla::Literal)> =
             lits.iter().map(|(t, g)| (t, g)).collect();
         let s = bench("grad-accum step (micro path)", 1, 6, || {
-            sess.train_step_accum_device(1e-3, &refs).unwrap();
+            sess.train_step_accum_device(1e-3, &refs, false).unwrap();
         });
         accum_median_s = Some(s.median_secs());
     }
@@ -143,6 +146,110 @@ fn main() {
     let ckpt_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
     let _ = std::fs::remove_file(&path);
 
+    // Snapshot the single-session high-water RSS BEFORE the sweep section:
+    // the sweep runs 8 extra training jobs with their own clients, and the
+    // trajectory field must keep measuring the hot path it always measured.
+    let single_session_rss = peak_rss_bytes();
+
+    // Parallel variant sweep: the experiment scheduler's wall-clock win.
+    // >= 4 short training jobs (cycling the available variants), serial vs
+    // ROM_SWEEP_JOBS workers (default 2 — the speedup bound of a 2-core
+    // box). Each job opens its own PJRT client and compiles its own
+    // programs, so compile latency parallelizes along with training.
+    let mut sweep_fields: Vec<(&str, Json)> = Vec::new();
+    {
+        let candidates =
+            ["rom-tiny", "mamba-tiny", "samba-e2", "rom-small", "mamba-small", "samba-e2-rom"];
+        let avail: Vec<String> =
+            candidates.iter().filter(|n| have_variant(n)).map(|s| s.to_string()).collect();
+        if avail.is_empty() {
+            eprintln!("sweep section skipped: no sweep candidate artifacts present");
+        } else {
+            let sweep_steps = env_u64("ROM_SWEEP_STEPS", 12);
+            // Honor the operator's worker count exactly (ROM_SWEEP_JOBS=1
+            // records an honest 1.0x baseline); only 0 is clamped.
+            let sweep_jobs = env_u64("ROM_SWEEP_JOBS", 2).max(1) as usize;
+            // 4 jobs keeps the section's wall-clock bounded while exercising
+            // queueing (more jobs than workers); cycle the available variants.
+            let n_jobs = env_u64("ROM_SWEEP_NUM_JOBS", 4).max(2) as usize;
+            let variants: Vec<String> =
+                (0..n_jobs).map(|i| avail[i % avail.len()].clone()).collect();
+            let mut spec = RunSpec::new(sweep_steps, 3e-3);
+            spec.final_eval = false;
+            spec.quiet = true;
+            println!(
+                "== parallel sweep: {n_jobs} jobs x {sweep_steps} steps over {:?} ==",
+                avail
+            );
+            let (serial_res, serial_s) = time_once(|| run_sweep(&variants, &spec, 1));
+            let (par_res, par_s) = time_once(|| run_sweep(&variants, &spec, sweep_jobs));
+            // A failed sweep job must not panic the bench: the trajectory
+            // JSON written below is the deliverable, so report the failure
+            // and skip only the sweep fields (the scheduler's own error
+            // isolation, applied here too).
+            let errors: Vec<String> = serial_res
+                .iter()
+                .chain(par_res.iter())
+                .filter_map(|r| r.as_ref().err().map(|e| format!("{e:#}")))
+                .collect();
+            // Nondeterminism gets the same isolation as job errors: report
+            // loudly, omit only the sweep fields, and keep the rest of the
+            // trajectory JSON (the tests are where a mismatch hard-fails).
+            let mismatches: Vec<String> = if errors.is_empty() {
+                serial_res
+                    .iter()
+                    .zip(par_res.iter())
+                    .filter_map(|(a, b)| {
+                        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+                        (a.final_loss.to_bits() != b.final_loss.to_bits()).then(|| {
+                            format!(
+                                "{}: serial {} vs parallel {}",
+                                a.name, a.final_loss, b.final_loss
+                            )
+                        })
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            if errors.is_empty() && mismatches.is_empty() {
+                let speedup = serial_s / par_s.max(1e-9);
+                println!(
+                    "sweep serial {serial_s:.2}s, {sweep_jobs}-worker {par_s:.2}s \
+                     -> {speedup:.2}x (losses bit-identical)"
+                );
+                sweep_fields.push(("sweep_num_jobs", Json::num(n_jobs as f64)));
+                sweep_fields.push(("sweep_steps_per_job", Json::num(sweep_steps as f64)));
+                sweep_fields.push(("sweep_workers", Json::num(sweep_jobs as f64)));
+                sweep_fields.push(("sweep_serial_s", Json::num(serial_s)));
+                sweep_fields.push(("sweep_parallel_s", Json::num(par_s)));
+                sweep_fields.push(("sweep_speedup", Json::num(speedup)));
+                // Process-lifetime peak including the sweep's worker clients
+                // (distinct from peak_rss_bytes, which excludes the sweep).
+                if let Some(rss) = peak_rss_bytes() {
+                    sweep_fields.push(("sweep_peak_rss_bytes", Json::num(rss as f64)));
+                }
+            } else if errors.is_empty() {
+                eprintln!(
+                    "sweep section omitted from BENCH json: {} determinism mismatch(es)",
+                    mismatches.len()
+                );
+                for e in &mismatches {
+                    eprintln!("  sweep: {e}");
+                }
+            } else {
+                // Determinism was NOT compared — job failures preempt it.
+                eprintln!(
+                    "sweep section omitted from BENCH json: {} job error(s) (determinism not compared)",
+                    errors.len()
+                );
+                for e in &errors {
+                    eprintln!("  sweep: {e}");
+                }
+            }
+        }
+    }
+
     // Machine-readable trajectory record.
     let mut fields = vec![
         ("variant", Json::str(variant.as_str())),
@@ -157,7 +264,8 @@ fn main() {
     if let Some(a) = accum_median_s {
         fields.push(("grad_accum_step_ms", Json::num(s_ms(a))));
     }
-    if let Some(rss) = peak_rss_bytes() {
+    fields.extend(sweep_fields);
+    if let Some(rss) = single_session_rss {
         fields.push(("peak_rss_bytes", Json::num(rss as f64)));
     }
     let out_path = bench_json_path();
@@ -167,4 +275,8 @@ fn main() {
 
 fn s_ms(secs: f64) -> f64 {
     secs * 1e3
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }

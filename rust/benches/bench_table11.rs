@@ -1,8 +1,11 @@
 //! cargo bench target regenerating the paper's table11 on the scaled workload
 //! (DESIGN.md §4). Reduced default budget (25 steps/variant); set
-//! ROM_STEPS for the full run recorded in EXPERIMENTS.md.
+//! ROM_STEPS for the full run recorded in EXPERIMENTS.md; set ROM_JOBS>1 to
+//! fan variants out across scheduler workers (table11 measures throughput
+//! and therefore always runs serially, whatever ROM_JOBS says).
 fn main() {
-    let rep = rom::experiments::tables::run_experiment("table11", 25)
+    let jobs = rom::experiments::scheduler::default_jobs();
+    let rep = rom::experiments::tables::run_experiment("table11", 25, jobs)
         .expect("experiment table11 failed (run `make artifacts` first)");
     rep.print();
 }

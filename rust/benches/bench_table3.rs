@@ -1,8 +1,10 @@
 //! cargo bench target regenerating the paper's table3 on the scaled workload
 //! (DESIGN.md §4). Reduced default budget (60 steps/variant); set
-//! ROM_STEPS for the full run recorded in EXPERIMENTS.md.
+//! ROM_STEPS for the full run recorded in EXPERIMENTS.md; set ROM_JOBS>1 to
+//! fan variants out across scheduler workers (rows stay byte-identical).
 fn main() {
-    let rep = rom::experiments::tables::run_experiment("table3", 60)
+    let jobs = rom::experiments::scheduler::default_jobs();
+    let rep = rom::experiments::tables::run_experiment("table3", 60, jobs)
         .expect("experiment table3 failed (run `make artifacts` first)");
     rep.print();
 }

@@ -153,6 +153,60 @@ impl Checkpoint {
     }
 }
 
+/// Checkpoint retention: among `variant`'s checkpoints in `dir` at or below
+/// `newest_step` (the step the caller just saved — filenames encode it as
+/// `<variant>-step<N>.ckpt`), keep only the newest `keep` and delete the
+/// rest. Returns the deleted paths. `keep` is clamped to at least 1 —
+/// retention never deletes the newest checkpoint. Files with a step ABOVE
+/// `newest_step` are foreign (stale leftovers of a longer previous run in
+/// the same directory): they are never deleted and never counted toward
+/// `keep`, so a shorter re-run cannot prune away its own fresh checkpoints
+/// in favor of another run's. Files that don't match the naming scheme
+/// (other variants, in-flight `.tmp` files) are never touched either.
+pub fn prune_checkpoints(
+    dir: &Path,
+    variant: &str,
+    keep: usize,
+    newest_step: u64,
+) -> Result<Vec<std::path::PathBuf>> {
+    let prefix = format!("{variant}-step");
+    let mut found: Vec<(u64, std::path::PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("listing checkpoint dir {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix(&prefix) else { continue };
+        let Some(step_str) = rest.strip_suffix(".ckpt") else { continue };
+        let Ok(step) = step_str.parse::<u64>() else { continue };
+        if step > newest_step {
+            continue; // foreign: a previous, longer run's checkpoint
+        }
+        found.push((step, entry.path()));
+    }
+    found.sort_by_key(|(step, _)| *step);
+    let keep = keep.max(1);
+    if found.len() <= keep {
+        return Ok(Vec::new());
+    }
+    let cut = found.len() - keep;
+    let mut removed = Vec::with_capacity(cut);
+    for (_, path) in found.drain(..cut) {
+        match std::fs::remove_file(&path) {
+            Ok(()) => removed.push(path),
+            // Already gone (operator cleanup or a concurrent pruner racing
+            // between read_dir and here): the goal state is reached.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("pruning checkpoint {}", path.display()));
+            }
+        }
+    }
+    Ok(removed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,6 +324,72 @@ mod tests {
         let err = Checkpoint::load(&path).unwrap_err();
         assert!(err.to_string().contains("overflows payload"), "got: {err:#}");
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn prune_keeps_newest_n() {
+        let dir = std::env::temp_dir().join("rom_ckpt_prune1");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for step in [2u64, 4, 10, 6, 8] {
+            std::fs::write(dir.join(format!("tiny-step{step}.ckpt")), b"x").unwrap();
+        }
+        // Non-matching files must survive: other variant, tmp, junk.
+        std::fs::write(dir.join("other-step1.ckpt"), b"x").unwrap();
+        std::fs::write(dir.join("tiny-step3.tmp"), b"x").unwrap();
+        std::fs::write(dir.join("tiny-stepnotanumber.ckpt"), b"x").unwrap();
+
+        let removed = prune_checkpoints(&dir, "tiny", 2, 10).unwrap();
+        let mut removed_names: Vec<String> = removed
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        removed_names.sort();
+        assert_eq!(removed_names, vec!["tiny-step2.ckpt", "tiny-step4.ckpt", "tiny-step6.ckpt"]);
+        for survivor in ["tiny-step8.ckpt", "tiny-step10.ckpt", "other-step1.ckpt",
+                         "tiny-step3.tmp", "tiny-stepnotanumber.ckpt"] {
+            assert!(dir.join(survivor).exists(), "{survivor} was wrongly pruned");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_ignores_stale_higher_step_checkpoints() {
+        // A shorter re-run in a directory holding a longer previous run's
+        // checkpoints must never prune its own fresh saves in their favor.
+        let dir = std::env::temp_dir().join("rom_ckpt_prune3");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for step in [40u64, 50, 400, 500] {
+            std::fs::write(dir.join(format!("v-step{step}.ckpt")), b"x").unwrap();
+        }
+        // Current run just saved step 50 with keep=1: only step 40 (this
+        // run's older save) goes; steps 400/500 are foreign and survive.
+        let removed = prune_checkpoints(&dir, "v", 1, 50).unwrap();
+        assert_eq!(removed.len(), 1);
+        assert!(removed[0].ends_with("v-step40.ckpt"));
+        for survivor in ["v-step50.ckpt", "v-step400.ckpt", "v-step500.ckpt"] {
+            assert!(dir.join(survivor).exists(), "{survivor} was wrongly pruned");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_noop_below_threshold_and_clamps_keep() {
+        let dir = std::env::temp_dir().join("rom_ckpt_prune2");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("v-step1.ckpt"), b"x").unwrap();
+        std::fs::write(dir.join("v-step2.ckpt"), b"x").unwrap();
+        // keep >= count: nothing removed.
+        assert!(prune_checkpoints(&dir, "v", 2, 2).unwrap().is_empty());
+        assert!(prune_checkpoints(&dir, "v", 5, 2).unwrap().is_empty());
+        // keep = 0 clamps to 1: the newest checkpoint always survives.
+        let removed = prune_checkpoints(&dir, "v", 0, 2).unwrap();
+        assert_eq!(removed.len(), 1);
+        assert!(dir.join("v-step2.ckpt").exists());
+        assert!(!dir.join("v-step1.ckpt").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -2,6 +2,16 @@
 //!
 //! Held-out streams come from the same corpus generator with a disjoint seed
 //! space; PPL(ctx) = exp(sum NLL / tokens) over `n_seq` sequences per length.
+//!
+//! Every sequence is independent, so the host-side work — Markov stream
+//! generation and (1, L) tensor assembly — fans out across eval workers
+//! (scoped threads, one chunk per core). Device execution stays on the
+//! caller's thread: PJRT handles are thread-affine until the FFI wrapper
+//! declares `Send` (see `runtime::artifact` module docs), and a single
+//! serial pass over pre-assembled sequences keeps the NLL accumulation order
+//! — and therefore the reported PPL, bit for bit — identical to the fully
+//! serial path. Variant-level parallelism (the experiment scheduler) stacks
+//! on top of this.
 
 use anyhow::Result;
 
@@ -9,7 +19,71 @@ use crate::data::corpus::Corpus;
 use crate::runtime::session::Session;
 use crate::runtime::tensor::Tensor;
 
-/// PPL at every eval length baked into the bundle.
+/// One pre-assembled held-out sequence: context length + (1, ctx) pair.
+struct EvalSeq {
+    ctx: usize,
+    tokens: Tensor,
+    targets: Tensor,
+}
+
+/// Build the held-out sequence `i` for context length `ctx`. The stream seed
+/// lives in a disjoint space from training streams (train streams use small
+/// seeds) and depends only on (seed, i), so the same streams are reused
+/// across lengths — the length extrapolation comparison (Fig 4) evaluates
+/// the same text at every ctx.
+fn held_out_seq(corpus: &Corpus, seed: u64, ctx: usize, i: u64) -> EvalSeq {
+    let stream =
+        corpus.generate(0xE7A1_0000u64.wrapping_add(seed).wrapping_add(i), ctx + 1);
+    EvalSeq {
+        ctx,
+        tokens: Tensor::i32(&[1, ctx], stream[..ctx].to_vec()),
+        targets: Tensor::i32(&[1, ctx], stream[1..ctx + 1].to_vec()),
+    }
+}
+
+/// Below this many total tokens of generation, thread spawn overhead rivals
+/// the Markov sampling itself: the periodic in-training cadence (n_seq=4)
+/// stays serial, while the final sweep (n_seq=8 over all lens) and anything
+/// larger fans out.
+const PARALLEL_ASSEMBLY_MIN_TOKENS: usize = 4096;
+
+/// Assemble all (ctx, i) sequences, fanning the host-side generation out
+/// over scoped worker threads when the work is large enough to pay for
+/// them. Output order is exactly the serial iteration order (lens-major,
+/// then sequence index).
+fn assemble_seqs(corpus: &Corpus, seed: u64, n_seq: usize, lens: &[usize]) -> Vec<EvalSeq> {
+    let items: Vec<(usize, u64)> = lens
+        .iter()
+        .flat_map(|&ctx| (0..n_seq as u64).map(move |i| (ctx, i)))
+        .collect();
+    let total_tokens: usize = items.iter().map(|&(ctx, _)| ctx + 1).sum();
+    // Cap the fan-out: 8 generator threads saturate the assembly long before
+    // a big box's core count, and under `--jobs N` every scheduler worker
+    // runs its own evals — unbounded per-eval spawning would multiply.
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+        .min(items.len().max(1));
+    if workers <= 1 || items.len() <= 1 || total_tokens < PARALLEL_ASSEMBLY_MIN_TOKENS {
+        return items.iter().map(|&(ctx, i)| held_out_seq(corpus, seed, ctx, i)).collect();
+    }
+    let chunk = items.len().div_ceil(workers);
+    let mut out: Vec<Option<EvalSeq>> = items.iter().map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (chunk_items, chunk_out) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (slot, &(ctx, i)) in chunk_out.iter_mut().zip(chunk_items.iter()) {
+                    *slot = Some(held_out_seq(corpus, seed, ctx, i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|s| s.expect("eval worker left a hole")).collect()
+}
+
+/// PPL at every eval length baked into the bundle. Host assembly is
+/// parallel; the result is bit-identical to evaluating serially.
 pub fn eval_ppl_sweep(
     sess: &Session,
     corpus: &Corpus,
@@ -17,9 +91,16 @@ pub fn eval_ppl_sweep(
     n_seq: usize,
 ) -> Result<Vec<(usize, f64)>> {
     let lens = sess.bundle.manifest.eval_lens.clone();
-    lens.into_iter()
-        .map(|ctx| Ok((ctx, eval_ppl(sess, corpus, seed, n_seq, ctx)?)))
-        .collect()
+    let seqs = assemble_seqs(corpus, seed, n_seq, &lens);
+    // Row k consumes exactly its own n_seq assembled sequences (lens-major
+    // layout) — indexing by range rather than matching on ctx value keeps
+    // the old per-length loop's semantics even if a manifest repeats a
+    // length in eval_lens.
+    let mut out = Vec::with_capacity(lens.len());
+    for (k, &ctx) in lens.iter().enumerate() {
+        out.push((ctx, ppl_over(sess, seqs[k * n_seq..(k + 1) * n_seq].iter())?));
+    }
+    Ok(out)
 }
 
 /// PPL at one context length.
@@ -30,14 +111,17 @@ pub fn eval_ppl(
     n_seq: usize,
     ctx: usize,
 ) -> Result<f64> {
+    let seqs = assemble_seqs(corpus, seed, n_seq, &[ctx]);
+    ppl_over(sess, seqs.iter())
+}
+
+/// Serial device pass: summed NLL / tokens over the given sequences, in
+/// iteration order (the accumulation order IS the determinism contract).
+fn ppl_over<'a>(sess: &Session, seqs: impl Iterator<Item = &'a EvalSeq>) -> Result<f64> {
     let mut nll_sum = 0.0;
     let mut count = 0.0;
-    for i in 0..n_seq {
-        // Disjoint held-out stream space (train streams use small seeds).
-        let stream = corpus.generate(0xE7A1_0000u64.wrapping_add(seed).wrapping_add(i as u64), ctx + 1);
-        let tokens = Tensor::i32(&[1, ctx], stream[..ctx].to_vec());
-        let targets = Tensor::i32(&[1, ctx], stream[1..ctx + 1].to_vec());
-        let (nll, c) = sess.eval(ctx, &tokens, &targets)?;
+    for seq in seqs {
+        let (nll, c) = sess.eval(seq.ctx, &seq.tokens, &seq.targets)?;
         nll_sum += nll;
         count += c;
     }

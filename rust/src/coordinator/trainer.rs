@@ -12,19 +12,20 @@
 //! the synchronous in-loop path (the determinism guard in
 //! tests/integration_coordinator.rs pins the two paths to identical losses).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::TrainCfg;
-use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::checkpoint::{prune_checkpoints, Checkpoint};
 use crate::coordinator::eval::eval_ppl_sweep;
 use crate::coordinator::metrics::{Metrics, Throughput};
 use crate::coordinator::monitor::ExpertMonitor;
 use crate::coordinator::schedule::CosineSchedule;
 use crate::data::corpus::{Corpus, CorpusSpec};
 use crate::data::loader::{Batch, Loader};
-use crate::info;
+use crate::{info, warnln};
 use crate::runtime::artifact::{Bundle, Manifest};
 use crate::runtime::session::Session;
 use crate::runtime::tensor::{literal_from_i32, SendLiteral};
@@ -70,27 +71,38 @@ fn encode_batch(man: &Manifest, grad_accum: bool, batch: &Batch) -> Result<Devic
     }
 }
 
-pub struct Trainer<'a> {
-    pub bundle: &'a Bundle,
+pub struct Trainer {
+    pub bundle: Arc<Bundle>,
     pub train_cfg: TrainCfg,
     pub corpus_seed: u64,
     pub checkpoint_dir: Option<PathBuf>,
+    /// Keep only the newest N checkpoints of this variant in
+    /// `checkpoint_dir` (`None` = unlimited). Pruning runs after every save,
+    /// so long runs with a `checkpoint_every` cadence hold disk usage at
+    /// N checkpoints instead of growing without bound.
+    pub checkpoint_keep: Option<usize>,
     pub quiet: bool,
     /// Background assembly + encode (default). `false` runs both stages
     /// inline in the step loop — slower, but the same encode function on the
     /// same loader stream; kept as the baseline for the determinism guard.
     pub pipelined: bool,
+    /// Run the final multi-length PPL sweep after the loop (default). Probe
+    /// runs and wall-clock benches turn it off; the ROM_SKIP_EVAL=1 env
+    /// escape hatch still applies on top.
+    pub final_eval: bool,
 }
 
-impl<'a> Trainer<'a> {
-    pub fn new(bundle: &'a Bundle, train_cfg: TrainCfg) -> Trainer<'a> {
+impl Trainer {
+    pub fn new(bundle: Arc<Bundle>, train_cfg: TrainCfg) -> Trainer {
         Trainer {
             bundle,
             train_cfg,
             corpus_seed: 17,
             checkpoint_dir: None,
+            checkpoint_keep: None,
             quiet: false,
             pipelined: true,
+            final_eval: true,
         }
     }
 
@@ -104,6 +116,13 @@ impl<'a> Trainer<'a> {
     /// Run the full training loop; returns the report (and writes checkpoints
     /// if a directory is configured).
     pub fn run(&self) -> Result<TrainReport> {
+        Ok(self.run_session()?.0)
+    }
+
+    /// Like `run`, but also hands back the trained session so callers can
+    /// keep using the trained parameters (downstream probes, custom evals)
+    /// without re-rolling their own training loop.
+    pub fn run_session(&self) -> Result<(TrainReport, Session)> {
         let man = self.bundle.manifest.clone();
         let cfg = self.train_cfg.clone();
         let sched = CosineSchedule::new(cfg.max_lr, cfg.steps, cfg.warmup_ratio);
@@ -131,7 +150,7 @@ impl<'a> Trainer<'a> {
             Box::new(move || Some(encode_batch(&enc_man, grad_accum, &loader.next_batch())))
         };
 
-        let mut sess = Session::init(self.bundle, 0)?;
+        let mut sess = Session::init(Arc::clone(&self.bundle), 0)?;
         let mut metrics = Metrics::default();
         let mut thp = Throughput::new();
         let mut monitor = ExpertMonitor::new(man.num_routers, man.num_experts);
@@ -145,21 +164,22 @@ impl<'a> Trainer<'a> {
             // step (the balance EMA converges the same either way).
             let decode_load =
                 cfg.log_every > 0 && (step % cfg.log_every == 0 || step == steps);
-            let loss = match &batch {
+            let out = match &batch {
                 DeviceBatch::Micro(micro) => {
                     let refs: Vec<(&xla::Literal, &xla::Literal)> =
                         micro.iter().map(|(t, g)| (&t.0, &g.0)).collect();
-                    sess.train_step_accum_device(lr, &refs)?
+                    sess.train_step_accum_device(lr, &refs, decode_load)?
                 }
                 DeviceBatch::Fused { tokens, targets } => {
-                    let out =
-                        sess.train_step_device(lr, &tokens.0, &targets.0, decode_load)?;
-                    if let Some(load) = &out.router_load {
-                        monitor.observe(load);
-                    }
-                    out.loss
+                    sess.train_step_device(lr, &tokens.0, &targets.0, decode_load)?
                 }
             };
+            // Both paths feed the balance monitor now: the accum path samples
+            // the last microbatch's load (None on legacy grad artifacts).
+            if let Some(load) = &out.router_load {
+                monitor.observe(load);
+            }
+            let loss = out.loss;
             thp.record(tokens_per_step);
             metrics.log_loss(step, loss, lr as f64, thp.total_tokens());
 
@@ -189,14 +209,17 @@ impl<'a> Trainer<'a> {
             self.save_checkpoint(&sess, dir, steps)?;
         }
 
-        // ROM_SKIP_EVAL=1 skips the final PPL sweep (saves the per-length
-        // XLA compiles; used by the fast `cargo bench` sweep).
-        let eval_ppl = if std::env::var("ROM_SKIP_EVAL").as_deref() == Ok("1") {
+        // ROM_SKIP_EVAL=1 (or `final_eval = false`) skips the final PPL sweep
+        // — saves the per-length XLA compiles; used by probe runs and the
+        // fast `cargo bench` sweep.
+        let eval_ppl = if !self.final_eval
+            || std::env::var("ROM_SKIP_EVAL").as_deref() == Ok("1")
+        {
             Vec::new()
         } else {
             eval_ppl_sweep(&sess, &corpus, cfg.data_seed + 999, 8)?
         };
-        Ok(TrainReport {
+        let report = TrainReport {
             final_loss: metrics.last_loss().unwrap_or(f64::NAN),
             smoothed_loss: metrics.smoothed_loss(10).unwrap_or(f64::NAN),
             // Steady-state rate (sliding window) — excludes the one-time XLA
@@ -205,16 +228,30 @@ impl<'a> Trainer<'a> {
             metrics,
             balance: monitor.report(),
             eval_ppl,
-        })
+        };
+        Ok((report, sess))
     }
 
-    fn save_checkpoint(&self, sess: &Session, dir: &PathBuf, step: u64) -> Result<()> {
+    fn save_checkpoint(&self, sess: &Session, dir: &Path, step: u64) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let (params, m, v) = sess.export()?;
         let ck = Checkpoint { step, params, m, v };
         let path = dir.join(format!("{}-step{step}.ckpt", self.bundle.manifest.name));
         ck.save(&path)?;
         info!("checkpoint written: {}", path.display());
+        if let Some(keep) = self.checkpoint_keep {
+            // Retention is best-effort: the checkpoint itself is already
+            // safely on disk, so a pruning failure warns instead of
+            // aborting the training run.
+            match prune_checkpoints(dir, &self.bundle.manifest.name, keep, step) {
+                Ok(pruned) => {
+                    for p in pruned {
+                        info!("pruned old checkpoint: {}", p.display());
+                    }
+                }
+                Err(e) => warnln!("checkpoint retention failed (run continues): {e:#}"),
+            }
+        }
         Ok(())
     }
 }

@@ -3,16 +3,21 @@
 //! paper-table columns (active/total params, FLOPS, PPL@len...).
 //!
 //! Every bench_* target and `rom experiment <id>` row goes through
-//! `run_variant`, so table rows are produced identically everywhere.
+//! `run_variant_spec`, so table rows are produced identically everywhere —
+//! including under the parallel scheduler (`experiments::scheduler`), whose
+//! workers call it with nothing shared between variants: each call opens its
+//! own PJRT client and bundle, which is what makes variant fan-out safe
+//! without any assumption about PJRT handle thread-affinity.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::config::TrainCfg;
 use crate::coordinator::trainer::Trainer;
-use crate::runtime::artifact::{cpu_client, Bundle};
+use crate::runtime::artifact::Bundle;
+use crate::warnln;
 
 pub fn artifacts_root() -> PathBuf {
     // target/ binaries run from the workspace root; override via env.
@@ -24,6 +29,30 @@ pub fn artifacts_root() -> PathBuf {
 
 pub fn have_variant(name: &str) -> bool {
     artifacts_root().join(name).join("manifest.json").exists()
+}
+
+/// Optional comma-separated variant filter (ROM_VARIANT_FILTER) so partial
+/// table rows can be regenerated without the full sweep's wall-clock.
+fn filtered_out(name: &str) -> bool {
+    match std::env::var("ROM_VARIANT_FILTER") {
+        Ok(f) if !f.is_empty() => !f.split(',').any(|v| v.trim() == name),
+        _ => false,
+    }
+}
+
+/// Drop missing/filtered variants (with a warn per skip) and return the
+/// runnable names in input order — the one skip path shared by every table
+/// and example that feeds a sweep.
+pub fn runnable_variants(variants: &[&str]) -> Vec<String> {
+    let mut out = Vec::with_capacity(variants.len());
+    for name in variants {
+        if !have_variant(name) || filtered_out(name) {
+            warnln!("skipping {name}: artifacts missing or filtered");
+            continue;
+        }
+        out.push(name.to_string());
+    }
+    out
 }
 
 #[derive(Debug, Clone)]
@@ -55,32 +84,45 @@ impl VariantResult {
     }
 }
 
-/// Train `steps` optimizer steps on the shared synthetic corpus and return
-/// the table columns. `max_lr` is typically lr_budget() = 3e-3 (scaled up
-/// from the paper's 4e-4 because the models are ~100x smaller — see
-/// EXPERIMENTS.md).
-pub fn run_variant(name: &str, steps: u64, max_lr: f64) -> Result<VariantResult> {
-    let client = cpu_client()?;
-    run_variant_with(client, name, steps, max_lr, false)
+/// How to run one variant row. `RunSpec::new` gives the table defaults
+/// (fused path, final PPL sweep on, normal logging); benches and probe runs
+/// flip the fields they need.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub steps: u64,
+    pub max_lr: f64,
+    pub grad_accum: bool,
+    /// Run the final multi-length PPL sweep (tables need it; wall-clock
+    /// benches don't).
+    pub final_eval: bool,
+    pub quiet: bool,
 }
 
-pub fn run_variant_with(
-    client: Rc<xla::PjRtClient>,
-    name: &str,
-    steps: u64,
-    max_lr: f64,
-    grad_accum: bool,
-) -> Result<VariantResult> {
-    let bundle = Bundle::load(client, artifacts_root().join(name))
+impl RunSpec {
+    pub fn new(steps: u64, max_lr: f64) -> RunSpec {
+        RunSpec { steps, max_lr, grad_accum: false, final_eval: true, quiet: false }
+    }
+}
+
+/// The workhorse behind every table row: train `spec.steps` optimizer steps
+/// on the shared synthetic corpus and return the table columns (`max_lr` is
+/// typically lr_budget() = 3e-3, scaled up from the paper's 4e-4 because
+/// the models are ~100x smaller — see EXPERIMENTS.md). Self-contained per
+/// call (fresh client + bundle), so it is safe to run from any scheduler
+/// worker; every caller goes through here or `scheduler::run_sweep`.
+pub fn run_variant_spec(name: &str, spec: &RunSpec) -> Result<VariantResult> {
+    let bundle = Bundle::open(artifacts_root().join(name))
         .with_context(|| format!("variant {name} (run `make artifacts`)"))?;
     let train_cfg = TrainCfg {
-        steps,
-        max_lr,
-        grad_accum,
-        log_every: (steps / 5).max(1),
+        steps: spec.steps,
+        max_lr: spec.max_lr,
+        grad_accum: spec.grad_accum,
+        log_every: (spec.steps / 5).max(1),
         ..TrainCfg::default()
     };
-    let trainer = Trainer::new(&bundle, train_cfg);
+    let mut trainer = Trainer::new(Arc::clone(&bundle), train_cfg);
+    trainer.quiet = spec.quiet;
+    trainer.final_eval = spec.final_eval;
     let report = trainer.run()?;
     let man = &bundle.manifest;
     Ok(VariantResult {

@@ -1,3 +1,6 @@
-//! Experiment harness: one module per paper table/figure (DESIGN.md §4).
+//! Experiment harness: one module per paper table/figure (DESIGN.md §4),
+//! plus the parallel sweep scheduler that fans independent variants out
+//! across worker threads.
 pub mod harness;
+pub mod scheduler;
 pub mod tables;

@@ -1,0 +1,231 @@
+//! Parallel experiment scheduler: fan independent variant runs out over the
+//! substrate thread pool with deterministic result ordering and per-job
+//! error isolation.
+//!
+//! The paper's headline results are sweeps — Fig 2 alone trains nine
+//! variants; the scaling ladders train eight more — and every variant is
+//! independent: its own PJRT client, its own bundle, its own corpus streams.
+//! `run_jobs` exploits exactly that independence and nothing more:
+//!
+//! * **Nothing thread-affine crosses a thread.** A job closure receives only
+//!   the variant name (plus `Send` captures) and constructs client + bundle
+//!   + session on its worker thread (`Bundle::open`). This is the
+//!   one-client-per-worker fallback of the runtime's ownership model (see
+//!   `runtime::artifact` docs) and stays correct even though the PJRT FFI
+//!   wrapper does not declare its handles `Send`.
+//! * **Deterministic ordering.** Results come back indexed and are returned
+//!   in submission order, so a `--jobs 4` sweep emits byte-identical table
+//!   rows to `--jobs 1` (each variant's training is itself deterministic —
+//!   the pipelined-vs-synchronous guard pins that).
+//! * **Error isolation.** A job that fails — `Err` or panic — yields an
+//!   `Err` in its slot; the remaining jobs run to completion. Panics are
+//!   caught inside the job so a poisoned variant can never wedge the pool's
+//!   in-flight accounting (a panicking pool worker would otherwise leave
+//!   `join` waiting forever).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::experiments::harness::{run_variant_spec, RunSpec, VariantResult};
+use crate::substrate::pool::ThreadPool;
+use crate::warnln;
+
+/// Default worker count for sweeps: the ROM_JOBS env var, else 1 (serial —
+/// parallelism is opt-in because concurrent variants share the machine's
+/// cores with XLA's own intra-op threads).
+pub fn default_jobs() -> usize {
+    parse_jobs(std::env::var("ROM_JOBS").ok().as_deref())
+}
+
+fn parse_jobs(v: Option<&str>) -> usize {
+    v.and_then(|s| s.parse::<usize>().ok()).map(|n| n.max(1)).unwrap_or(1)
+}
+
+/// Run `f` once per item on `workers` pool threads (serially when
+/// `workers <= 1` — the same closure either way, so both paths produce
+/// identical results). Returns one `Result` per item, in item order.
+pub fn run_jobs<T, F>(items: &[String], workers: usize, f: F) -> Vec<Result<T>>
+where
+    T: Send + 'static,
+    F: Fn(usize, &str) -> Result<T> + Send + Sync + 'static,
+{
+    let guarded = move |idx: usize, name: &str| -> Result<T> {
+        match catch_unwind(AssertUnwindSafe(|| f(idx, name))) {
+            Ok(res) => res,
+            Err(payload) => {
+                Err(anyhow!("job '{name}' panicked: {}", panic_message(payload.as_ref())))
+            }
+        }
+    };
+    if workers <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, name)| guarded(i, name)).collect();
+    }
+
+    let guarded = Arc::new(guarded);
+    let pool = ThreadPool::new(workers.min(items.len()));
+    let (tx, rx) = channel::<(usize, Result<T>)>();
+    for (idx, name) in items.iter().enumerate() {
+        let g = Arc::clone(&guarded);
+        let tx = tx.clone();
+        let name = name.clone();
+        pool.submit(move || {
+            let _ = tx.send((idx, (*g)(idx, &name)));
+        });
+    }
+    drop(tx); // the receiver loop below ends when the last job's clone drops
+
+    let mut slots: Vec<Option<Result<T>>> = items.iter().map(|_| None).collect();
+    for (idx, res) in rx {
+        slots[idx] = Some(res);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("scheduler lost a job result"))
+        .collect()
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Pair each item name with its job result, warn-log every failure (error
+/// isolation means a failed row costs only itself), and keep the successes
+/// in submission order. Returns `(successes, failure_count)` — callers must
+/// propagate a nonzero failure count as an error once they have shown the
+/// surviving rows, so an experiment with broken variants cannot exit 0
+/// silently. The one failure-reporting path shared by every table/example
+/// that consumes `run_jobs`/`run_sweep` output.
+pub fn collect_ok<T>(names: &[String], results: Vec<Result<T>>) -> (Vec<(String, T)>, usize) {
+    let mut failed = 0usize;
+    let ok = names
+        .iter()
+        .zip(results)
+        .filter_map(|(name, res)| match res {
+            Ok(r) => Some((name.clone(), r)),
+            Err(e) => {
+                warnln!("{name} failed (other rows unaffected): {e:#}");
+                failed += 1;
+                None
+            }
+        })
+        .collect();
+    (ok, failed)
+}
+
+/// Train every variant under one `RunSpec` across `workers` threads; one
+/// `Result` per variant, in variant order. This is the engine behind
+/// `rom experiment <id> --jobs N` and the bench sweep section.
+pub fn run_sweep(
+    variants: &[String],
+    spec: &RunSpec,
+    workers: usize,
+) -> Vec<Result<VariantResult>> {
+    let spec = spec.clone();
+    run_jobs(variants, workers, move |_idx, name| run_variant_spec(name, &spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parallel_results_match_serial_in_order() {
+        let work = items(&["a", "bb", "ccc", "dddd", "eeeee", "ffffff", "g", "hh"]);
+        let f = |idx: usize, name: &str| -> Result<String> {
+            // Stagger so completion order differs from submission order.
+            std::thread::sleep(std::time::Duration::from_millis(
+                ((work_len(name) * 7 + idx) % 5) as u64,
+            ));
+            Ok(format!("{idx}:{name}:{}", work_len(name)))
+        };
+        fn work_len(s: &str) -> usize {
+            s.len()
+        }
+        let serial: Vec<String> =
+            run_jobs(&work, 1, f).into_iter().map(|r| r.unwrap()).collect();
+        let parallel: Vec<String> =
+            run_jobs(&work, 4, f).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[2], "2:ccc:3");
+    }
+
+    #[test]
+    fn failing_job_does_not_poison_others() {
+        let work = items(&["ok1", "bad", "ok2", "ok3"]);
+        let results = run_jobs(&work, 3, |_i, name| {
+            if name == "bad" {
+                anyhow::bail!("artifact missing for {name}");
+            }
+            Ok(name.to_string())
+        });
+        assert_eq!(results.len(), 4);
+        assert_eq!(results[0].as_ref().unwrap(), "ok1");
+        assert!(results[1].as_ref().unwrap_err().to_string().contains("artifact missing"));
+        assert_eq!(results[2].as_ref().unwrap(), "ok2");
+        assert_eq!(results[3].as_ref().unwrap(), "ok3");
+    }
+
+    #[test]
+    fn panicking_job_is_isolated_and_pool_survives() {
+        let work = items(&["fine", "explodes", "also-fine"]);
+        let results = run_jobs(&work, 2, |_i, name| {
+            if name == "explodes" {
+                panic!("variant blew up");
+            }
+            Ok(name.len())
+        });
+        assert_eq!(results[0].as_ref().unwrap(), &4);
+        let err = results[1].as_ref().unwrap_err().to_string();
+        assert!(err.contains("panicked") && err.contains("variant blew up"), "got: {err}");
+        assert_eq!(results[2].as_ref().unwrap(), &9);
+    }
+
+    #[test]
+    fn serial_path_isolates_panics_too() {
+        let work = items(&["explodes", "fine"]);
+        let results = run_jobs(&work, 1, |_i, name| {
+            if name == "explodes" {
+                panic!("boom");
+            }
+            Ok(())
+        });
+        assert!(results[0].is_err());
+        assert!(results[1].is_ok());
+    }
+
+    #[test]
+    fn collect_ok_reports_failures_and_keeps_order() {
+        let names = items(&["a", "b", "c"]);
+        let results: Vec<Result<u32>> = vec![Ok(1), Err(anyhow!("nope")), Ok(3)];
+        let (ok, failed) = collect_ok(&names, results);
+        assert_eq!(failed, 1);
+        assert_eq!(ok, vec![("a".to_string(), 1), ("c".to_string(), 3)]);
+    }
+
+    #[test]
+    fn jobs_parse_defaults_and_clamps() {
+        assert_eq!(parse_jobs(None), 1);
+        assert_eq!(parse_jobs(Some("4")), 4);
+        assert_eq!(parse_jobs(Some("0")), 1);
+        assert_eq!(parse_jobs(Some("not-a-number")), 1);
+    }
+
+    #[test]
+    fn empty_item_list_is_fine() {
+        let results: Vec<Result<()>> = run_jobs(&[], 4, |_i, _n| Ok(()));
+        assert!(results.is_empty());
+    }
+}

@@ -5,44 +5,62 @@
 //! that matter are orderings and rough ratios — who wins, by how much,
 //! where the crossovers sit. `rom experiment <id>` runs the full budget;
 //! bench targets run a reduced ROM_STEPS budget.
+//!
+//! Sweeps fan out across `jobs` scheduler workers (`--jobs N` / ROM_JOBS);
+//! rows are emitted in variant order regardless of completion order. A
+//! failing variant costs only its own row — every sibling still runs and its
+//! row still prints — but the experiment then exits nonzero (`seal_table`),
+//! so a sweep with broken variants can never read as a silent success.
+//! Table 11 is the exception to parallelism: it measures per-variant
+//! throughput, which concurrent training would corrupt, so it always runs
+//! serially.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::config::TrainCfg;
 use crate::coordinator::downstream::{score_cloze, score_continuation};
+use crate::coordinator::trainer::Trainer;
 use crate::data::corpus::{Corpus, CorpusSpec};
 use crate::data::probes::{make_cloze, make_continuation};
 use crate::experiments::harness::{
-    artifacts_root, have_variant, lr_budget, run_variant, step_budget, VariantResult,
+    artifacts_root, lr_budget, runnable_variants, step_budget, RunSpec, VariantResult,
 };
-use crate::runtime::artifact::{cpu_client, Bundle};
-use crate::runtime::session::Session;
+use crate::experiments::scheduler::{collect_ok, run_jobs, run_sweep};
+use crate::info;
+use crate::runtime::artifact::Bundle;
 use crate::substrate::bench::Reporter;
-use crate::{info, warnln};
 
 fn ppl_cols(r: &VariantResult) -> Vec<String> {
     r.ppl.iter().map(|(_, p)| format!("{p:.3}")).collect()
 }
 
-/// Optional comma-separated variant filter (ROM_VARIANT_FILTER) so partial
-/// table rows can be regenerated without the full sweep's wall-clock.
-fn filtered_out(name: &str) -> bool {
-    match std::env::var("ROM_VARIANT_FILTER") {
-        Ok(f) if !f.is_empty() => !f.split(',').any(|v| v.trim() == name),
-        _ => false,
+/// Seal a table after a sweep: with zero failures, hand the reporter back
+/// for the caller to print; otherwise print the surviving rows here and
+/// surface the failure count as an error so `rom experiment` / bench targets
+/// exit nonzero (row isolation shows partial results; it must not convert a
+/// broken sweep into a silent success).
+fn seal_table(rep: Reporter, failed: usize) -> Result<Reporter> {
+    if failed == 0 {
+        return Ok(rep);
     }
+    rep.print();
+    anyhow::bail!("{failed} variant job(s) failed — surviving rows printed above")
 }
 
-fn run_rows(title: &str, variants: &[&str], steps: u64) -> Result<Reporter> {
+/// Shared sweep-to-rows driver behind fig2/fig3/fig4/table1/table3/table10.
+/// Public so the scheduler determinism guard in the integration tests can
+/// compare the exact rows `--jobs 1` and `--jobs N` produce.
+pub fn run_rows(title: &str, variants: &[&str], steps: u64, jobs: usize) -> Result<Reporter> {
     let mut rep = Reporter::new(
         title,
         &["variant", "active", "total", "GFLOPs/tok", "loss", "ppl@128", "ppl@256", "ppl@512"],
     );
-    for name in variants {
-        if !have_variant(name) || filtered_out(name) {
-            warnln!("skipping {name}: artifacts missing or filtered");
-            continue;
-        }
-        let r = run_variant(name, steps, lr_budget())?;
+    let names = runnable_variants(variants);
+    let spec = RunSpec::new(steps, lr_budget());
+    let (rows, failed) = collect_ok(&names, run_sweep(&names, &spec, jobs));
+    for (_name, r) in rows {
         let mut row = vec![
             r.name.clone(),
             VariantResult::fmt_params(r.active_params),
@@ -54,15 +72,15 @@ fn run_rows(title: &str, variants: &[&str], steps: u64) -> Result<Reporter> {
         while row.len() < 8 {
             row.push("-".into());
         }
-        rep.row(&row[..8].to_vec());
+        rep.row(&row[..8]);
         info!("{} done: loss {:.3}", r.name, r.smoothed_loss);
     }
-    Ok(rep)
+    seal_table(rep, failed)
 }
 
 /// Fig 2 / Table 4: naive MoE-Mamba combos degrade Samba; shared-routing RoM
 /// improves it at the same total parameters.
-pub fn fig2(steps_default: u64) -> Result<Reporter> {
+pub fn fig2(steps_default: u64, jobs: usize) -> Result<Reporter> {
     run_rows(
         "Fig 2 / Table 4 — naive MoE-Mamba vs RoM on Samba (PPL lower=better)",
         &[
@@ -77,11 +95,12 @@ pub fn fig2(steps_default: u64) -> Result<Reporter> {
             "samba-e2-rom",
         ],
         step_budget(steps_default),
+        jobs,
     )
 }
 
 /// Fig 3: PPL vs active-parameter ladder, dense Mamba vs RoM.
-pub fn fig3(steps_default: u64) -> Result<Reporter> {
+pub fn fig3(steps_default: u64, jobs: usize) -> Result<Reporter> {
     run_rows(
         "Fig 3 — scaling ladder: dense Mamba vs RoM (1/8 experts)",
         &[
@@ -91,22 +110,24 @@ pub fn fig3(steps_default: u64) -> Result<Reporter> {
             "mamba-large", "rom-large",
         ],
         step_budget(steps_default),
+        jobs,
     )
 }
 
 /// Fig 4 / Tables 7-9: eval-length extrapolation (PPL at 128/256/512 for
 /// models trained at T=128). The multi-length columns of fig3's rows ARE this
 /// figure; kept separate so the bench target exists per the experiment index.
-pub fn fig4(steps_default: u64) -> Result<Reporter> {
+pub fn fig4(steps_default: u64, jobs: usize) -> Result<Reporter> {
     run_rows(
         "Fig 4 / Tables 7-9 — length extrapolation (train T=128, eval 128/256/512)",
         &["mamba-tiny", "rom-tiny", "mamba-small", "rom-small"],
         step_budget(steps_default),
+        jobs,
     )
 }
 
 /// Table 1: architecture comparison.
-pub fn table1(steps_default: u64) -> Result<Reporter> {
+pub fn table1(steps_default: u64, jobs: usize) -> Result<Reporter> {
     run_rows(
         "Table 1 — architectures (Llama proxy, Mamba, Samba, attention-MoE, RoM)",
         &[
@@ -123,11 +144,12 @@ pub fn table1(steps_default: u64) -> Result<Reporter> {
             "samba-e4-rom-all",
         ],
         step_budget(steps_default),
+        jobs,
     )
 }
 
 /// Table 3: RoM on other linear recurrent architectures.
-pub fn table3(steps_default: u64) -> Result<Reporter> {
+pub fn table3(steps_default: u64, jobs: usize) -> Result<Reporter> {
     run_rows(
         "Table 3 — RoM on Mamba / Mamba2 / Gated DeltaNet",
         &[
@@ -136,141 +158,140 @@ pub fn table3(steps_default: u64) -> Result<Reporter> {
             "gdn-small", "gdn-small-rom",
         ],
         step_budget(steps_default),
+        jobs,
     )
 }
 
 /// Table 6: load-balance-loss ablation + natural balance diagnostics.
-pub fn table6(steps_default: u64) -> Result<Reporter> {
+pub fn table6(steps_default: u64, jobs: usize) -> Result<Reporter> {
     let mut rep = Reporter::new(
         "Table 6 — load balance ablation (RoM balances naturally)",
         &["variant", "ppl@128", "ppl@512", "max/uniform", "norm-entropy"],
     );
-    for name in [
+    let names = runnable_variants(&[
         "samba-e4",
         "samba-e4-rom",
         "samba-e4-rom-bal",
         "samba-e4-rom-all",
         "samba-e4-rom-all-bal",
-    ] {
-        if !have_variant(name) || filtered_out(name) {
-            warnln!("skipping {name}: artifacts missing");
-            continue;
-        }
-        let r = run_variant(name, step_budget(steps_default), lr_budget())?;
+    ]);
+    let spec = RunSpec::new(step_budget(steps_default), lr_budget());
+    let (rows, failed) = collect_ok(&names, run_sweep(&names, &spec, jobs));
+    for (_name, r) in rows {
         rep.row(&[
             r.name.clone(),
-            r.ppl_at(128).map(|p| format!("{p:.3}")).unwrap_or("-".into()),
-            r.ppl_at(512).map(|p| format!("{p:.3}")).unwrap_or("-".into()),
+            r.ppl_at(128).map(|p| format!("{p:.3}")).unwrap_or_else(|| "-".into()),
+            r.ppl_at(512).map(|p| format!("{p:.3}")).unwrap_or_else(|| "-".into()),
             format!("{:.2}", r.balance_max_over_uniform),
             format!("{:.3}", r.balance_entropy),
         ]);
     }
-    Ok(rep)
+    seal_table(rep, failed)
 }
 
 /// Table 10: hybrid RoM+FFN-MoE vs FFN-MoE perplexity.
-pub fn table10(steps_default: u64) -> Result<Reporter> {
+pub fn table10(steps_default: u64, jobs: usize) -> Result<Reporter> {
     run_rows(
         "Table 10 — FFN-MoE vs hybrid RoM+FFN-MoE",
         &["samba-e4", "samba-ffnmoe16", "samba-rom-ffnmoe8"],
         step_budget(steps_default),
+        jobs,
     )
 }
 
-/// Table 2: downstream probes (cloze + continuation choice).
-pub fn table2(steps_default: u64) -> Result<Reporter> {
+/// Table 2: downstream probes (cloze + continuation choice). Each variant
+/// trains via the shared `Trainer` (same loop as `rom train`) and scores
+/// probes on the returned session; variants fan out across scheduler workers.
+pub fn table2(steps_default: u64, jobs: usize) -> Result<Reporter> {
     let mut rep = Reporter::new(
         "Table 2 — downstream probes (cloze acc / PPL, continuation acc)",
         &["variant", "active", "total", "cloze-ppl", "cloze-acc%", "cont-acc%"],
     );
-    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let names = runnable_variants(&["samba-e4", "samba-ffnmoe16", "samba-rom-ffnmoe8"]);
     let steps = step_budget(steps_default);
-    for name in ["samba-e4", "samba-ffnmoe16", "samba-rom-ffnmoe8"] {
-        if !have_variant(name) || filtered_out(name) {
-            warnln!("skipping {name}: artifacts missing");
-            continue;
-        }
-        // Train inline (the probe needs the trained session).
-        let client = cpu_client()?;
-        let bundle = Bundle::load(client, artifacts_root().join(name))?;
-        let mut sess = Session::init(&bundle, 0)?;
-        quick_train(&mut sess, &bundle, steps)?;
-        let ctx = bundle.manifest.eval_lens[0];
-        let cloze = score_cloze(&sess, &make_cloze(&corpus, 7, 24, ctx))?;
-        let pre = ctx / 2;
-        let cont = score_continuation(
-            &sess,
-            &make_continuation(&corpus, 8, 16, ctx - pre, pre),
-        )?;
-        let man = &bundle.manifest;
-        rep.row(&[
-            name.to_string(),
-            VariantResult::fmt_params(man.analysis.active_params),
-            VariantResult::fmt_params(man.analysis.total_params),
-            format!("{:.2}", cloze.ppl()),
-            format!("{:.1}", cloze.accuracy * 100.0),
-            format!("{:.1}", cont.accuracy * 100.0),
-        ]);
+    let lr = lr_budget();
+    let results = run_jobs(&names, jobs, move |_idx, name| table2_row(name, steps, lr));
+    let (rows, failed) = collect_ok(&names, results);
+    for (_name, row) in rows {
+        rep.row(&row);
     }
-    Ok(rep)
+    seal_table(rep, failed)
 }
 
-fn quick_train(sess: &mut Session, bundle: &Bundle, steps: u64) -> Result<()> {
-    use crate::coordinator::schedule::CosineSchedule;
-    use crate::data::loader::Loader;
-    let man = &bundle.manifest;
+/// One table2 row: train with the shared Trainer (probes need the trained
+/// session, so this uses `run_session`), then score cloze + continuation.
+fn table2_row(name: &str, steps: u64, max_lr: f64) -> Result<Vec<String>> {
+    let bundle = Bundle::open(artifacts_root().join(name))?;
+    let cfg = TrainCfg { steps, max_lr, log_every: 0, ..TrainCfg::default() };
+    let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
+    trainer.quiet = true;
+    trainer.final_eval = false; // probes below, not the PPL sweep
+    let (_report, sess) = trainer.run_session()?;
+
     let corpus = Corpus::new(CorpusSpec::default(), 17);
-    let stream = corpus.generate(0, (steps as usize + 2) * man.batch_size * (man.seq_len + 1));
-    let mut loader = Loader::new(stream, man.batch_size, man.seq_len, 0);
-    let sched = CosineSchedule::new(lr_budget(), steps, 0.01);
-    for s in 1..=steps {
-        let b = loader.next_batch();
-        sess.train_step(sched.lr(s) as f32, &b.tokens, &b.targets)?;
-    }
-    Ok(())
+    let ctx = bundle.manifest.eval_lens[0];
+    let cloze = score_cloze(&sess, &make_cloze(&corpus, 7, 24, ctx))?;
+    let pre = ctx / 2;
+    let cont =
+        score_continuation(&sess, &make_continuation(&corpus, 8, 16, ctx - pre, pre))?;
+    let man = &bundle.manifest;
+    Ok(vec![
+        name.to_string(),
+        VariantResult::fmt_params(man.analysis.active_params),
+        VariantResult::fmt_params(man.analysis.total_params),
+        format!("{:.2}", cloze.ppl()),
+        format!("{:.1}", cloze.accuracy * 100.0),
+        format!("{:.1}", cont.accuracy * 100.0),
+    ])
 }
 
 /// Table 11: training throughput — RoM vs dense at equal active params vs
 /// width expansion. Few steps; throughput is steady-state tokens/s.
-pub fn table11(steps_default: u64) -> Result<Reporter> {
+/// ALWAYS serial (ignores `jobs`): concurrent variants would contend for
+/// cores and corrupt the tokens/s comparison the table exists to make.
+pub fn table11(steps_default: u64, _jobs: usize) -> Result<Reporter> {
     let mut rep = Reporter::new(
         "Table 11 — training throughput (tokens/s, identical hardware)",
         &["variant", "active", "total", "tok/s", "rel%"],
     );
-    let steps = step_budget(steps_default);
-    let mut base_rate: Option<f64> = None;
-    for name in ["samba-e2", "samba-e2-rom", "samba-e4"] {
-        if !have_variant(name) || filtered_out(name) {
-            warnln!("skipping {name}: artifacts missing");
-            continue;
-        }
-        let r = run_variant(name, steps, lr_budget())?;
-        if base_rate.is_none() {
-            base_rate = Some(r.tokens_per_sec);
-        }
+    let names = runnable_variants(&["samba-e2", "samba-e2-rom", "samba-e4"]);
+    let spec = RunSpec::new(step_budget(steps_default), lr_budget());
+    let (rows, failed) = collect_ok(&names, run_sweep(&names, &spec, 1));
+    // rel% is pinned to the table's designated baseline — the FIRST runnable
+    // variant. If that row failed there is no denominator, so rel% prints
+    // "-" instead of silently rebasing to the next surviving variant.
+    let baseline = names.first().cloned();
+    let base_rate = rows
+        .iter()
+        .find(|(n, _)| Some(n) == baseline.as_ref())
+        .map(|(_, r)| r.tokens_per_sec);
+    for (_name, r) in rows {
         rep.row(&[
             r.name.clone(),
             VariantResult::fmt_params(r.active_params),
             VariantResult::fmt_params(r.total_params),
             format!("{:.0}", r.tokens_per_sec),
-            format!("{:.0}", 100.0 * r.tokens_per_sec / base_rate.unwrap()),
+            base_rate
+                .map(|b| format!("{:.0}", 100.0 * r.tokens_per_sec / b))
+                .unwrap_or_else(|| "-".into()),
         ]);
     }
-    Ok(rep)
+    seal_table(rep, failed)
 }
 
-/// Dispatch by experiment id (DESIGN.md §4).
-pub fn run_experiment(id: &str, steps_default: u64) -> Result<Reporter> {
+/// Dispatch by experiment id (DESIGN.md §4). `jobs` is the scheduler worker
+/// count (1 = serial; table11 is always serial regardless).
+pub fn run_experiment(id: &str, steps_default: u64, jobs: usize) -> Result<Reporter> {
     match id {
-        "fig2" => fig2(steps_default),
-        "fig3" => fig3(steps_default),
-        "fig4" => fig4(steps_default),
-        "table1" => table1(steps_default),
-        "table2" => table2(steps_default),
-        "table3" => table3(steps_default),
-        "table6" => table6(steps_default),
-        "table10" => table10(steps_default),
-        "table11" => table11(steps_default),
+        "fig2" => fig2(steps_default, jobs),
+        "fig3" => fig3(steps_default, jobs),
+        "fig4" => fig4(steps_default, jobs),
+        "table1" => table1(steps_default, jobs),
+        "table2" => table2(steps_default, jobs),
+        "table3" => table3(steps_default, jobs),
+        "table6" => table6(steps_default, jobs),
+        "table10" => table10(steps_default, jobs),
+        "table11" => table11(steps_default, jobs),
         other => anyhow::bail!(
             "unknown experiment {other}; ids: fig2 fig3 fig4 table1 table2 table3 table6 table10 table11"
         ),

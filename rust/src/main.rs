@@ -3,11 +3,14 @@
 //! Subcommands:
 //!   info <variant>                      manifest + analytic accounting
 //!   train <variant> [--steps N] [--lr X] [--accum] [--ckpt-dir D]
-//!                   [--eval-every N] [--metrics FILE]
+//!                   [--ckpt-every N] [--ckpt-keep N] [--eval-every N]
+//!                   [--log-every N] [--warmup R] [--metrics FILE]
 //!   eval <variant> --ckpt FILE          PPL sweep from a checkpoint
-//!   probes <variant> [--steps N]        downstream probe scores (Table 2)
-//!   experiment <id> [--steps N]         regenerate a paper table/figure
+//!   probes <variant> [--steps N] [--lr X]  downstream probe scores (Table 2)
+//!   experiment <id> [--steps N] [--jobs N]  regenerate a paper table/figure
 //!   list                                variants with artifacts present
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 use rom::config::TrainCfg;
@@ -18,9 +21,10 @@ use rom::coordinator::trainer::Trainer;
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::probes::{make_cloze, make_continuation};
 use rom::experiments::harness::{artifacts_root, lr_budget};
+use rom::experiments::scheduler::default_jobs;
 use rom::experiments::tables::run_experiment;
 use rom::info;
-use rom::runtime::artifact::{cpu_client, Bundle};
+use rom::runtime::artifact::Bundle;
 use rom::runtime::session::Session;
 use rom::substrate::cli::Args;
 
@@ -29,13 +33,20 @@ rom — Routing Mamba training coordinator
 usage: rom <subcommand> [options]
   list                              show variants with artifacts
   info <variant>                    manifest + analytic accounting
-  train <variant> [--steps N] [--lr X] [--accum] [--ckpt-dir D]
-                  [--eval-every N] [--metrics FILE] [--seed N]
+  train <variant> [--steps N] [--lr X] [--warmup R] [--seed N] [--accum]
+                  [--ckpt-dir D] [--ckpt-every N] [--ckpt-keep N]
+                  [--eval-every N] [--log-every N] [--metrics FILE]
+                  (--ckpt-keep N retains only the newest N checkpoints)
   eval <variant> --ckpt FILE        PPL sweep from a checkpoint
-  probes <variant> [--steps N]      downstream probes (Table 2 stand-in)
-  experiment <id> [--steps N]       regenerate a table/figure
+  probes <variant> [--steps N] [--lr X]
+                                    downstream probes (Table 2 stand-in)
+  experiment <id> [--steps N] [--jobs N]
+                                    regenerate a table/figure
                                     (fig2 fig3 fig4 table1 table2 table3
                                      table6 table10 table11)
+                                    --jobs N trains N variants in parallel
+                                    (default from ROM_JOBS, else 1; rows are
+                                    byte-identical to a serial run)
 ";
 
 fn main() -> Result<()> {
@@ -81,8 +92,7 @@ fn list() -> Result<()> {
 
 fn info_cmd(args: &Args) -> Result<()> {
     let name = variant_arg(args)?;
-    let client = cpu_client()?;
-    let bundle = Bundle::load(client, artifacts_root().join(&name))?;
+    let bundle = Bundle::open(artifacts_root().join(&name))?;
     let m = &bundle.manifest;
     println!("variant:        {}", m.name);
     println!("param leaves:   {}", m.num_leaves());
@@ -107,8 +117,7 @@ fn info_cmd(args: &Args) -> Result<()> {
 
 fn train(args: &Args) -> Result<()> {
     let name = variant_arg(args)?;
-    let client = cpu_client()?;
-    let bundle = Bundle::load(client, artifacts_root().join(&name))
+    let bundle = Bundle::open(artifacts_root().join(&name))
         .with_context(|| format!("loading variant {name}"))?;
     let cfg = TrainCfg {
         steps: args.get_u64("steps", 300),
@@ -120,10 +129,14 @@ fn train(args: &Args) -> Result<()> {
         checkpoint_every: args.get_u64("ckpt-every", 0),
         log_every: args.get_u64("log-every", 20),
     };
-    let mut trainer = Trainer::new(&bundle, cfg);
+    let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
     trainer.quiet = args.has_flag("quiet");
     if let Some(dir) = args.get("ckpt-dir") {
         trainer.checkpoint_dir = Some(dir.into());
+    }
+    if let Some(keep) = args.get("ckpt-keep") {
+        trainer.checkpoint_keep =
+            Some(keep.parse().context("--ckpt-keep expects a number")?);
     }
     let report = trainer.run()?;
     println!("final loss:     {:.4}", report.final_loss);
@@ -148,10 +161,9 @@ fn eval_cmd(args: &Args) -> Result<()> {
     let ckpt_path = args
         .get("ckpt")
         .ok_or_else(|| anyhow::anyhow!("--ckpt FILE required"))?;
-    let client = cpu_client()?;
-    let bundle = Bundle::load(client, artifacts_root().join(&name))?;
+    let bundle = Bundle::open(artifacts_root().join(&name))?;
     let ck = Checkpoint::load(std::path::Path::new(ckpt_path))?;
-    let sess = Session::restore(&bundle, &ck.params, &ck.m, &ck.v, ck.step)?;
+    let sess = Session::restore(Arc::clone(&bundle), &ck.params, &ck.m, &ck.v, ck.step)?;
     let corpus = Corpus::new(CorpusSpec::default(), 17);
     for (ctx, ppl) in eval_ppl_sweep(&sess, &corpus, 999, 8)? {
         println!("ppl@{ctx}: {ppl:.3}");
@@ -162,24 +174,22 @@ fn eval_cmd(args: &Args) -> Result<()> {
 fn probes(args: &Args) -> Result<()> {
     let name = variant_arg(args)?;
     let steps = args.get_u64("steps", 150);
-    let client = cpu_client()?;
-    let bundle = Bundle::load(client, artifacts_root().join(&name))?;
-    let mut sess = Session::init(&bundle, 0)?;
-    // Short inline training so probe scores are above chance.
+    let bundle = Bundle::open(artifacts_root().join(&name))?;
+    // Short training so probe scores are above chance — the same `Trainer`
+    // loop as `rom train` (eval/checkpoint cadences off), which hands the
+    // trained session back for scoring.
+    let cfg = TrainCfg {
+        steps,
+        max_lr: args.get_f64("lr", lr_budget()),
+        log_every: 0,
+        ..TrainCfg::default()
+    };
+    let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
+    trainer.quiet = true;
+    trainer.final_eval = false; // probes below, not the PPL sweep
+    let (_report, sess) = trainer.run_session()?;
+
     let corpus = Corpus::new(CorpusSpec::default(), 17);
-    {
-        use rom::coordinator::schedule::CosineSchedule;
-        use rom::data::loader::Loader;
-        let man = &bundle.manifest;
-        let stream =
-            corpus.generate(0, (steps as usize + 2) * man.batch_size * (man.seq_len + 1));
-        let mut loader = Loader::new(stream, man.batch_size, man.seq_len, 0);
-        let sched = CosineSchedule::new(args.get_f64("lr", lr_budget()), steps, 0.01);
-        for s in 1..=steps {
-            let b = loader.next_batch();
-            sess.train_step(sched.lr(s) as f32, &b.tokens, &b.targets)?;
-        }
-    }
     let ctx = bundle.manifest.eval_lens[0];
     let cloze = score_cloze(&sess, &make_cloze(&corpus, 7, 32, ctx))?;
     println!(
@@ -197,7 +207,8 @@ fn probes(args: &Args) -> Result<()> {
 fn experiment(args: &Args) -> Result<()> {
     let id = variant_arg(args)?;
     let steps = args.get_u64("steps", 200);
-    let rep = run_experiment(&id, steps)?;
+    let jobs = args.get_usize("jobs", default_jobs());
+    let rep = run_experiment(&id, steps, jobs)?;
     rep.print();
     Ok(())
 }

@@ -4,11 +4,19 @@
 //! A bundle directory holds init/step/grad/apply/eval_L*.hlo.txt plus
 //! manifest.json. Executables are compiled on first use and cached for the
 //! life of the bundle (compilation is seconds; steps are milliseconds).
+//!
+//! Ownership model: everything here is shared-ownership (`Arc`) with a
+//! `Mutex`-guarded program cache, so bundles, programs and the sessions built
+//! on them are lifetime-free and ready to move across worker threads the
+//! moment the PJRT FFI wrapper declares its handles `Send`. Until it does,
+//! the experiment scheduler uses the safe fallback sanctioned by the design:
+//! one PJRT client (and bundle) per worker thread — `Bundle::open` is the
+//! one-call constructor each worker uses, and nothing thread-affine ever
+//! crosses a thread boundary.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -131,27 +139,43 @@ impl Program {
     }
 }
 
-/// Lazily compiled artifact bundle for one model variant.
+/// Lazily compiled artifact bundle for one model variant. Shared-ownership:
+/// hand out `Arc<Bundle>` and clone freely; the program cache is interior-
+/// mutable behind a `Mutex` so `program()` works through `&self` from any
+/// holder of the Arc.
 pub struct Bundle {
     pub manifest: Manifest,
     pub dir: PathBuf,
-    client: Rc<xla::PjRtClient>,
-    cache: RefCell<BTreeMap<String, Rc<Program>>>,
+    client: Arc<xla::PjRtClient>,
+    cache: Mutex<BTreeMap<String, Arc<Program>>>,
 }
 
 impl Bundle {
-    pub fn load(client: Rc<xla::PjRtClient>, dir: impl AsRef<Path>) -> Result<Bundle> {
+    pub fn load(client: Arc<xla::PjRtClient>, dir: impl AsRef<Path>) -> Result<Bundle> {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
         let manifest = Manifest::parse(&text)?;
-        Ok(Bundle { manifest, dir, client, cache: RefCell::new(BTreeMap::new()) })
+        Ok(Bundle { manifest, dir, client, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// One-call constructor: open a bundle on a fresh CPU PJRT client and
+    /// wrap it for shared ownership. This is the per-worker entry point the
+    /// scheduler uses (one client per worker — see module docs).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Arc<Bundle>> {
+        Ok(Arc::new(Bundle::load(cpu_client()?, dir)?))
     }
 
     /// Compile (or fetch cached) one program of this bundle by artifact stem.
-    pub fn program(&self, stem: &str) -> Result<Rc<Program>> {
-        if let Some(p) = self.cache.borrow().get(stem) {
-            return Ok(Rc::clone(p));
+    ///
+    /// The cache lock is NOT held across compilation (which takes seconds):
+    /// on a miss the lock is dropped, the program compiles, and the result is
+    /// inserted with first-writer-wins semantics — a concurrent compile of
+    /// the same stem wastes one compilation but every caller ends up sharing
+    /// the same cached executable.
+    pub fn program(&self, stem: &str) -> Result<Arc<Program>> {
+        if let Some(p) = self.cache.lock().expect("program cache poisoned").get(stem) {
+            return Ok(Arc::clone(p));
         }
         let path = self.dir.join(format!("{stem}.hlo.txt"));
         if !path.exists() {
@@ -165,24 +189,25 @@ impl Bundle {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
-        let prog = Rc::new(Program { exe, name: format!("{}:{stem}", self.manifest.name) });
-        self.cache.borrow_mut().insert(stem.to_string(), Rc::clone(&prog));
-        Ok(prog)
+        let prog = Arc::new(Program { exe, name: format!("{}:{stem}", self.manifest.name) });
+        let mut cache = self.cache.lock().expect("program cache poisoned");
+        let cached = cache.entry(stem.to_string()).or_insert_with(|| Arc::clone(&prog));
+        Ok(Arc::clone(cached))
     }
 
-    pub fn init(&self) -> Result<Rc<Program>> {
+    pub fn init(&self) -> Result<Arc<Program>> {
         self.program("init")
     }
-    pub fn step(&self) -> Result<Rc<Program>> {
+    pub fn step(&self) -> Result<Arc<Program>> {
         self.program("step")
     }
-    pub fn grad(&self) -> Result<Rc<Program>> {
+    pub fn grad(&self) -> Result<Arc<Program>> {
         self.program("grad")
     }
-    pub fn apply(&self) -> Result<Rc<Program>> {
+    pub fn apply(&self) -> Result<Arc<Program>> {
         self.program("apply")
     }
-    pub fn eval(&self, len: usize) -> Result<Rc<Program>> {
+    pub fn eval(&self, len: usize) -> Result<Arc<Program>> {
         if !self.manifest.eval_lens.contains(&len) {
             bail!(
                 "no eval artifact for length {len}; have {:?}",
@@ -193,7 +218,7 @@ impl Bundle {
     }
 
     /// Final-position-only NLL (emitted for eval_lens[0]; cloze probes).
-    pub fn eval_last(&self, len: usize) -> Result<Rc<Program>> {
+    pub fn eval_last(&self, len: usize) -> Result<Arc<Program>> {
         self.program(&format!("eval_last_L{len}"))
     }
 
@@ -218,9 +243,10 @@ impl Bundle {
     }
 }
 
-/// Open the shared CPU PJRT client.
-pub fn cpu_client() -> Result<Rc<xla::PjRtClient>> {
-    Ok(Rc::new(xla::PjRtClient::cpu()?))
+/// Open a CPU PJRT client under shared ownership. Workers that run variants
+/// concurrently each open their own client (see module docs).
+pub fn cpu_client() -> Result<Arc<xla::PjRtClient>> {
+    Ok(Arc::new(xla::PjRtClient::cpu()?))
 }
 
 #[cfg(test)]

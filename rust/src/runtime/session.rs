@@ -8,8 +8,14 @@
 //! logging cadence), and the gradient-accumulation zero buffer is uploaded
 //! once at `init`/`restore` and reused for the life of the session
 //! (§Perf L3 log in EXPERIMENTS.md).
+//!
+//! Sessions are lifetime-free: a `Session` owns an `Arc<Bundle>` rather than
+//! borrowing it, so scheduler workers can construct sessions wherever their
+//! bundle lives and return them up the stack (`Trainer::run_session`) without
+//! threading borrow lifetimes through every layer.
 
 use std::cell::Cell;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -22,12 +28,13 @@ pub struct StepOut {
     pub loss: f64,
     /// (num_routers x num_experts) dispatch fractions, row-major. `None`
     /// when the caller skipped the decode (telemetry is sampled, not free:
-    /// it forces a device->host transfer every step).
+    /// it forces a device->host transfer every step), or when the grad
+    /// artifact predates the router-load output (legacy accum path).
     pub router_load: Option<Vec<f32>>,
 }
 
-pub struct Session<'a> {
-    pub bundle: &'a Bundle,
+pub struct Session {
+    pub bundle: Arc<Bundle>,
     params: Vec<xla::Literal>,
     m: Vec<xla::Literal>,
     v: Vec<xla::Literal>,
@@ -44,9 +51,9 @@ pub struct Session<'a> {
     step_count: u64,
 }
 
-impl<'a> Session<'a> {
+impl Session {
     /// Initialize model params on device from `seed`; optimizer state zeroed.
-    pub fn init(bundle: &'a Bundle, seed: i32) -> Result<Session<'a>> {
+    pub fn init(bundle: Arc<Bundle>, seed: i32) -> Result<Session> {
         let p = bundle.init()?;
         let seed_lit = Tensor::scalar_i32(seed).to_literal()?;
         let params = p.run(&[&seed_lit]).context("init artifact")?;
@@ -75,12 +82,12 @@ impl<'a> Session<'a> {
 
     /// Restore from checkpointed tensors (params, m, v, step_count).
     pub fn restore(
-        bundle: &'a Bundle,
+        bundle: Arc<Bundle>,
         params: &[Tensor],
         m: &[Tensor],
         v: &[Tensor],
         step_count: u64,
-    ) -> Result<Session<'a>> {
+    ) -> Result<Session> {
         let n = bundle.manifest.num_leaves();
         if params.len() != n || m.len() != n || v.len() != n {
             bail!("checkpoint leaf count mismatch");
@@ -183,12 +190,14 @@ impl<'a> Session<'a> {
     }
 
     /// Microbatch grad-accumulation path on host tensors: encodes each
-    /// microbatch and delegates to the device path. Returns the mean loss.
+    /// microbatch and delegates to the device path. Decodes router telemetry
+    /// when the artifact provides it (the historical `train_step` behavior;
+    /// the pipelined trainer calls `train_step_accum_device` and samples).
     pub fn train_step_accum(
         &mut self,
         lr: f32,
         microbatches: &[(Tensor, Tensor)],
-    ) -> Result<f64> {
+    ) -> Result<StepOut> {
         let man = &self.bundle.manifest;
         let mut device = Vec::with_capacity(microbatches.len());
         for (tokens, targets) in microbatches {
@@ -197,19 +206,25 @@ impl<'a> Session<'a> {
         }
         let refs: Vec<(&xla::Literal, &xla::Literal)> =
             device.iter().map(|(t, g)| (t, g)).collect();
-        self.train_step_accum_device(lr, &refs)
+        self.train_step_accum_device(lr, &refs, true)
     }
 
     /// Microbatch grad-accumulation on pre-encoded literals: accumulate over
     /// `micro` batches of (micro_batch, T), then apply once. The accumulator
     /// is seeded from the session's persistent `grad_zero` literals — zero
-    /// gradient-buffer allocations or uploads happen here. Returns the mean
-    /// loss.
+    /// gradient-buffer allocations or uploads happen here.
+    ///
+    /// Returns the mean loss plus router telemetry sampled from the LAST
+    /// microbatch (each microbatch routes independently; one sample per
+    /// optimizer step is what the balance EMA consumes). `router_load` is
+    /// `None` when `decode_router_load` is false or when the grad artifact
+    /// predates the load output (legacy arity n+1 instead of n+2).
     pub fn train_step_accum_device(
         &mut self,
         lr: f32,
         microbatches: &[(&xla::Literal, &xla::Literal)],
-    ) -> Result<f64> {
+        decode_router_load: bool,
+    ) -> Result<StepOut> {
         if microbatches.is_empty() {
             bail!("no microbatches");
         }
@@ -221,6 +236,7 @@ impl<'a> Session<'a> {
         // accumulator is whatever the grad program last returned.
         let mut gacc: Option<Vec<xla::Literal>> = None;
         let mut loss_sum = 0.0f64;
+        let mut load_lit: Option<xla::Literal> = None;
         for &(tok, tgt) in microbatches {
             let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 * n + 2);
             inputs.extend(self.params.iter());
@@ -231,8 +247,17 @@ impl<'a> Session<'a> {
             inputs.push(tok);
             inputs.push(tgt);
             let mut outs = grad.run(&inputs)?;
-            if outs.len() != n + 1 {
-                bail!("grad returned {} outputs, expected {}", outs.len(), n + 1);
+            // Newer grad artifacts append the router load as a final output
+            // (n+2); legacy bundles emit n+1 and simply report no telemetry.
+            if outs.len() == n + 2 {
+                load_lit = Some(outs.pop().unwrap());
+            } else if outs.len() != n + 1 {
+                bail!(
+                    "grad returned {} outputs, expected {} or {}",
+                    outs.len(),
+                    n + 1,
+                    n + 2
+                );
             }
             let loss_lit = outs.pop().unwrap();
             gacc = Some(outs);
@@ -259,7 +284,11 @@ impl<'a> Session<'a> {
         self.v = outs.split_off(2 * n);
         self.m = outs.split_off(n);
         self.params = outs;
-        Ok(loss_sum / microbatches.len() as f64)
+        let router_load = match (decode_router_load, load_lit) {
+            (true, Some(l)) => Some(Tensor::from_literal(&l)?.as_f32()?.to_vec()),
+            _ => None,
+        };
+        Ok(StepOut { loss: loss_sum / microbatches.len() as f64, router_load })
     }
 
     /// Evaluate summed NLL + token count on one (1, L) sequence pair.

@@ -251,13 +251,20 @@ pub fn literal_from_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
 }
 
 /// `xla::Literal` owns plain host memory and carries no thread-affine state
-/// (it is independent of the PJRT client), but the FFI wrapper does not
-/// declare `Send`. The prefetch pipeline encodes literals on a background
-/// thread and hands them to the step loop; this newtype carries them across.
+/// (it is independent of the PJRT client — construction via `Literal::vec1`
+/// never touches a device), but the FFI wrapper does not declare `Send`. The
+/// prefetch pipeline encodes literals on a background thread and hands them
+/// to the step loop; this newtype carries them across. This is the ONLY
+/// `unsafe impl Send` in the crate: the Arc-based runtime refactor removed
+/// every other cross-thread need, but literal encode-off-thread is the whole
+/// point of the pipeline's second stage, so the shim stays.
 pub struct SendLiteral(pub xla::Literal);
 
 // SAFETY: a Literal is an owned host-side buffer + shape metadata; moving it
 // between threads is moving a heap allocation. No interior shared state.
+// Exercised by `send_literal_crosses_threads` below, which encodes on a
+// background thread, moves the literal across a channel, and decodes on the
+// receiving thread — the exact transport the prefetch pipeline performs.
 unsafe impl Send for SendLiteral {}
 
 #[cfg(test)]
@@ -336,6 +343,27 @@ mod tests {
         let t = Tensor::from_literal(&lit).unwrap();
         assert_eq!(t.shape, vec![2, 3]);
         assert_eq!(t.as_i32().unwrap(), &data[..]);
+    }
+
+    #[test]
+    fn send_literal_crosses_threads() {
+        // The SAFETY contract of `unsafe impl Send for SendLiteral`: a
+        // literal encoded on one thread decodes bit-identically after moving
+        // to another (the prefetch pipeline's stage-2 -> step-loop handoff).
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let t = Tensor::f32(&[2, 3], vec![1.5, -2.25, 0.0, f32::MIN, f32::MAX, 3e-9]);
+            tx.send(SendLiteral(t.to_literal().unwrap())).unwrap();
+        })
+        .join()
+        .unwrap();
+        let lit = rx.recv().unwrap();
+        let back = Tensor::from_literal(&lit.0).unwrap();
+        assert_eq!(back.shape, vec![2, 3]);
+        assert_eq!(
+            back.as_f32().unwrap(),
+            &[1.5, -2.25, 0.0, f32::MIN, f32::MAX, 3e-9]
+        );
     }
 
     #[test]

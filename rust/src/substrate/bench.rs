@@ -101,6 +101,12 @@ impl Reporter {
         self.rows.push(cells.to_vec());
     }
 
+    /// The accumulated rows, in insertion order — the scheduler determinism
+    /// guard compares these across `--jobs` settings byte for byte.
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

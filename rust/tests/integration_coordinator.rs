@@ -1,6 +1,10 @@
 //! Coordinator integration: full Trainer loop, checkpoint save/restore
-//! equivalence, downstream probes above chance after training, FLOPS mirror
-//! vs manifest, and grad-accum trainer path. Requires `make artifacts`.
+//! equivalence, checkpoint retention, downstream probes above chance after
+//! training, FLOPS mirror vs manifest, grad-accum trainer path, and the
+//! experiment scheduler (serial/parallel determinism + failure isolation).
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
 
 use rom::config::{ModelCfg, TrainCfg};
 use rom::coordinator::checkpoint::Checkpoint;
@@ -9,7 +13,9 @@ use rom::coordinator::eval::eval_ppl;
 use rom::coordinator::trainer::Trainer;
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::probes::make_cloze;
-use rom::runtime::artifact::{cpu_client, Bundle};
+use rom::experiments::harness::RunSpec;
+use rom::experiments::scheduler::run_sweep;
+use rom::runtime::artifact::Bundle;
 use rom::runtime::session::Session;
 
 fn artifacts_root() -> std::path::PathBuf {
@@ -20,16 +26,19 @@ fn have(name: &str) -> bool {
     artifacts_root().join(name).join("manifest.json").exists()
 }
 
+fn open(name: &str) -> Arc<Bundle> {
+    Bundle::open(artifacts_root().join(name)).unwrap()
+}
+
 #[test]
 fn trainer_loop_reduces_loss_and_reports() {
     if !have("mamba-tiny") {
         eprintln!("skipping: artifacts missing");
         return;
     }
-    let client = cpu_client().unwrap();
-    let bundle = Bundle::load(client, artifacts_root().join("mamba-tiny")).unwrap();
+    let bundle = open("mamba-tiny");
     let cfg = TrainCfg { steps: 30, max_lr: 3e-3, log_every: 0, ..Default::default() };
-    let mut trainer = Trainer::new(&bundle, cfg);
+    let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
     trainer.quiet = true;
     let report = trainer.run().unwrap();
     // 30 steps on structured data: loss must drop below the uniform floor
@@ -55,10 +64,9 @@ fn checkpoint_restore_matches_session() {
         eprintln!("skipping: artifacts missing");
         return;
     }
-    let client = cpu_client().unwrap();
-    let bundle = Bundle::load(client, artifacts_root().join("mamba-tiny")).unwrap();
+    let bundle = open("mamba-tiny");
     let man = bundle.manifest.clone();
-    let mut sess = Session::init(&bundle, 3).unwrap();
+    let mut sess = Session::init(Arc::clone(&bundle), 3).unwrap();
     // A couple of steps so state is non-trivial.
     let corpus = Corpus::new(CorpusSpec::default(), 17);
     let stream = corpus.generate(0, 4 * man.batch_size * (man.seq_len + 1));
@@ -75,7 +83,8 @@ fn checkpoint_restore_matches_session() {
     Checkpoint { step: sess.step_count(), params, m, v }.save(&path).unwrap();
 
     let ck = Checkpoint::load(&path).unwrap();
-    let sess2 = Session::restore(&bundle, &ck.params, &ck.m, &ck.v, ck.step).unwrap();
+    let sess2 =
+        Session::restore(Arc::clone(&bundle), &ck.params, &ck.m, &ck.v, ck.step).unwrap();
     assert_eq!(sess2.step_count(), sess.step_count());
     let p1 = eval_ppl(&sess, &corpus, 5, 2, man.eval_lens[0]).unwrap();
     let p2 = eval_ppl(&sess2, &corpus, 5, 2, man.eval_lens[0]).unwrap();
@@ -84,13 +93,50 @@ fn checkpoint_restore_matches_session() {
 }
 
 #[test]
+fn checkpoint_retention_prunes_old_checkpoints() {
+    if !have("mamba-tiny") {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let bundle = open("mamba-tiny");
+    let dir = std::env::temp_dir().join("rom_integration_retention");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = TrainCfg {
+        steps: 6,
+        max_lr: 1e-3,
+        checkpoint_every: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
+    trainer.quiet = true;
+    trainer.final_eval = false;
+    trainer.checkpoint_dir = Some(dir.clone());
+    trainer.checkpoint_keep = Some(2);
+    trainer.run().unwrap();
+    // Saves land at steps 2/4/6 (+ the final save rewrites step 6); with
+    // keep=2 only the two newest survive.
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    let prefix = format!("{}-step", bundle.manifest.name);
+    assert_eq!(
+        names,
+        vec![format!("{prefix}4.ckpt"), format!("{prefix}6.ckpt")],
+        "retention left the wrong checkpoint set"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn probes_score_and_flops_mirror() {
     if !have("rom-tiny") {
         eprintln!("skipping: artifacts missing");
         return;
     }
-    let client = cpu_client().unwrap();
-    let bundle = Bundle::load(client, artifacts_root().join("rom-tiny")).unwrap();
+    let bundle = open("rom-tiny");
     // FLOPS mirror: rust formula == python-emitted manifest value.
     let cfg = ModelCfg::parse(&bundle.manifest.model).unwrap();
     let mirrored =
@@ -101,7 +147,7 @@ fn probes_score_and_flops_mirror() {
 
     // Probe scoring wiring: runs and returns sane values on an untrained
     // model (accuracy near chance, ppl finite).
-    let sess = Session::init(&bundle, 0).unwrap();
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
     let corpus = Corpus::new(CorpusSpec::default(), 17);
     let ctx = bundle.manifest.eval_lens[0];
     let result = score_cloze(&sess, &make_cloze(&corpus, 3, 8, ctx)).unwrap();
@@ -120,8 +166,7 @@ fn pipelined_trainer_matches_synchronous_exactly() {
         eprintln!("skipping: artifacts missing");
         return;
     }
-    let client = cpu_client().unwrap();
-    let bundle = Bundle::load(client, artifacts_root().join("mamba-tiny")).unwrap();
+    let bundle = open("mamba-tiny");
     for grad_accum in [false, true] {
         if grad_accum && bundle.manifest.batch_size % bundle.manifest.micro_batch != 0 {
             continue;
@@ -135,7 +180,7 @@ fn pipelined_trainer_matches_synchronous_exactly() {
             ..Default::default()
         };
         let run = |pipelined: bool| {
-            let mut trainer = Trainer::new(&bundle, cfg.clone());
+            let mut trainer = Trainer::new(Arc::clone(&bundle), cfg.clone());
             trainer.quiet = true;
             trainer.pipelined = pipelined;
             trainer.run().unwrap()
@@ -162,8 +207,7 @@ fn trainer_grad_accum_path_runs() {
         eprintln!("skipping: artifacts missing");
         return;
     }
-    let client = cpu_client().unwrap();
-    let bundle = Bundle::load(client, artifacts_root().join("mamba-tiny")).unwrap();
+    let bundle = open("mamba-tiny");
     if bundle.manifest.batch_size % bundle.manifest.micro_batch != 0 {
         return;
     }
@@ -174,9 +218,87 @@ fn trainer_grad_accum_path_runs() {
         log_every: 0,
         ..Default::default()
     };
-    let mut trainer = Trainer::new(&bundle, cfg);
+    let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
     trainer.quiet = true;
     let report = trainer.run().unwrap();
     assert!(report.final_loss.is_finite());
     assert_eq!(report.metrics.losses.len(), 4);
+}
+
+#[test]
+fn scheduler_parallel_sweep_matches_serial() {
+    // The acceptance guard for `--jobs N`: a 2-variant sweep run serially
+    // and on 2 workers must produce bit-identical per-variant final losses
+    // AND byte-identical table rows (`run_rows` is the exact path behind
+    // `rom experiment <id>`).
+    if !(have("mamba-tiny") && have("rom-tiny")) {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let variants: Vec<String> = vec!["mamba-tiny".into(), "rom-tiny".into()];
+    let mut spec = RunSpec::new(6, 3e-3);
+    spec.quiet = true;
+    let serial = run_sweep(&variants, &spec, 1);
+    let parallel = run_sweep(&variants, &spec, 2);
+    assert_eq!(serial.len(), 2);
+    for ((name, a), b) in variants.iter().zip(&serial).zip(&parallel) {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_eq!(a.name, *name, "row order must follow variant order");
+        assert_eq!(
+            a.final_loss.to_bits(),
+            b.final_loss.to_bits(),
+            "{name}: serial loss {} != parallel loss {}",
+            a.final_loss,
+            b.final_loss
+        );
+        assert_eq!(a.smoothed_loss.to_bits(), b.smoothed_loss.to_bits());
+        assert_eq!(a.ppl.len(), b.ppl.len());
+        for ((ca, pa), (cb, pb)) in a.ppl.iter().zip(b.ppl.iter()) {
+            assert_eq!(ca, cb);
+            assert_eq!(pa.to_bits(), pb.to_bits(), "{name}: ppl@{ca} differs");
+        }
+    }
+
+    // Full table-row comparison through the real row formatter.
+    let rows = |jobs: usize| {
+        rom::experiments::tables::run_rows(
+            "scheduler determinism guard",
+            &["mamba-tiny", "rom-tiny"],
+            6,
+            jobs,
+        )
+        .unwrap()
+        .rows()
+        .to_vec()
+    };
+    let rows_serial = rows(1);
+    let rows_parallel = rows(2);
+    assert_eq!(rows_serial.len(), 2);
+    assert_eq!(rows_serial, rows_parallel, "table rows differ across --jobs");
+}
+
+#[test]
+fn scheduler_isolates_failing_variant() {
+    // One variant without artifacts fails its own row; the sibling rows
+    // (including one scheduled AFTER the failure) complete and match the
+    // all-good run bit for bit.
+    if !have("mamba-tiny") {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let variants: Vec<String> = vec![
+        "mamba-tiny".into(),
+        "no-such-variant-xyz".into(),
+        "mamba-tiny".into(),
+    ];
+    let mut spec = RunSpec::new(4, 3e-3);
+    spec.quiet = true;
+    spec.final_eval = false;
+    let results = run_sweep(&variants, &spec, 2);
+    assert_eq!(results.len(), 3);
+    let first = results[0].as_ref().expect("healthy variant failed");
+    assert!(results[1].is_err(), "missing artifacts must surface as Err");
+    let third = results[2].as_ref().expect("variant after the failure was poisoned");
+    // Same variant, same spec, isolated workers: identical training.
+    assert_eq!(first.final_loss.to_bits(), third.final_loss.to_bits());
 }

@@ -4,7 +4,9 @@
 //!
 //! Requires `make artifacts` (tests skip politely when artifacts are absent).
 
-use rom::runtime::artifact::{cpu_client, Bundle};
+use std::sync::Arc;
+
+use rom::runtime::artifact::Bundle;
 use rom::runtime::session::Session;
 use rom::runtime::tensor::Tensor;
 use rom::substrate::rng::Rng;
@@ -28,13 +30,12 @@ fn init_step_eval_roundtrip() {
         eprintln!("skipping: artifacts/rom-tiny missing (run `make artifacts`)");
         return;
     }
-    let client = cpu_client().unwrap();
-    let bundle = Bundle::load(client, artifacts_root().join("rom-tiny")).unwrap();
+    let bundle = Bundle::open(artifacts_root().join("rom-tiny")).unwrap();
     let man = &bundle.manifest;
     assert!(man.num_leaves() > 0);
     assert_eq!(man.num_experts, 8);
 
-    let mut sess = Session::init(&bundle, 0).unwrap();
+    let mut sess = Session::init(Arc::clone(&bundle), 0).unwrap();
     let mut rng = Rng::new(7);
     let tok = rand_batch(&mut rng, man.batch_size, man.seq_len, man.vocab_size);
     let tgt = rand_batch(&mut rng, man.batch_size, man.seq_len, man.vocab_size);
@@ -81,14 +82,13 @@ fn golden_cross_check() {
             eprintln!("skipping golden for {name}");
             continue;
         }
-        let client = cpu_client().unwrap();
-        let bundle = Bundle::load(client, artifacts_root().join(name)).unwrap();
+        let bundle = Bundle::open(artifacts_root().join(name)).unwrap();
         let Some((data_seed, lr, golden_losses)) = bundle.golden().unwrap() else {
             eprintln!("no golden.json for {name}");
             continue;
         };
         let man = bundle.manifest.clone();
-        let mut sess = Session::init(&bundle, 0).unwrap();
+        let mut sess = Session::init(Arc::clone(&bundle), 0).unwrap();
         // Reproduce numpy RandomState(data_seed).randint batches: we can't,
         // so golden.json batches use the same MT19937 stream — instead the
         // python side records its own batches implicitly; here we only check
@@ -108,7 +108,7 @@ fn golden_cross_check() {
         );
 
         // Determinism: fresh session, same seed + batch => identical loss.
-        let mut sess2 = Session::init(&bundle, 0).unwrap();
+        let mut sess2 = Session::init(Arc::clone(&bundle), 0).unwrap();
         let out2 = sess2.train_step(lr as f32, &tok, &tgt).unwrap();
         assert_eq!(out.loss, out2.loss, "{name}: rust step nondeterministic");
     }
@@ -120,8 +120,7 @@ fn grad_accum_matches_fused() {
         eprintln!("skipping: artifacts/mamba-tiny missing");
         return;
     }
-    let client = cpu_client().unwrap();
-    let bundle = Bundle::load(client, artifacts_root().join("mamba-tiny")).unwrap();
+    let bundle = Bundle::open(artifacts_root().join("mamba-tiny")).unwrap();
     let man = bundle.manifest.clone();
     if man.batch_size % man.micro_batch != 0 {
         eprintln!("skipping: micro_batch does not divide batch");
@@ -131,7 +130,7 @@ fn grad_accum_matches_fused() {
     let tok = rand_batch(&mut rng, man.batch_size, man.seq_len, man.vocab_size);
     let tgt = rand_batch(&mut rng, man.batch_size, man.seq_len, man.vocab_size);
 
-    let mut fused = Session::init(&bundle, 0).unwrap();
+    let mut fused = Session::init(Arc::clone(&bundle), 0).unwrap();
     let fused_out = fused.train_step(1e-3, &tok, &tgt).unwrap();
 
     // Split the batch into micro_batch-sized slices.
@@ -145,10 +144,27 @@ fn grad_accum_matches_fused() {
         };
         micro.push((slice(&tok), slice(&tgt)));
     }
-    let mut accum = Session::init(&bundle, 0).unwrap();
-    let mean_loss = accum.train_step_accum(1e-3, &micro).unwrap();
+    let mut accum = Session::init(Arc::clone(&bundle), 0).unwrap();
+    let accum_out = accum.train_step_accum(1e-3, &micro).unwrap();
+    let mean_loss = accum_out.loss;
     let rel = (mean_loss - fused_out.loss).abs() / fused_out.loss;
     assert!(rel < 1e-4, "accum loss {mean_loss} vs fused {}", fused_out.loss);
+    // Router telemetry on the accum path (new grad artifacts append the load
+    // output; legacy bundles report None). When present it must have the
+    // same shape as the fused path's. Normalization only holds for MoE
+    // variants — dense models emit the all-zero (1, 1) placeholder load.
+    if let Some(load) = &accum_out.router_load {
+        assert_eq!(load.len(), man.num_routers * man.num_experts);
+        if man.num_experts > 1 {
+            for r in 0..man.num_routers {
+                let s: f32 =
+                    load[r * man.num_experts..(r + 1) * man.num_experts].iter().sum();
+                assert!((s - 1.0).abs() < 1e-3, "accum router {r} load sums to {s}");
+            }
+        }
+    } else {
+        eprintln!("note: grad artifact predates router-load output (legacy arity)");
+    }
 
     // Parameters after one step must agree across the two paths.
     let (p1, _, _) = fused.export().unwrap();

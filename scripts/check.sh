@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Repo check gate: release build + tests + formatting. Run from anywhere.
+# Repo check gate: release build + tests + lints + formatting. Run from anywhere.
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -16,4 +16,11 @@ fi
 
 cargo build --release
 cargo test -q
+# Lint gate covers every target (lib, bin, benches, tests, examples); any
+# warning is an error. Skips gracefully where the clippy component is absent.
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "warning: cargo clippy unavailable; skipping lint gate" >&2
+fi
 cargo fmt --check
