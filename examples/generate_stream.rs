@@ -1,0 +1,64 @@
+//! Generation quickstart: train rom-tiny briefly, then decode continuations
+//! of two corpus prompts — one at an artifact prefill length (single fused
+//! prefill call) and one short prompt (decode_step fallback) — printing the
+//! sampled tokens with their corpus topics and the per-token latency.
+//!
+//!     make artifacts && cargo run --release --example generate_stream
+
+use std::sync::Arc;
+
+use rom::config::TrainCfg;
+use rom::coordinator::generate::{generate, GenerateCfg};
+use rom::coordinator::trainer::Trainer;
+use rom::data::corpus::{Corpus, CorpusSpec};
+use rom::experiments::harness::artifacts_root;
+use rom::runtime::artifact::Bundle;
+
+fn main() -> anyhow::Result<()> {
+    let bundle = Bundle::open(artifacts_root().join("rom-tiny"))?;
+    let Some(spec) = bundle.manifest.decode.clone() else {
+        anyhow::bail!("rom-tiny has no decode artifacts — re-run `make artifacts`");
+    };
+
+    // 1. A short training run so the router and transition tables are live
+    //    (the trained session comes straight back from the trainer).
+    let cfg = TrainCfg { steps: 40, max_lr: 3e-3, log_every: 0, ..Default::default() };
+    let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
+    trainer.quiet = true;
+    trainer.final_eval = false;
+    let (_report, sess) = trainer.run_session()?;
+
+    // 2. Prompts from held-out corpus streams.
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let prefill_len = bundle.manifest.eval_lens[0];
+    let gen_cfg = GenerateCfg { max_new: 24, temperature: 0.8, top_k: 8, seed: 1 };
+
+    for (label, len) in [("prefill artifact", prefill_len), ("step fallback", 10)] {
+        let prompts: Vec<Vec<i32>> =
+            (0..spec.batch as u64).map(|r| corpus.generate(7000 + r, len)).collect();
+        let report = generate(&sess, &prompts, &gen_cfg)?;
+        println!("\n== {label}: {} prompt tokens ==", report.prompt_len);
+        for (i, completion) in report.completions.iter().enumerate() {
+            let topics: Vec<String> = completion
+                .iter()
+                .map(|&t| match corpus.topic_of(t) {
+                    Some(tp) => tp.to_string(),
+                    None => "-".into(), // shared-band token
+                })
+                .collect();
+            println!("row {i} tokens: {completion:?}");
+            println!("row {i} topics: [{}]", topics.join(" "));
+        }
+        println!(
+            "prompt consumed in {:.1} ms ({})",
+            report.prefill_s * 1e3,
+            if report.prefill_used_artifact { "one prefill call" } else { "stepwise" }
+        );
+        if let (Some(ms), Some(tps)) =
+            (report.median_decode_ms(), report.decode_tokens_per_sec())
+        {
+            println!("decode: {ms:.2} ms/step median, {tps:.0} tokens/s");
+        }
+    }
+    Ok(())
+}

@@ -11,7 +11,10 @@ Usage:
 
 Artifacts per variant (DESIGN.md §2 artifact contract):
   init.hlo.txt, step.hlo.txt, grad.hlo.txt, apply.hlo.txt,
-  eval_L{T}.hlo.txt (one per cfg.eval_lens), manifest.json
+  eval_L{T}.hlo.txt (one per cfg.eval_lens), manifest.json,
+  decode_step.hlo.txt + prefill_L{T}.hlo.txt (generation; see compile.decode
+  — omitted, with the reason recorded in the manifest, when the variant
+  cannot carry fixed-shape decode state)
   [+ golden.json with python-side step losses when --golden]
 """
 
@@ -27,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax._src.lib import xla_client as xc
 
-from compile import analysis, train
+from compile import analysis, decode, train
 from compile.config import ModelConfig
 from compile.model import num_routers
 from compile.presets import all_presets, emit_configs, get_preset
@@ -119,6 +122,30 @@ def lower_variant(cfg: ModelConfig, out_dir: str, golden: bool = False) -> Dict:
         f"eval_last_L{L}.hlo.txt",
         jax.jit(train.make_eval_last_fn(cfg)).lower(params_sd, etok, etok))
 
+    # Generation artifacts: one-token decode step + prefill at each eval
+    # length, with the recurrent state as an explicit flat tensor list (the
+    # manifest "decode" section is the calling convention).
+    decode_reason = decode.unsupported_reason(cfg)
+    decode_manifest = None
+    if decode_reason is None:
+        Bd = cfg.decode_batch
+        spec = decode.state_spec(cfg)
+        state_sd = [sd(tuple(s["shape"]), jnp.dtype(s["dtype"])) for s in spec]
+        sizes["decode_step"] = write(
+            "decode_step.hlo.txt",
+            jax.jit(decode.make_decode_step_fn(cfg)).lower(
+                params_sd, sd((Bd,), i32), state_sd))
+        for L in cfg.eval_lens:
+            sizes[f"prefill_L{L}"] = write(
+                f"prefill_L{L}.hlo.txt",
+                jax.jit(decode.make_prefill_fn(cfg)).lower(
+                    params_sd, sd((Bd, L), i32)))
+        decode_manifest = {
+            "batch": Bd,
+            "prefill_lens": cfg.eval_lens,
+            "state": spec,
+        }
+
     desc = analysis.describe(cfg, T)
     leaves = param_manifest(cfg)
     manifest = {
@@ -135,6 +162,10 @@ def lower_variant(cfg: ModelConfig, out_dir: str, golden: bool = False) -> Dict:
                            cfg.attn_moe_experts if cfg.attn_moe != "none" else 1),
         "analysis": desc,
         "artifact_bytes": sizes,
+        # Present iff generation artifacts were emitted; otherwise the
+        # reason is recorded so `rom generate` can explain itself.
+        "decode": decode_manifest,
+        "decode_unsupported": decode_reason,
     }
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)

@@ -80,6 +80,9 @@ class ModelConfig:
     seq_len: int = 128
     micro_batch: int = 0           # 0 -> no grad-accum artifacts
     eval_lens: List[int] = field(default_factory=lambda: [128, 256, 512])
+    # Batch rows baked into the prefill_L{L}/decode_step generation artifacts
+    # (the rust `rom generate` path chunks prompts into groups of this size).
+    decode_batch: int = 2
 
     def __post_init__(self) -> None:
         if self.arch not in ARCHS:
@@ -97,6 +100,8 @@ class ModelConfig:
             self.dt_rank = max(1, self.d_model // 16)
         if self.rom_targets and not self.rom.enabled:
             raise ValueError("rom_targets set but rom.num_experts <= 1")
+        if self.decode_batch < 1:
+            raise ValueError("decode_batch must be >= 1")
 
     # --- derived sizes ----------------------------------------------------
     @property

@@ -1,0 +1,196 @@
+"""Stateful autoregressive decoding: the generation-artifact builders.
+
+The paper's efficiency claim — "constant inference-time computation and
+memory complexity" — is only observable with a decode path. This module
+assembles the per-block step functions (`mamba_block_step` & co.) into two
+artifacts per variant, lowered by `compile.aot` next to the training ones:
+
+  prefill_L{L} : (params, tokens (B, L) i32) -> (logits (B, V), state...)
+                 consume a prompt, return last-position logits + the packed
+                 recurrent state (lowered as a fused lax.scan over the step
+                 body — one device call; chunk-parallel prefill is a future
+                 optimization, see ROADMAP).
+  decode_step  : (params, token (B,) i32, state...) -> (logits (B, V), state...)
+                 one token in, carried state in -> next-token logits, state out.
+
+The state is an explicit flat tensor list in a fixed layout-walk order
+(`state_spec`), recorded in the manifest's "decode" section so the rust
+runtime can allocate, thread and validate it without rebuilding the model:
+
+  pos                ()            i32   tokens consumed so far
+  blocks.{i}.conv    (B, k-1, Di)  f32   rolling conv-input window (SSM blocks)
+  blocks.{i}.ssm     (B, Di, N)    f32   Mamba selective-scan state
+  blocks.{i}.ssd     (B, H, P, N)  f32   Mamba-2 SSD state
+  blocks.{i}.delta   (B, H, Dk, Dk) f32  GDN delta-rule state
+  blocks.{i}.k_cache (B, W, D)     f32   SWA rolling key cache (post-RoPE)
+  blocks.{i}.v_cache (B, W, D)     f32   SWA rolling value cache
+
+B is `cfg.decode_batch`. SWA blocks require cfg.window > 0 (the cache
+capacity is the window); variants with window <= 0 get no decode artifacts
+(`unsupported_reason` names why, and the manifest records it).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import ModelConfig
+from compile.layers.attention import attn_block_step
+from compile.layers.gdn import gdn_block_step
+from compile.layers.mamba2 import mamba2_block_step
+from compile.layers.mlp import mlp_block
+from compile.layers.norm import rms_norm
+from compile.layers.router import Routing
+from compile.layers.ssm import mamba_block_step
+
+
+def unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """None if the variant can decode, else a human-readable reason."""
+    if "swa" in cfg.block_layout() and cfg.window <= 0:
+        return ("swa block with window <= 0: the decode KV cache capacity is "
+                "the sliding window, so full-context attention has no "
+                "fixed-shape state")
+    return None
+
+
+def state_spec(cfg: ModelConfig) -> List[Dict]:
+    """Flat state layout: [{name, shape, dtype}, ...] with batch dim
+    cfg.decode_batch. Order is the artifact calling convention (leaf 0 is
+    always the i32 `pos` scalar), mirrored by rust `runtime::artifact`."""
+    reason = unsupported_reason(cfg)
+    if reason is not None:
+        raise ValueError(f"{cfg.name}: decoding unsupported ({reason})")
+    B = cfg.decode_batch
+    D, Di, N, k = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.conv_kernel
+    H = cfg.n_heads
+    spec: List[Dict] = [{"name": "pos", "shape": [], "dtype": "int32"}]
+
+    def add(name: str, shape: List[int]):
+        spec.append({"name": name, "shape": shape, "dtype": "float32"})
+
+    for i, kind in enumerate(cfg.block_layout()):
+        if kind == "mamba":
+            add(f"blocks.{i}.conv", [B, k - 1, Di])
+            add(f"blocks.{i}.ssm", [B, Di, N])
+        elif kind == "mamba2":
+            add(f"blocks.{i}.conv", [B, k - 1, Di])
+            add(f"blocks.{i}.ssd", [B, H, Di // H, N])
+        elif kind == "gdn":
+            add(f"blocks.{i}.conv", [B, k - 1, Di])
+            add(f"blocks.{i}.delta", [B, H, Di // H, Di // H])
+        elif kind == "swa":
+            add(f"blocks.{i}.k_cache", [B, cfg.window, D])
+            add(f"blocks.{i}.v_cache", [B, cfg.window, D])
+        elif kind == "mlp":
+            pass  # stateless
+        else:
+            raise AssertionError(kind)
+    return spec
+
+
+def init_state(cfg: ModelConfig, batch: Optional[int] = None) -> List[jax.Array]:
+    """Zeroed state tensors matching `state_spec` (pos = 0)."""
+    out: List[jax.Array] = []
+    for s in state_spec(cfg):
+        shape = list(s["shape"])
+        if batch is not None and shape:
+            shape[0] = batch
+        out.append(jnp.zeros(tuple(shape), jnp.dtype(s["dtype"])))
+    return out
+
+
+def forward_step(cfg: ModelConfig, params: Dict, token: jax.Array,
+                 state: List[jax.Array]):
+    """One decode step: token (B,) i32 + state -> (logits (B, V), new state).
+
+    Mirrors `model.forward` exactly (pre-norm residual stream, hybrid
+    routing inheritance, tied/untied head); per-block math is delegated to
+    the layer step functions, which are parity-tested against the
+    full-window blocks.
+    """
+    layout = cfg.block_layout()
+    pos = state[0]
+    cursor = 1
+    new_state: List[jax.Array] = [pos + 1]
+
+    x = params["embed"][token]                             # (B, D)
+    prev_rom_routing: Optional[Routing] = None
+
+    for i, kind in enumerate(layout):
+        p = params["blocks"][i]
+        h = rms_norm(x, params["norms"][i])
+        if kind == "mamba":
+            out, conv, ssm, rom_r = mamba_block_step(
+                cfg, p, h, state[cursor], state[cursor + 1])
+            new_state += [conv, ssm]
+            cursor += 2
+            prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
+        elif kind == "mamba2":
+            out, conv, ssd, rom_r = mamba2_block_step(
+                cfg, p, h, state[cursor], state[cursor + 1])
+            new_state += [conv, ssd]
+            cursor += 2
+            prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
+        elif kind == "gdn":
+            out, conv, delta, rom_r = gdn_block_step(
+                cfg, p, h, state[cursor], state[cursor + 1])
+            new_state += [conv, delta]
+            cursor += 2
+            prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
+        elif kind == "swa":
+            out, kc, vc = attn_block_step(
+                cfg, p, h, state[cursor], state[cursor + 1], pos)
+            new_state += [kc, vc]
+            cursor += 2
+        elif kind == "mlp":
+            inherited = None
+            if cfg.ffn_moe.enabled and "router" not in p:
+                inherited = prev_rom_routing
+            out3, _ = mlp_block(cfg, p, h[:, None, :], inherited=inherited)
+            out = out3[:, 0, :]
+        else:
+            raise AssertionError(kind)
+        x = x + out
+
+    x = rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return logits, new_state
+
+
+def make_decode_step_fn(cfg: ModelConfig):
+    def decode_step(params, token, state):
+        return forward_step(cfg, params, token, state)
+
+    return decode_step
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    """Prompt consumption: (params, tokens (B, L)) -> (last logits, state).
+
+    Lowered as a lax.scan over the decode step body, so prefill + k x
+    decode_step is consistent with L+k decode steps *by construction* —
+    the parity tests then only need to pin the step body itself against
+    the full-window forward.
+    """
+
+    def prefill(params, tokens):
+        B = tokens.shape[0]
+        state0 = init_state(cfg, batch=B)
+        logits0 = jnp.zeros((B, cfg.vocab_size))
+
+        def body(carry, tok_t):
+            state, _ = carry
+            logits, new_state = forward_step(cfg, params, tok_t, state)
+            return (new_state, logits), None
+
+        (state, logits), _ = jax.lax.scan(
+            body, (state0, logits0), jnp.moveaxis(tokens, 1, 0))
+        return logits, state
+
+    return prefill

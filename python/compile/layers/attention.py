@@ -33,6 +33,19 @@ def rope(x: jax.Array, base: float = 10000.0) -> jax.Array:
     return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
 
 
+def rope_at(x: jax.Array, pos: jax.Array, base: float = 10000.0) -> jax.Array:
+    """Rotary embedding of single-position vectors x (B, H, Dh) at integer
+    position `pos` (traced i32 scalar) — `rope` evaluated at index pos, so
+    cached keys rotated at insertion time stay consistent with queries."""
+    Dh = x.shape[-1]
+    half = Dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32) * freqs                  # (half,)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
 def _attn_E(cfg: ModelConfig, bank: str) -> int:
     """Expert count of an attention projection bank under MoA/SwitchHead."""
     if cfg.attn_moe == "moa" and bank in ("q", "o"):
@@ -98,3 +111,54 @@ def attn_block(cfg: ModelConfig, p: Dict, x: jax.Array, *, window: Optional[int]
     ctx = ctx.transpose(0, 2, 1, 3).reshape(B * T, D)
     out = proj("o", ctx)
     return out.reshape(B, T, D), stats
+
+
+def attn_block_step(cfg: ModelConfig, p: Dict, x: jax.Array,
+                    k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array):
+    """One-token forward of `attn_block` on rolling KV caches.
+
+    Args:
+      x: (B, D) token representations.
+      k_cache/v_cache: (B, W, D) rolling caches, oldest slot first. Keys are
+        stored post-RoPE (rotated at their absolute positions, so relative
+        attention falls out of the dot product). W = cfg.window: the cache
+        capacity IS the sliding window, which requires cfg.window > 0.
+      pos: traced i32 scalar, the absolute position of the incoming token.
+    Returns:
+      (out (B, D), new_k_cache, new_v_cache).
+    """
+    B, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    W = k_cache.shape[1]
+
+    r: Optional[Routing] = None
+    if cfg.attn_moe != "none":
+        r = route_tokens(x, p["router"], top_k=1)
+
+    def proj(bank: str, inp):
+        w = p[f"w_{bank}"]
+        if w.ndim == 3 and w.shape[0] > 1:
+            y = bank_apply(inp, w, r)
+            if bank == "o":
+                y = y * jnp.sum(r.gates, axis=-1, keepdims=True)
+            return y
+        return bank_apply(inp, w, None)
+
+    q = rope_at(proj("q", x).reshape(B, H, Dh), pos)
+    k = rope_at(proj("k", x).reshape(B, H, Dh), pos)
+    v = proj("v", x)
+
+    k_cache = jnp.concatenate([k_cache[:, 1:], k.reshape(B, 1, D)], axis=1)
+    v_cache = jnp.concatenate([v_cache[:, 1:], v[:, None, :]], axis=1)
+    kc = k_cache.reshape(B, W, H, Dh)
+    vc = v_cache.reshape(B, W, H, Dh)
+
+    scores = jnp.einsum("bhd,bwhd->bhw", q, kc) / jnp.sqrt(Dh)
+    # Slot w holds absolute position pos-(W-1)+w; valid iff that position
+    # exists (>= 0) — exactly the (i>=j) & (i-j<window) training mask.
+    valid = jnp.arange(W) >= (W - 1 - pos)
+    scores = jnp.where(valid[None, None, :], scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhw,bwhd->bhd", attn, vc).reshape(B, D)
+    out = proj("o", ctx)
+    return out, k_cache, v_cache

@@ -110,3 +110,52 @@ def gdn_block(cfg: ModelConfig, p: Dict, x: jax.Array,
     if r is not None:
         out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
     return out.reshape(B, T, D), r, stats
+
+
+def gdn_block_step(cfg: ModelConfig, p: Dict, x: jax.Array,
+                   conv_state: jax.Array, delta_state: jax.Array):
+    """One-token forward of `gdn_block`.
+
+    Args:
+      x: (B, D) token representations.
+      conv_state: (B, k-1, Di) previous q-path conv inputs, oldest first.
+      delta_state: (B, H, Dk, Dk) the delta-rule state S.
+    Returns:
+      (out (B, D), new_conv_state, new_delta_state, Routing or None).
+    """
+    from compile.layers.ssm import conv_step
+
+    B, _D = x.shape
+    Di, H, Dk = _dims(cfg)
+
+    r: Optional[Routing] = None
+    if cfg.rom.enabled:
+        r = route_tokens(x, p["router"], cfg.rom.top_k)
+
+    proj = bank_apply(x, p["w_in"], r)
+    q, k, v, g, ab = jnp.split(proj, [Di, 2 * Di, 3 * Di, 4 * Di], axis=-1)
+    alpha_raw, beta_raw = jnp.split(ab, 2, axis=-1)        # (B, H) each
+
+    window = jnp.concatenate([conv_state, q[:, None, :]], axis=1)
+    q = conv_step(window, p["conv_w"]).reshape(B, H, Dk)
+    k = k.reshape(B, H, Dk)
+    v = v.reshape(B, H, Dk)
+    q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+    k = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+    alpha = jax.nn.sigmoid(alpha_raw)
+    beta = jax.nn.sigmoid(beta_raw)
+
+    # One step of the delta-rule recurrence (the `_delta_scan` body).
+    Sk = jnp.einsum("bhmn,bhn->bhm", delta_state, k)
+    delta = v - Sk
+    S_new = alpha[..., None, None] * (
+        delta_state + beta[..., None, None] * jnp.einsum("bhm,bhn->bhmn", delta, k))
+    y = jnp.einsum("bhmn,bhn->bhm", S_new, q).reshape(B, Di)
+
+    y = y * jax.nn.silu(g)
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-5) * p["norm_g"]
+    out = bank_apply(y, p["w_out"], r)
+    if r is not None:
+        out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
+    return out, window[:, 1:, :], S_new, r

@@ -125,3 +125,49 @@ def mamba2_block(cfg: ModelConfig, p: Dict, x: jax.Array,
     if r is not None:
         out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
     return out.reshape(B, T, D), r, stats
+
+
+def mamba2_block_step(cfg: ModelConfig, p: Dict, x: jax.Array,
+                      conv_state: jax.Array, ssd_state: jax.Array):
+    """One-token forward of `mamba2_block`.
+
+    Args:
+      x: (B, D) token representations.
+      conv_state: (B, k-1, Di) previous conv inputs, oldest first.
+      ssd_state: (B, H, P, N) the SSD recurrent state h.
+    Returns:
+      (out (B, D), new_conv_state, new_ssd_state, Routing or None).
+    """
+    from compile.layers.ssm import conv_step
+
+    B, _D = x.shape
+    Di, H, P, N = _dims(cfg)
+
+    r: Optional[Routing] = None
+    if cfg.rom.enabled:
+        r = route_tokens(x, p["router"], cfg.rom.top_k)
+
+    zxbcdt = bank_apply(x, p["w_in"], r)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+
+    window = jnp.concatenate([conv_state, xs[:, None, :]], axis=1)
+    xs = conv_step(window, p["conv_w"])
+    dt = jax.nn.softplus(dt + p["dt_bias"])                # (B, H)
+    a = -jnp.exp(p["A_log"])
+
+    # One step of the SSD recurrence (the `_ssd_scan` body at T=1).
+    decay = jnp.exp(dt * a)                                # (B, H)
+    xh = xs.reshape(B, H, P)
+    inc = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm)
+    h_new = decay[..., None, None] * ssd_state + inc
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm) + xh * p["D"][None, :, None]
+    y = y.reshape(B, Di)
+
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-5) * p["norm_g"]
+    out = bank_apply(y, p["w_out"], r)
+    if r is not None:
+        out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
+    return out, window[:, 1:, :], h_new, r

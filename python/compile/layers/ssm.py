@@ -161,3 +161,81 @@ def _weight_topk(inp, w, r: Routing, cfg: ModelConfig):
         yk = yk * r.gates[:, k][:, None]
         acc = yk if acc is None else acc + yk
     return acc
+
+
+# --------------------------------------------------------------------------
+# Stateful single-token decoding (autoregressive generation)
+# --------------------------------------------------------------------------
+
+def conv_step(window: jax.Array, w: jax.Array) -> jax.Array:
+    """One step of the depthwise causal SC operator on a (B, k, Di) window
+    (oldest tap first) — the stateful analogue of `short_conv_ref`."""
+    return jax.nn.silu(jnp.einsum("bkd,kd->bd", window, w))
+
+
+def _weight_topk_step(inp, w, r: Routing):
+    """Decode-path analogue of `_weight_topk`. Decode batches are tiny, so
+    the one-hot einsum is always the right impl (the grouped GEMM is a
+    training-shape optimization)."""
+    acc = None
+    for k in range(r.route.shape[1]):
+        onehot = jax.nn.one_hot(r.route[:, k], w.shape[0], dtype=inp.dtype)
+        yk = jnp.einsum("te,td,edf->tf", onehot, inp, w)
+        yk = yk * r.gates[:, k][:, None]
+        acc = yk if acc is None else acc + yk
+    return acc
+
+
+def mamba_block_step(cfg: ModelConfig, p: Dict, x: jax.Array,
+                     conv_state: jax.Array, ssm_state: jax.Array):
+    """One-token forward of `mamba_block`.
+
+    Args:
+      x: (B, D) the incoming token representations.
+      conv_state: (B, k-1, Di) previous conv-path inputs, oldest first.
+      ssm_state: (B, Di, N) selective-scan recurrent state h.
+    Returns:
+      (out (B, D), new_conv_state, new_ssm_state, shared Routing or None).
+
+    The recurrence is the exact `selective_scan_ref` step; routing matches
+    the full-window path with no jitter (decode is inference-only).
+    """
+    Di, N, R = cfg.d_inner, cfg.d_state, cfg.dt_rank
+
+    routings: Dict[str, Routing] = {}
+
+    def routing(target: str) -> Optional[Routing]:
+        if not (cfg.rom.enabled and target in cfg.rom_targets):
+            return None
+        cache_key = "shared" if cfg.routing == "shared" else target
+        if cache_key not in routings:
+            routings[cache_key] = _routing_for(cfg, p, x, target, None)
+        return routings[cache_key]
+
+    def project(target: str, w, inp):
+        r = routing(target)
+        if r is not None and cfg.routing == "independent":
+            return _weight_topk_step(inp, w, r)
+        return bank_apply(inp, w, r)
+
+    # Conv path: append this token's projection to the rolling window.
+    h = project("conv", p["w_in"], x)                      # (B, Di)
+    window = jnp.concatenate([conv_state, h[:, None, :]], axis=1)
+    u = conv_step(window, p["conv_w"])
+
+    xdbc = project("x", p["w_x"], u)                       # (B, R+2N)
+    dt_raw, Bm, Cm = jnp.split(xdbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(project("dt", p["w_dt"], dt_raw) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    dA = jnp.exp(dt[..., None] * A)                        # (B, Di, N)
+    dBu = dt[..., None] * Bm[:, None, :] * u[..., None]
+    h_new = dA * ssm_state + dBu
+    y = jnp.einsum("bdn,bn->bd", h_new, Cm) + u * p["D"]
+
+    G = jax.nn.silu(project("gate", p["w_gate"], x))
+    out = project("out", p["w_out"], y * G)
+    shared_r = routings.get("shared")
+    if shared_r is not None:
+        out = out * jnp.sum(shared_r.gates, axis=-1, keepdims=True)
+    return out, window[:, 1:, :], h_new, shared_r

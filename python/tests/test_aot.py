@@ -52,13 +52,44 @@ def test_lower_variant_writes_all_artifacts(tmp_path):
     cfg = tiny_cfg()
     man = lower_variant(cfg, str(tmp_path))
     expected = {"init.hlo.txt", "step.hlo.txt", "grad.hlo.txt", "apply.hlo.txt",
-                "eval_L16.hlo.txt", "eval_last_L16.hlo.txt", "manifest.json"}
+                "eval_L16.hlo.txt", "eval_last_L16.hlo.txt",
+                "decode_step.hlo.txt", "prefill_L16.hlo.txt", "manifest.json"}
     assert expected.issubset(set(os.listdir(tmp_path)))
     with open(tmp_path / "manifest.json") as f:
         doc = json.load(f)
     assert doc["num_param_leaves"] == len(doc["params"])
     assert doc["analysis"]["total_params"] > doc["analysis"]["active_params"]
     assert man["name"] == "aot-test"
+
+
+def test_decode_manifest_section(tmp_path):
+    from compile import decode
+
+    cfg = tiny_cfg()
+    man = lower_variant(cfg, str(tmp_path))
+    dec = man["decode"]
+    assert dec is not None and man["decode_unsupported"] is None
+    assert dec["batch"] == cfg.decode_batch
+    assert dec["prefill_lens"] == cfg.eval_lens
+    assert dec["state"] == decode.state_spec(cfg)
+    assert dec["state"][0] == {"name": "pos", "shape": [], "dtype": "int32"}
+    # Decode HLO obeys the same XLA 0.5.1 parser constraints as training.
+    for stem in ("decode_step", "prefill_L16"):
+        with open(tmp_path / f"{stem}.hlo.txt") as f:
+            text = f.read()
+        assert "ENTRY" in text and "HloModule" in text
+        for bad in ("erf(", "topk(", " tan("):
+            assert bad not in text, f"incompatible opcode {bad!r} in {stem}"
+
+
+def test_decode_unsupported_variant_skips_artifacts(tmp_path):
+    cfg = ModelConfig(name="aot-llama", arch="llama", n_layers=1, d_model=32,
+                      vocab_size=64, window=0, batch_size=2, seq_len=16,
+                      eval_lens=[16])
+    man = lower_variant(cfg, str(tmp_path))
+    assert man["decode"] is None
+    assert "window" in man["decode_unsupported"]
+    assert "decode_step.hlo.txt" not in os.listdir(tmp_path)
 
 
 def test_emit_configs_roundtrip(tmp_path):

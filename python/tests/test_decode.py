@@ -1,0 +1,147 @@
+"""Stateful decoding: stepwise prefill/decode must reproduce the full-window
+forward logits position by position, across every block kind and routing
+mode. This is the python-side half of the prefill+decode parity contract
+(the rust integration test checks the same thing through the AOT artifacts
+against the eval programs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import decode
+from compile.config import ModelConfig, MoEConfig
+from compile.model import forward, init_params
+
+
+def _cfg(**kw) -> ModelConfig:
+    base = dict(
+        name="decode-test", arch="mamba", n_layers=2, d_model=32,
+        vocab_size=64, batch_size=2, seq_len=16, eval_lens=[16],
+        window=8, decode_batch=2)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CFGS = {
+    "mamba-dense": _cfg(),
+    "mamba-rom": _cfg(rom_targets=["conv", "gate", "out"], routing="shared",
+                      rom=MoEConfig(num_experts=4)),
+    "mamba-rom-all": _cfg(rom_targets=["conv", "gate", "out", "dt", "x"],
+                          routing="shared", rom=MoEConfig(num_experts=4)),
+    "mamba-independent": _cfg(rom_targets=["conv", "out"],
+                              routing="independent",
+                              rom=MoEConfig(num_experts=4, top_k=2)),
+    "mamba2-rom": _cfg(arch="mamba2", rom=MoEConfig(num_experts=4)),
+    "gdn-rom": _cfg(arch="gdn", rom=MoEConfig(num_experts=4)),
+    "samba": _cfg(arch="samba", n_layers=1),
+    "samba-rom-hybrid": _cfg(arch="samba", n_layers=1,
+                             rom_targets=["conv", "gate", "out"],
+                             routing="shared", rom=MoEConfig(num_experts=4),
+                             ffn_moe=MoEConfig(num_experts=4),
+                             ffn_moe_share_router=True),
+    "samba-moa": _cfg(arch="samba", n_layers=1, attn_moe="moa",
+                      attn_moe_experts=4),
+}
+
+
+def _tokens(cfg, T, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, cfg.vocab_size, size=(cfg.decode_batch, T)),
+                       jnp.int32)
+
+
+def _stepwise_logits(cfg, params, tokens):
+    """Feed tokens one at a time through forward_step; stack the logits."""
+    state = decode.init_state(cfg, batch=tokens.shape[0])
+    outs = []
+    for t in range(tokens.shape[1]):
+        logits, state = decode.forward_step(cfg, params, tokens[:, t], state)
+        outs.append(logits)
+    return jnp.stack(outs, axis=1), state                  # (B, T, V)
+
+
+@pytest.mark.parametrize("name", sorted(CFGS))
+def test_stepwise_matches_full_forward(name):
+    cfg = CFGS[name]
+    T = 12
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = _tokens(cfg, T)
+    full, _ = forward(cfg, params, tokens, None)
+    stepped, state = _stepwise_logits(cfg, params, tokens)
+    # Sequential-vs-chunked scan reassociation gives tiny fp drift only.
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+    assert int(state[0]) == T
+
+
+def test_sliding_window_parity_beyond_window():
+    """Positions past the SWA window exercise cache eviction: parity must
+    hold once tokens start falling out of the rolling KV cache."""
+    cfg = _cfg(arch="samba", n_layers=1, window=4)
+    T = 10  # > 2 * window
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    tokens = _tokens(cfg, T, seed=3)
+    full, _ = forward(cfg, params, tokens, None)
+    stepped, _ = _stepwise_logits(cfg, params, tokens)
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_equals_stepwise():
+    """The fused lax.scan prefill returns exactly the state and last logits
+    of T explicit decode steps (same computation by construction; this pins
+    the jit/scan plumbing)."""
+    cfg = CFGS["mamba-rom"]
+    T = 8
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    tokens = _tokens(cfg, T, seed=5)
+    logits, state = jax.jit(decode.make_prefill_fn(cfg))(params, tokens)
+    stepped, sstate = _stepwise_logits(cfg, params, tokens)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(stepped[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+    assert len(state) == len(sstate)
+    for a, b in zip(state, sstate):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_then_decode_continues():
+    """prefill(P tokens) + decode of the rest == full forward at those
+    positions — the exact contract the rust generate path relies on."""
+    cfg = CFGS["samba-rom-hybrid"]
+    T, P = 12, 7
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    tokens = _tokens(cfg, T, seed=7)
+    full, _ = forward(cfg, params, tokens, None)
+    logits, state = jax.jit(decode.make_prefill_fn(cfg))(params, tokens[:, :P])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, P - 1]),
+                               rtol=2e-4, atol=2e-4)
+    step = jax.jit(decode.make_decode_step_fn(cfg))
+    for t in range(P, T):
+        logits, state = step(params, tokens[:, t], state)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_state_spec_matches_init_state():
+    for name, cfg in CFGS.items():
+        spec = decode.state_spec(cfg)
+        state = decode.init_state(cfg)
+        assert len(spec) == len(state), name
+        assert spec[0] == {"name": "pos", "shape": [], "dtype": "int32"}
+        names = [s["name"] for s in spec]
+        assert len(set(names)) == len(names), name
+        for s, arr in zip(spec, state):
+            assert tuple(s["shape"]) == arr.shape, (name, s["name"])
+            assert s["dtype"] == str(arr.dtype), (name, s["name"])
+
+
+def test_unsupported_window():
+    cfg = _cfg(arch="llama", window=0)
+    reason = decode.unsupported_reason(cfg)
+    assert reason is not None and "window" in reason
+    with pytest.raises(ValueError):
+        decode.state_spec(cfg)
+    # Pure-SSM archs never hit the window constraint, whatever window says.
+    assert decode.unsupported_reason(_cfg(window=0)) is None

@@ -1,0 +1,99 @@
+//! Generation micro-benchmarks (§Perf): prefill-artifact latency, one-time
+//! compile cost of the generation programs, per-token decode_step latency
+//! and decode throughput through the real `coordinator::generate` sampling
+//! loop.
+//!
+//! Results merge into the same machine-readable trajectory file as
+//! bench_runtime (`BENCH_runtime.json` at the repo root, override with
+//! ROM_BENCH_JSON) under `gen_*` keys — read-modify-write, so running
+//! either bench never clobbers the other's fields. Field-by-field schema:
+//! EXPERIMENTS.md §BENCH_runtime.json schema.
+
+use std::sync::Arc;
+
+use rom::coordinator::generate::{generate, GenerateCfg};
+use rom::data::corpus::{Corpus, CorpusSpec};
+use rom::experiments::harness::artifacts_root;
+use rom::runtime::artifact::Bundle;
+use rom::runtime::session::Session;
+use rom::runtime::tensor::Tensor;
+use rom::substrate::bench::{bench, bench_json_path, env_u64, time_once};
+use rom::substrate::json::Json;
+
+fn main() {
+    let variant = std::env::var("ROM_BENCH_VARIANT").unwrap_or_else(|_| "rom-tiny".into());
+    if !artifacts_root().join(&variant).join("manifest.json").exists() {
+        eprintln!("artifacts/{variant} missing — run `make artifacts`");
+        return;
+    }
+    let bundle = Bundle::open(artifacts_root().join(&variant)).unwrap();
+    let Some(spec) = bundle.manifest.decode.clone() else {
+        eprintln!("artifacts/{variant} has no decode artifacts — re-run `make artifacts`");
+        return;
+    };
+    let ctx = bundle.manifest.eval_lens[0]; // shortest prefill artifact
+    println!(
+        "== generation micro-benches on {variant} (batch {}, prompt {ctx}) ==",
+        spec.batch
+    );
+
+    // One-time compile latencies for the generation programs.
+    let (_, t_prefill) = time_once(|| bundle.prefill(ctx).unwrap());
+    println!("compile prefill_L{ctx}: {t_prefill:.2}s");
+    let (_, t_decode) = time_once(|| bundle.decode_step().unwrap());
+    println!("compile decode_step:    {t_decode:.2}s");
+
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let prompts: Vec<Vec<i32>> = (0..spec.batch as u64)
+        .map(|r| corpus.generate(0xBE9C_0000 + r, ctx))
+        .collect();
+
+    // Prompt consumption through the fused prefill artifact.
+    let mut flat = Vec::with_capacity(spec.batch * ctx);
+    for p in &prompts {
+        flat.extend_from_slice(p);
+    }
+    let prompt_batch = Tensor::i32(&[spec.batch, ctx], flat);
+    let prefill_stats = bench("prefill (one device call)", 1, 8, || {
+        std::hint::black_box(sess.prefill(&prompt_batch).unwrap());
+    });
+
+    // Per-token decode latency and throughput through the real sampling
+    // loop (the numbers `rom generate` prints).
+    let max_new = (env_u64("ROM_GEN_TOKENS", 64) as usize).max(2);
+    let cfg = GenerateCfg { max_new, temperature: 0.8, top_k: 8, seed: 0 };
+    let (report, gen_s) = time_once(|| generate(&sess, &prompts, &cfg).unwrap());
+    let decode_ms = report.median_decode_ms().expect("max_new > 1");
+    let decode_tps = report.decode_tokens_per_sec().expect("max_new > 1");
+    println!(
+        "decode_step: {decode_ms:.2} ms/step median -> {decode_tps:.0} tokens/s \
+         ({} rows x {} steps in {gen_s:.2}s end-to-end)",
+        spec.batch,
+        max_new - 1
+    );
+
+    // Merge the gen_* fields into the shared trajectory record.
+    let path = bench_json_path();
+    let mut map = match std::fs::read_to_string(&path).ok().and_then(|s| Json::parse(&s).ok())
+    {
+        Some(Json::Obj(m)) => m,
+        _ => Default::default(),
+    };
+    let fields = [
+        ("gen_variant", Json::str(variant.as_str())),
+        ("gen_batch", Json::num(spec.batch as f64)),
+        ("gen_prompt_len", Json::num(ctx as f64)),
+        ("gen_max_new", Json::num(max_new as f64)),
+        ("gen_compile_prefill_s", Json::num(t_prefill)),
+        ("gen_compile_decode_s", Json::num(t_decode)),
+        ("gen_prefill_ms", Json::num(prefill_stats.median_secs() * 1e3)),
+        ("gen_decode_step_ms", Json::num(decode_ms)),
+        ("gen_decode_tokens_per_sec", Json::num(decode_tps)),
+    ];
+    for (k, v) in fields {
+        map.insert(k.to_string(), v);
+    }
+    std::fs::write(&path, Json::Obj(map).to_string()).unwrap();
+    println!("merged gen_* fields into {}", path.display());
+}

@@ -11,7 +11,6 @@
 //! checkpoint save/load wall time, sweep wall-clock + speedup, and peak
 //! host RSS.
 
-use std::path::PathBuf;
 use std::sync::Arc;
 
 use rom::coordinator::checkpoint::Checkpoint;
@@ -22,7 +21,7 @@ use rom::experiments::scheduler::run_sweep;
 use rom::runtime::artifact::Bundle;
 use rom::runtime::session::Session;
 use rom::runtime::tensor::Tensor;
-use rom::substrate::bench::{bench, time_once};
+use rom::substrate::bench::{bench, bench_json_path, env_u64, time_once};
 use rom::substrate::json::Json;
 
 /// Peak resident set size in bytes (linux VmHWM); None elsewhere.
@@ -31,15 +30,6 @@ fn peak_rss_bytes() -> Option<u64> {
     let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
     let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
     Some(kb * 1024)
-}
-
-fn bench_json_path() -> PathBuf {
-    if let Ok(p) = std::env::var("ROM_BENCH_JSON") {
-        return PathBuf::from(p);
-    }
-    // CARGO_MANIFEST_DIR is <repo>/rust; the trajectory file lives at the
-    // repo root next to ROADMAP.md.
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_runtime.json")
 }
 
 fn main() {
@@ -268,15 +258,26 @@ fn main() {
     if let Some(rss) = single_session_rss {
         fields.push(("peak_rss_bytes", Json::num(rss as f64)));
     }
+    // This bench owns every non-gen_* field and rewrites them wholesale
+    // (stale sweep_* keys from a previous run must not linger), but the
+    // gen_* keys belong to bench_generate and survive — running either
+    // bench never clobbers the other's fields.
     let out_path = bench_json_path();
-    std::fs::write(&out_path, Json::obj(fields).to_string()).unwrap();
+    let mut map = match std::fs::read_to_string(&out_path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+    {
+        Some(Json::Obj(m)) => m,
+        _ => Default::default(),
+    };
+    map.retain(|k, _| k.starts_with("gen_"));
+    for (k, v) in fields {
+        map.insert(k.to_string(), v);
+    }
+    std::fs::write(&out_path, Json::Obj(map).to_string()).unwrap();
     println!("wrote {}", out_path.display());
 }
 
 fn s_ms(secs: f64) -> f64 {
     secs * 1e3
-}
-
-fn env_u64(key: &str, default: u64) -> u64 {
-    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }

@@ -1,0 +1,326 @@
+//! Autoregressive generation: batched sampling over the prefill/decode
+//! artifacts (`rom generate`).
+//!
+//! The sampling loop lives here, not in the artifact: the AOT programs only
+//! know "state in, logits out", and the coordinator owns temperature/top-k
+//! sampling over a seeded `substrate::rng` stream, prompt batching, and the
+//! latency bookkeeping that `bench_generate` reports.
+//!
+//! Determinism contract: each prompt row samples from its own RNG stream,
+//! `Rng::new(seed).fold_in(global_row_index)`, and every row's logits depend
+//! only on that row's tokens (all artifact ops are per-row). Token output is
+//! therefore a pure function of (checkpoint, prompt, seed, sampling params) —
+//! independent of how prompts are chunked into device batches and of any
+//! `--jobs`-style session parallelism around this call.
+//!
+//! Prompt handling: prompts whose length matches a `prefill_L{L}` artifact
+//! are consumed in one device call; any other length falls back to feeding
+//! the prompt through `decode_step` one token at a time (exact, just slower).
+//! Prompts must share one length — batched decoding has no padding
+//! convention (padding would corrupt the recurrent state).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::session::Session;
+use crate::runtime::tensor::Tensor;
+use crate::substrate::rng::Rng;
+
+/// Sampling parameters for one `generate` call.
+#[derive(Debug, Clone)]
+pub struct GenerateCfg {
+    /// Tokens to generate per prompt (must be >= 1).
+    pub max_new: usize,
+    /// Softmax temperature; <= 0 selects greedy argmax decoding.
+    pub temperature: f64,
+    /// Restrict sampling to the k highest-probability tokens (0 = full
+    /// vocabulary). Ignored under greedy decoding.
+    pub top_k: usize,
+    /// Base RNG seed; row `i` samples from `Rng::new(seed).fold_in(i)`.
+    pub seed: u64,
+}
+
+impl Default for GenerateCfg {
+    fn default() -> Self {
+        GenerateCfg { max_new: 32, temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+/// Output of one `generate` call: the sampled continuations plus the latency
+/// breakdown the generation bench records.
+pub struct GenerateReport {
+    /// One continuation (length `max_new`) per input prompt, in order.
+    pub completions: Vec<Vec<i32>>,
+    /// Shared prompt length.
+    pub prompt_len: usize,
+    /// Whether the prompt length matched a `prefill_L{L}` artifact (false =
+    /// the decode_step fallback consumed the prompt token by token).
+    pub prefill_used_artifact: bool,
+    /// Total prompt-consumption wall time, summed over device batches.
+    pub prefill_s: f64,
+    /// Wall time of each decode_step device call during generation (each
+    /// call advances every row of the device batch by one token).
+    pub decode_step_s: Vec<f64>,
+    /// Device batch rows (the artifact's baked-in decode batch).
+    pub batch: usize,
+}
+
+impl GenerateReport {
+    /// Median decode_step latency in milliseconds (None when generation
+    /// needed no decode steps, i.e. max_new == 1).
+    pub fn median_decode_ms(&self) -> Option<f64> {
+        if self.decode_step_s.is_empty() {
+            return None;
+        }
+        let mut v = self.decode_step_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN latency"));
+        Some(v[v.len() / 2] * 1e3)
+    }
+
+    /// Device decode throughput: batch rows advanced per second of
+    /// decode_step wall time (padded rows included — this is the artifact's
+    /// throughput, not per-prompt speed).
+    pub fn decode_tokens_per_sec(&self) -> Option<f64> {
+        let total: f64 = self.decode_step_s.iter().sum();
+        if total <= 0.0 {
+            return None;
+        }
+        Some((self.batch * self.decode_step_s.len()) as f64 / total)
+    }
+}
+
+/// Parse the CLI prompt grammar: comma-separated token ids, `;` between
+/// prompts — `"1,2,3;4,5,6"` is two prompts of three tokens.
+pub fn parse_prompt_tokens(s: &str) -> Result<Vec<Vec<i32>>> {
+    if s.trim().is_empty() {
+        bail!("empty --prompt-tokens: expected comma-separated ids like 1,2,3");
+    }
+    let mut prompts = Vec::new();
+    for (i, part) in s.split(';').enumerate() {
+        if part.trim().is_empty() {
+            bail!("empty prompt at position {i} in --prompt-tokens");
+        }
+        let mut prompt = Vec::new();
+        for tok in part.split(',') {
+            let tok = tok.trim();
+            let id: i32 = tok
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad token id {tok:?} in prompt {i}"))?;
+            prompt.push(id);
+        }
+        prompts.push(prompt);
+    }
+    Ok(prompts)
+}
+
+/// First index of the maximum (deterministic tie-break: lowest index).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample one token id from a logits row. Temperature <= 0 is greedy; top_k
+/// of 0 keeps the full vocabulary. Ties order by index, so the draw is a
+/// deterministic function of (logits, rng state, params).
+pub fn sample_token(logits: &[f32], rng: &mut Rng, temperature: f64, top_k: usize) -> usize {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if top_k > 0 && top_k < logits.len() {
+        idx.sort_by(|&a, &b| {
+            logits[b]
+                .partial_cmp(&logits[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(top_k);
+    }
+    let max = idx.iter().map(|&i| logits[i] as f64).fold(f64::NEG_INFINITY, f64::max);
+    let weights: Vec<f64> =
+        idx.iter().map(|&i| ((logits[i] as f64 - max) / temperature).exp()).collect();
+    idx[rng.weighted(&weights)]
+}
+
+/// Generate `cfg.max_new` tokens for every prompt. Prompts are chunked into
+/// groups of the artifact's decode batch; a short final chunk pads with
+/// copies of its first prompt (padded rows decode greedily and are
+/// discarded — rows never interact, so padding cannot perturb real rows).
+pub fn generate(
+    sess: &Session,
+    prompts: &[Vec<i32>],
+    cfg: &GenerateCfg,
+) -> Result<GenerateReport> {
+    let man = &sess.bundle.manifest;
+    let spec = sess.bundle.decode_spec()?;
+    if prompts.is_empty() {
+        bail!("no prompts given");
+    }
+    if cfg.max_new == 0 {
+        bail!("--max-new must be >= 1 (got 0)");
+    }
+    let prompt_len = prompts[0].len();
+    for (i, p) in prompts.iter().enumerate() {
+        if p.is_empty() {
+            bail!("empty prompt: prompt {i} has no tokens");
+        }
+        if p.len() != prompt_len {
+            bail!(
+                "ragged prompts: prompt {i} has {} tokens, prompt 0 has {prompt_len} \
+                 (batched decoding requires equal prompt lengths)",
+                p.len()
+            );
+        }
+        if let Some(&t) = p.iter().find(|&&t| t < 0 || t as usize >= man.vocab_size) {
+            bail!("prompt {i}: token {t} outside the vocabulary [0, {})", man.vocab_size);
+        }
+    }
+
+    let bd = spec.batch;
+    let vocab = man.vocab_size;
+    let use_prefill = spec.prefill_lens.contains(&prompt_len);
+    let mut completions: Vec<Vec<i32>> = Vec::with_capacity(prompts.len());
+    let mut prefill_s = 0.0f64;
+    let mut decode_step_s: Vec<f64> = Vec::new();
+
+    for chunk in prompts.chunks(bd) {
+        // Pad the device batch with copies of the chunk's first prompt.
+        let rows: Vec<&Vec<i32>> =
+            (0..bd).map(|r| chunk.get(r).unwrap_or(&chunk[0])).collect();
+        let row_base = completions.len(); // global index of this chunk's row 0
+        let mut rngs: Vec<Rng> = (0..chunk.len())
+            .map(|r| Rng::new(cfg.seed).fold_in((row_base + r) as u64))
+            .collect();
+
+        // Consume the prompt: one prefill call, or the stepwise fallback.
+        let t0 = Instant::now();
+        let (mut logits, mut state) = if use_prefill {
+            let mut flat = Vec::with_capacity(bd * prompt_len);
+            for row in &rows {
+                flat.extend_from_slice(row);
+            }
+            sess.prefill(&Tensor::i32(&[bd, prompt_len], flat))?
+        } else {
+            let mut state = sess.init_decode_state()?;
+            let mut logits = None;
+            for t in 0..prompt_len {
+                let toks: Vec<i32> = rows.iter().map(|r| r[t]).collect();
+                logits = Some(sess.decode_step(&Tensor::i32(&[bd], toks), &mut state)?);
+            }
+            (logits.expect("prompt_len >= 1"), state)
+        };
+        prefill_s += t0.elapsed().as_secs_f64();
+
+        // Sampling loop: draw from the current logits, then advance the
+        // state only while more tokens are needed.
+        let mut chunk_out: Vec<Vec<i32>> =
+            chunk.iter().map(|_| Vec::with_capacity(cfg.max_new)).collect();
+        for step_i in 0..cfg.max_new {
+            let lv = logits.as_f32()?;
+            if lv.len() != bd * vocab {
+                bail!("decode logits: {} values, expected {}", lv.len(), bd * vocab);
+            }
+            let mut next: Vec<i32> = Vec::with_capacity(bd);
+            for r in 0..bd {
+                let row_logits = &lv[r * vocab..(r + 1) * vocab];
+                let tok = if r < chunk.len() {
+                    sample_token(row_logits, &mut rngs[r], cfg.temperature, cfg.top_k)
+                } else {
+                    argmax(row_logits) // padded row: cheapest deterministic fill
+                };
+                next.push(tok as i32);
+                if r < chunk.len() {
+                    chunk_out[r].push(tok as i32);
+                }
+            }
+            if step_i + 1 < cfg.max_new {
+                let t1 = Instant::now();
+                logits = sess.decode_step(&Tensor::i32(&[bd], next), &mut state)?;
+                decode_step_s.push(t1.elapsed().as_secs_f64());
+            }
+        }
+        completions.extend(chunk_out);
+    }
+
+    Ok(GenerateReport {
+        completions,
+        prompt_len,
+        prefill_used_artifact: use_prefill,
+        prefill_s,
+        decode_step_s,
+        batch: bd,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_prompts_grammar() {
+        let p = parse_prompt_tokens("1,2,3;4, 5 ,6").unwrap();
+        assert_eq!(p, vec![vec![1, 2, 3], vec![4, 5, 6]]);
+        assert_eq!(parse_prompt_tokens("7").unwrap(), vec![vec![7]]);
+        assert!(parse_prompt_tokens("").is_err());
+        assert!(parse_prompt_tokens("1,2;;3").is_err());
+        assert!(parse_prompt_tokens("1,x,3").is_err());
+    }
+
+    #[test]
+    fn argmax_breaks_ties_low() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn greedy_ignores_rng_and_topk() {
+        let logits = [0.1, 2.0, -1.0, 1.9];
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_eq!(sample_token(&logits, &mut a, 0.0, 0), 1);
+        assert_eq!(sample_token(&logits, &mut b, 0.0, 3), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [0.0, 5.0, 4.0, -2.0, 1.0];
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let t = sample_token(&logits, &mut rng, 2.0, 2);
+            assert!(t == 1 || t == 2, "token {t} outside top-2");
+        }
+        // top_k = 1 degenerates to argmax whatever the temperature.
+        assert_eq!(sample_token(&logits, &mut rng, 10.0, 1), 1);
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Rng::new(seed).fold_in(0);
+            (0..16).map(|_| sample_token(&logits, &mut rng, 0.8, 4)).collect()
+        };
+        assert_eq!(draw(42), draw(42));
+        assert_ne!(draw(42), draw(43)); // astronomically unlikely to collide
+    }
+
+    #[test]
+    fn temperature_sharpens_distribution() {
+        let logits = [0.0, 1.0];
+        let count_top = |temp: f64| -> usize {
+            let mut rng = Rng::new(3);
+            (0..2000).filter(|_| sample_token(&logits, &mut rng, temp, 0) == 1).count()
+        };
+        let cold = count_top(0.25);
+        let hot = count_top(4.0);
+        assert!(cold > hot, "T=0.25 picked top {cold} vs T=4.0 {hot}");
+        assert!(cold > 1900, "near-greedy at low temperature: {cold}");
+        assert!(hot > 800 && hot < 1500, "near-uniform at high temperature: {hot}");
+    }
+}

@@ -2,6 +2,7 @@
 pub mod checkpoint;
 pub mod downstream;
 pub mod eval;
+pub mod generate;
 pub mod metrics;
 pub mod monitor;
 pub mod schedule;

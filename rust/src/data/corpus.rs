@@ -49,7 +49,7 @@ impl Default for CorpusSpec {
 pub struct Corpus {
     spec: CorpusSpec,
     /// Per (topic, within) categorical over `cluster` successors,
-    /// flattened: trans[topic][within * cluster + next].
+    /// flattened: `trans[topic][within * cluster + next]`.
     trans: Vec<Vec<f64>>,
     shared_base: usize,
 }

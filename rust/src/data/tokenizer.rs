@@ -10,7 +10,7 @@ use std::collections::HashMap;
 
 #[derive(Debug, Clone)]
 pub struct Tokenizer {
-    /// merges[i] = (left, right) producing token id 256 + i.
+    /// `merges[i]` = (left, right) producing token id 256 + i.
     merges: Vec<(i32, i32)>,
     rank: HashMap<(i32, i32), usize>,
 }

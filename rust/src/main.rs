@@ -1,22 +1,25 @@
 //! `rom` — the RoM training coordinator CLI (the launcher of DESIGN.md §2).
 //!
-//! Subcommands:
-//!   info <variant>                      manifest + analytic accounting
-//!   train <variant> [--steps N] [--lr X] [--accum] [--ckpt-dir D]
-//!                   [--ckpt-every N] [--ckpt-keep N] [--eval-every N]
-//!                   [--log-every N] [--warmup R] [--metrics FILE]
-//!   eval <variant> --ckpt FILE          PPL sweep from a checkpoint
-//!   probes <variant> [--steps N] [--lr X]  downstream probe scores (Table 2)
-//!   experiment <id> [--steps N] [--jobs N]  regenerate a paper table/figure
-//!   list                                variants with artifacts present
+//! Subcommands (see the USAGE string for flags):
+//!
+//! ```text
+//! list                   variants with artifacts present
+//! info <variant>         manifest + analytic accounting
+//! train <variant>        train from scratch on the synthetic corpus
+//! eval <variant>         PPL sweep from a checkpoint
+//! generate <variant>     autoregressive decoding from a checkpoint
+//! probes <variant>       downstream probe scores (Table 2 stand-in)
+//! experiment <id>        regenerate a paper table/figure
+//! ```
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use rom::config::TrainCfg;
 use rom::coordinator::checkpoint::Checkpoint;
 use rom::coordinator::downstream::{score_cloze, score_continuation};
 use rom::coordinator::eval::eval_ppl_sweep;
+use rom::coordinator::generate::{generate, parse_prompt_tokens, GenerateCfg};
 use rom::coordinator::trainer::Trainer;
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::probes::{make_cloze, make_continuation};
@@ -38,6 +41,13 @@ usage: rom <subcommand> [options]
                   [--eval-every N] [--log-every N] [--metrics FILE]
                   (--ckpt-keep N retains only the newest N checkpoints)
   eval <variant> --ckpt FILE        PPL sweep from a checkpoint
+  generate <variant> --ckpt FILE --prompt-tokens '1,2,3[;4,5,6]'
+                  [--max-new N] [--temperature X] [--top-k K] [--seed N]
+                                    autoregressive decoding: batched prompts
+                                    (';'-separated — quote the value — equal
+                                    lengths), greedy by default,
+                                    temperature/top-k sampling on a seeded
+                                    stream; prints per-token latency
   probes <variant> [--steps N] [--lr X]
                                     downstream probes (Table 2 stand-in)
   experiment <id> [--steps N] [--jobs N]
@@ -50,26 +60,43 @@ usage: rom <subcommand> [options]
 ";
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["accum", "quiet"]);
+    let args = Args::from_env(&["accum", "quiet", "help"]);
+    if args.has_flag("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
     match args.subcommand.as_deref() {
         Some("list") => list(),
         Some("info") => info_cmd(&args),
         Some("train") => train(&args),
         Some("eval") => eval_cmd(&args),
+        Some("generate") => generate_cmd(&args),
         Some("probes") => probes(&args),
         Some("experiment") => experiment(&args),
-        _ => {
+        Some("help") | None => {
             print!("{USAGE}");
             Ok(())
         }
+        Some(other) => Err(usage_err(format!("unknown subcommand {other:?}"))),
     }
+}
+
+/// A bad-invocation error: the message followed by the full USAGE text, so
+/// every `rom <subcommand>` misuse points at the same reference.
+fn usage_err(msg: impl std::fmt::Display) -> anyhow::Error {
+    anyhow!("{msg}\n\n{USAGE}")
 }
 
 fn variant_arg(args: &Args) -> Result<String> {
     args.positional
         .first()
         .cloned()
-        .ok_or_else(|| anyhow::anyhow!("missing <variant> argument\n{USAGE}"))
+        .ok_or_else(|| usage_err("missing <variant> argument"))
+}
+
+/// A required `--key value` option, with a USAGE-pointing error when absent.
+fn required_opt<'a>(args: &'a Args, key: &str) -> Result<&'a str> {
+    args.get(key).ok_or_else(|| usage_err(format!("--{key} is required")))
 }
 
 fn list() -> Result<()> {
@@ -102,6 +129,15 @@ fn info_cmd(args: &Args) -> Result<()> {
     println!("batch x seq:    {} x {}", m.batch_size, m.seq_len);
     println!("eval lengths:   {:?}", m.eval_lens);
     println!("routers x experts: {} x {}", m.num_routers, m.num_experts);
+    match &m.decode {
+        Some(d) => println!(
+            "decode:         batch {}, prefill lens {:?}, {} state leaves",
+            d.batch,
+            d.prefill_lens,
+            d.state.len()
+        ),
+        None => println!("decode:         unavailable (no generation artifacts)"),
+    }
     // Cross-check the rust FLOPS mirror against the python-emitted value.
     let cfg = rom::config::ModelCfg::parse(&m.model)?;
     let mirrored = rom::analysis::flops::flops_per_token(&cfg, m.seq_len)?;
@@ -158,15 +194,64 @@ fn train(args: &Args) -> Result<()> {
 
 fn eval_cmd(args: &Args) -> Result<()> {
     let name = variant_arg(args)?;
-    let ckpt_path = args
-        .get("ckpt")
-        .ok_or_else(|| anyhow::anyhow!("--ckpt FILE required"))?;
+    let ckpt_path = required_opt(args, "ckpt")?;
     let bundle = Bundle::open(artifacts_root().join(&name))?;
     let ck = Checkpoint::load(std::path::Path::new(ckpt_path))?;
     let sess = Session::restore(Arc::clone(&bundle), &ck.params, &ck.m, &ck.v, ck.step)?;
     let corpus = Corpus::new(CorpusSpec::default(), 17);
     for (ctx, ppl) in eval_ppl_sweep(&sess, &corpus, 999, 8)? {
         println!("ppl@{ctx}: {ppl:.3}");
+    }
+    Ok(())
+}
+
+/// `rom generate <variant> --ckpt FILE --prompt-tokens 1,2,3[;4,5,6]`:
+/// restore a trained checkpoint and decode `--max-new` tokens per prompt.
+/// Greedy by default; `--temperature X` (with optional `--top-k K`) samples
+/// from a stream seeded by `--seed`, so reruns reproduce token for token.
+fn generate_cmd(args: &Args) -> Result<()> {
+    let name = variant_arg(args)?;
+    let ckpt_path = required_opt(args, "ckpt")?;
+    let prompts = parse_prompt_tokens(required_opt(args, "prompt-tokens")?)
+        .map_err(usage_err)?;
+    let gen_cfg = GenerateCfg {
+        max_new: args.get_usize("max-new", 32),
+        temperature: args.get_f64("temperature", 0.0),
+        top_k: args.get_usize("top-k", 0),
+        seed: args.get_u64("seed", 0),
+    };
+    let bundle = Bundle::open(artifacts_root().join(&name))
+        .with_context(|| format!("loading variant {name}"))?;
+    let ck = Checkpoint::load(std::path::Path::new(ckpt_path))?;
+    let sess = Session::restore(Arc::clone(&bundle), &ck.params, &ck.m, &ck.v, ck.step)?;
+    let report = generate(&sess, &prompts, &gen_cfg)?;
+
+    for (i, (prompt, completion)) in
+        prompts.iter().zip(report.completions.iter()).enumerate()
+    {
+        let fmt = |ts: &[i32]| {
+            ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+        };
+        println!("prompt {i}: {} => {}", fmt(prompt), fmt(completion));
+    }
+    let how = if report.prefill_used_artifact {
+        format!("prefill_L{} artifact", report.prompt_len)
+    } else {
+        "decode_step fallback".to_string()
+    };
+    println!(
+        "prefill:  {:.1} ms for {} prompt tokens ({how})",
+        report.prefill_s * 1e3,
+        report.prompt_len
+    );
+    if let (Some(ms), Some(tps)) =
+        (report.median_decode_ms(), report.decode_tokens_per_sec())
+    {
+        println!(
+            "decode:   {ms:.2} ms/step median, {tps:.0} tokens/s \
+             (batch {} rows/step)",
+            report.batch
+        );
     }
     Ok(())
 }

@@ -46,6 +46,25 @@ pub struct Analysis {
     pub fwd_flops_per_token: f64,
 }
 
+/// The generation-artifact calling convention (manifest "decode" section):
+/// batch rows baked into `prefill_L{L}`/`decode_step`, the prefill lengths
+/// emitted, and the flat recurrent-state layout (leaf 0 is always the i32
+/// `pos` scalar). Mirrors `python/compile/decode.py::state_spec`.
+#[derive(Debug, Clone)]
+pub struct DecodeSpec {
+    pub batch: usize,
+    pub prefill_lens: Vec<usize>,
+    pub state: Vec<ParamSpec>,
+}
+
+impl DecodeSpec {
+    /// Zeroed state tensors matching the spec (pos = 0) — the start-of-
+    /// sequence generation state.
+    pub fn zero_state(&self) -> Vec<Tensor> {
+        self.state.iter().map(|s| Tensor::zeros(&s.shape, s.dtype)).collect()
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub name: String,
@@ -58,29 +77,51 @@ pub struct Manifest {
     pub num_experts: usize,
     pub vocab_size: usize,
     pub analysis: Analysis,
+    /// Present when the variant ships generation artifacts; `None` for
+    /// variants that cannot carry fixed-shape decode state (the manifest's
+    /// `decode_unsupported` field records why) and for legacy bundles
+    /// lowered before the decoding subsystem existed.
+    pub decode: Option<DecodeSpec>,
     pub model: Json,
+}
+
+/// Parse a `[{name, shape, dtype}, ...]` JSON array into leaf specs (shared
+/// by the param manifest and the decode-state spec).
+fn parse_specs(j: &Json) -> Result<Vec<ParamSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_, _>>()?,
+                dtype: DType::from_str(p.get("dtype")?.as_str()?)?,
+            })
+        })
+        .collect()
 }
 
 impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text).context("manifest.json")?;
-        let params = j
-            .get("params")?
-            .as_arr()?
-            .iter()
-            .map(|p| {
-                Ok(ParamSpec {
-                    name: p.get("name")?.as_str()?.to_string(),
-                    shape: p
-                        .get("shape")?
-                        .as_arr()?
-                        .iter()
-                        .map(|d| d.as_usize())
-                        .collect::<Result<_, _>>()?,
-                    dtype: DType::from_str(p.get("dtype")?.as_str()?)?,
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
+        let params = parse_specs(j.get("params")?)?;
+        let decode = match j.opt("decode") {
+            Some(d) => Some(DecodeSpec {
+                batch: d.get("batch")?.as_usize()?,
+                prefill_lens: d
+                    .get("prefill_lens")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<_, _>>()?,
+                state: parse_specs(d.get("state")?)?,
+            }),
+            None => None,
+        };
         let a = j.get("analysis")?;
         Ok(Manifest {
             name: j.get("name")?.as_str()?.to_string(),
@@ -102,6 +143,7 @@ impl Manifest {
                 active_params: a.get("active_params")?.as_i64()? as u64,
                 fwd_flops_per_token: a.get("fwd_flops_per_token")?.as_f64()?,
             },
+            decode,
             model: j.get("model")?.clone(),
         })
     }
@@ -222,6 +264,38 @@ impl Bundle {
         self.program(&format!("eval_last_L{len}"))
     }
 
+    /// The decode calling convention, or a clear error for variants without
+    /// generation artifacts (unsupported layout or pre-decode bundles).
+    pub fn decode_spec(&self) -> Result<&DecodeSpec> {
+        self.manifest.decode.as_ref().ok_or_else(|| {
+            anyhow!(
+                "variant {} has no generation artifacts — re-run `make artifacts` \
+                 (or the layout cannot carry fixed-shape decode state; see the \
+                 manifest's decode_unsupported field)",
+                self.manifest.name
+            )
+        })
+    }
+
+    /// Prompt-consumption program for an exact prefill length.
+    pub fn prefill(&self, len: usize) -> Result<Arc<Program>> {
+        let spec = self.decode_spec()?;
+        if !spec.prefill_lens.contains(&len) {
+            bail!(
+                "no prefill artifact for length {len}; have {:?} \
+                 (other prompt lengths go through the decode_step fallback)",
+                spec.prefill_lens
+            );
+        }
+        self.program(&format!("prefill_L{len}"))
+    }
+
+    /// One-token decode step program.
+    pub fn decode_step(&self) -> Result<Arc<Program>> {
+        self.decode_spec()?;
+        self.program("decode_step")
+    }
+
     /// Golden losses recorded by `compile.aot --golden` (if present).
     pub fn golden(&self) -> Result<Option<(u64, f64, Vec<f64>)>> {
         let path = self.dir.join("golden.json");
@@ -290,5 +364,52 @@ mod tests {
     #[test]
     fn manifest_rejects_missing_fields() {
         assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn manifest_without_decode_section_parses_as_none() {
+        // Legacy bundles (and unsupported layouts, which write null) carry
+        // no decode spec; parsing must degrade, not fail.
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert!(m.decode.is_none());
+        let with_null = MANIFEST.replacen(
+            "\"name\": \"t\",",
+            "\"name\": \"t\", \"decode\": null,",
+            1,
+        );
+        assert!(Manifest::parse(&with_null).unwrap().decode.is_none());
+    }
+
+    #[test]
+    fn manifest_decode_section_parses() {
+        let with_decode = MANIFEST.replacen(
+            "\"name\": \"t\",",
+            r#""name": "t",
+            "decode": {
+              "batch": 2, "prefill_lens": [16, 32],
+              "state": [
+                {"name": "pos", "shape": [], "dtype": "int32"},
+                {"name": "blocks.0.conv", "shape": [2, 3, 64], "dtype": "float32"},
+                {"name": "blocks.0.ssm", "shape": [2, 64, 16], "dtype": "float32"}
+              ]
+            },"#,
+            1,
+        );
+        let m = Manifest::parse(&with_decode).unwrap();
+        let d = m.decode.as_ref().unwrap();
+        assert_eq!(d.batch, 2);
+        assert_eq!(d.prefill_lens, vec![16, 32]);
+        assert_eq!(d.state.len(), 3);
+        assert_eq!(d.state[0].name, "pos");
+        assert_eq!(d.state[0].dtype, DType::I32);
+        assert_eq!(d.state[0].numel(), 1); // scalar: empty shape, one element
+        assert_eq!(d.state[1].shape, vec![2, 3, 64]);
+
+        // Zero state: scalar i32 pos plus zeroed f32 leaves.
+        let z = d.zero_state();
+        assert_eq!(z.len(), 3);
+        assert_eq!(z[0].as_i32().unwrap(), &[0]);
+        assert_eq!(z[1].shape, vec![2, 3, 64]);
+        assert!(z[2].as_f32().unwrap().iter().all(|&x| x == 0.0));
     }
 }

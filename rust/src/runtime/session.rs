@@ -1,5 +1,8 @@
 //! Training session: owns the model/optimizer state (as XLA literals) and
-//! drives the step/grad/apply/eval programs of one `Bundle`.
+//! drives the step/grad/apply/eval programs of one `Bundle` — plus the
+//! stateful prefill/decode_step generation entry points, whose carried
+//! recurrent state (`DecodeState`) never round-trips through host tensors
+//! between tokens.
 //!
 //! This is the boundary between the rust coordinator (batches, schedules,
 //! telemetry) and the AOT-compiled jax computation. State stays in
@@ -31,6 +34,18 @@ pub struct StepOut {
     /// it forces a device->host transfer every step), or when the grad
     /// artifact predates the router-load output (legacy accum path).
     pub router_load: Option<Vec<f32>>,
+}
+
+/// The carried recurrent state of an in-flight generation: one literal per
+/// leaf of the manifest's decode-state spec (leaf 0 is the i32 `pos`
+/// scalar). The state stays in `xla::Literal`s between steps — it is fed
+/// straight back into the next `decode_step` call without a host decode;
+/// only the (batch, vocab) logits are decoded per token for sampling.
+pub struct DecodeState {
+    lits: Vec<xla::Literal>,
+    /// Tokens consumed so far (host-side mirror of the `pos` leaf, kept for
+    /// reporting without a device->host transfer).
+    pub pos: u64,
 }
 
 pub struct Session {
@@ -329,6 +344,84 @@ impl Session {
             Tensor::from_literal(&outs[0])?.item_f32()? as f64,
             Tensor::from_literal(&outs[1])?.item_f32()? as f64,
         ))
+    }
+
+    // ---- Autoregressive decoding -------------------------------------------
+    // Stateful generation entry points over the prefill_L{L}/decode_step
+    // artifacts. The recurrent state is a `DecodeState` of literals that
+    // shuttles between calls; `coordinator::generate` drives the sampling
+    // loop on top of these.
+
+    /// Start-of-sequence generation state (pos = 0, zeroed recurrences) —
+    /// the seed for the decode-step prompt fallback when no prefill artifact
+    /// matches the prompt length.
+    pub fn init_decode_state(&self) -> Result<DecodeState> {
+        let spec = self.bundle.decode_spec()?;
+        let lits = spec
+            .zero_state()
+            .iter()
+            .map(|t| self.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DecodeState { lits, pos: 0 })
+    }
+
+    /// Consume a whole (decode_batch, L) prompt in one device call; returns
+    /// the last-position logits as a host (batch, vocab) tensor plus the
+    /// packed recurrent state. L must be one of the manifest's prefill
+    /// lengths (`Bundle::prefill` enforces it).
+    pub fn prefill(&self, tokens: &Tensor) -> Result<(Tensor, DecodeState)> {
+        let spec = self.bundle.decode_spec()?;
+        let len = match tokens.shape.as_slice() {
+            [b, l] if *b == spec.batch => *l,
+            other => bail!(
+                "prefill tokens: shape {other:?} != expected [{}, L]",
+                spec.batch
+            ),
+        };
+        let prog = self.bundle.prefill(len)?;
+        let tok = self.upload(tokens)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        inputs.extend(self.params.iter());
+        inputs.push(&tok);
+        let outs = prog.run(&inputs)?;
+        self.split_decode_outputs(outs, "prefill", len as u64)
+    }
+
+    /// One decode step: (decode_batch,) token ids + carried state -> logits
+    /// for the next position. The state literals are replaced in place; no
+    /// recurrent-state host roundtrip happens per token.
+    pub fn decode_step(&self, tokens: &Tensor, state: &mut DecodeState) -> Result<Tensor> {
+        let spec = self.bundle.decode_spec()?;
+        expect_shape(tokens, &[spec.batch], "decode_step tokens")?;
+        let prog = self.bundle.decode_step()?;
+        let tok = self.upload(tokens)?;
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.params.len() + 1 + state.lits.len());
+        inputs.extend(self.params.iter());
+        inputs.push(&tok);
+        inputs.extend(state.lits.iter());
+        let outs = prog.run(&inputs)?;
+        let next_pos = state.pos + 1;
+        let (logits, new_state) = self.split_decode_outputs(outs, "decode_step", next_pos)?;
+        *state = new_state;
+        Ok(logits)
+    }
+
+    /// Decompose a decode-artifact output tuple: leaf 0 is the logits (the
+    /// only per-token host decode), the rest is the carried state.
+    fn split_decode_outputs(
+        &self,
+        mut outs: Vec<xla::Literal>,
+        what: &str,
+        pos: u64,
+    ) -> Result<(Tensor, DecodeState)> {
+        let n_state = self.bundle.decode_spec()?.state.len();
+        if outs.len() != n_state + 1 {
+            bail!("{what} returned {} outputs, expected {}", outs.len(), n_state + 1);
+        }
+        let lits = outs.split_off(1);
+        let logits = Tensor::from_literal(&outs[0])?;
+        Ok((logits, DecodeState { lits, pos }))
     }
 
     /// Copy current state to host tensors (checkpointing).

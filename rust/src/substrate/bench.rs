@@ -80,6 +80,22 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+/// The machine-readable trajectory record shared by `bench_runtime` and
+/// `bench_generate`: ROM_BENCH_JSON override, else `BENCH_runtime.json` at
+/// the repo root next to ROADMAP.md (CARGO_MANIFEST_DIR is `<repo>/rust`).
+/// Schema: EXPERIMENTS.md §BENCH_runtime.json schema.
+pub fn bench_json_path() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("ROM_BENCH_JSON") {
+        return std::path::PathBuf::from(p);
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_runtime.json")
+}
+
+/// Numeric env-var knob with a default (bench iteration counts and sizes).
+pub fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 /// Paper-style table printer: fixed-width columns, one row per variant.
 pub struct Reporter {
     title: String,

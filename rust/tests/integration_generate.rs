@@ -1,0 +1,212 @@
+//! Generation integration: prefill + stepwise decode must reproduce the
+//! full-window eval artifacts' NLL (the decode parity contract), generation
+//! must be deterministic across reruns and across parallel sessions, and
+//! the generate coordinator's error paths must fail cleanly.
+//!
+//! Requires `make artifacts` (tests skip politely when artifacts are absent
+//! or predate the decoding subsystem).
+
+use std::sync::Arc;
+
+use rom::config::TrainCfg;
+use rom::coordinator::checkpoint::Checkpoint;
+use rom::coordinator::generate::{generate, GenerateCfg};
+use rom::coordinator::trainer::Trainer;
+use rom::data::corpus::{Corpus, CorpusSpec};
+use rom::experiments::scheduler::run_jobs;
+use rom::runtime::artifact::Bundle;
+use rom::runtime::session::Session;
+use rom::runtime::tensor::Tensor;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(name: &str) -> bool {
+    artifacts_root().join(name).join("manifest.json").exists()
+}
+
+/// Open a bundle iff it exists AND ships generation artifacts.
+fn open_decodable(name: &str) -> Option<Arc<Bundle>> {
+    if !have(name) {
+        eprintln!("skipping: artifacts/{name} missing (run `make artifacts`)");
+        return None;
+    }
+    let bundle = Bundle::open(artifacts_root().join(name)).unwrap();
+    if bundle.manifest.decode.is_none() {
+        eprintln!("skipping: artifacts/{name} predates decode artifacts");
+        return None;
+    }
+    Some(bundle)
+}
+
+/// Stable f64 log-softmax NLL of `target` under a logits row.
+fn nll_of(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let sum: f64 = logits.iter().map(|&x| (x as f64 - max).exp()).sum();
+    -((logits[target] as f64 - max) - sum.ln())
+}
+
+#[test]
+fn stepwise_decode_matches_eval_artifact() {
+    // The acceptance parity test: summed next-token NLL from decode_step —
+    // one token at a time from a zero state — must match the full-window
+    // eval artifact, and the prefill artifact's last-position logits must
+    // match both the stepwise path and the eval_last artifact.
+    for name in ["mamba-tiny", "rom-tiny"] {
+        let Some(bundle) = open_decodable(name) else { continue };
+        let spec = bundle.manifest.decode.clone().unwrap();
+        let man = bundle.manifest.clone();
+        let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+        let ctx = man.eval_lens[0];
+        assert!(spec.prefill_lens.contains(&ctx), "eval lens double as prefill lens");
+
+        let corpus = Corpus::new(CorpusSpec::default(), 17);
+        let stream = corpus.generate(4242, ctx + 1);
+        let (tokens, targets) = (&stream[..ctx], &stream[1..ctx + 1]);
+        let tok = Tensor::i32(&[1, ctx], tokens.to_vec());
+        let tgt = Tensor::i32(&[1, ctx], targets.to_vec());
+        let (nll_ref, count) = sess.eval(ctx, &tok, &tgt).unwrap();
+        assert_eq!(count, ctx as f64);
+
+        // Stepwise pass: same sequence in every batch row, score row 0.
+        let (bd, vocab) = (spec.batch, man.vocab_size);
+        let mut state = sess.init_decode_state().unwrap();
+        let mut nll_step = 0.0f64;
+        let mut last_logits = Vec::new();
+        for t in 0..ctx {
+            let logits = sess
+                .decode_step(&Tensor::i32(&[bd], vec![tokens[t]; bd]), &mut state)
+                .unwrap();
+            let row = logits.as_f32().unwrap()[..vocab].to_vec();
+            nll_step += nll_of(&row, targets[t] as usize);
+            last_logits = row;
+        }
+        assert_eq!(state.pos, ctx as u64);
+        let rel = (nll_step - nll_ref).abs() / nll_ref.abs().max(1e-9);
+        assert!(
+            rel < 2e-3,
+            "{name}: stepwise NLL {nll_step} vs eval {nll_ref} (rel {rel})"
+        );
+
+        // Prefill artifact: one device call over the same prompt.
+        let mut flat = Vec::with_capacity(bd * ctx);
+        for _ in 0..bd {
+            flat.extend_from_slice(tokens);
+        }
+        let (plogits, pstate) =
+            sess.prefill(&Tensor::i32(&[bd, ctx], flat)).unwrap();
+        assert_eq!(pstate.pos, ctx as u64);
+        let prow = &plogits.as_f32().unwrap()[..vocab];
+        for (i, (a, b)) in prow.iter().zip(last_logits.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "{name}: prefill logit[{i}] {a} vs stepwise {b}"
+            );
+        }
+        let (nll_last, _) = sess.eval_last(ctx, &tok, &tgt).unwrap();
+        let nll_prefill = nll_of(prow, targets[ctx - 1] as usize);
+        assert!(
+            (nll_prefill - nll_last).abs() < 1e-3 * nll_last.abs().max(1.0),
+            "{name}: prefill final NLL {nll_prefill} vs eval_last {nll_last}"
+        );
+    }
+}
+
+/// Train briefly, checkpoint, and generate — the `rom generate` pipeline.
+fn checkpoint_for_generation(bundle: &Arc<Bundle>) -> std::path::PathBuf {
+    let cfg = TrainCfg { steps: 5, max_lr: 3e-3, log_every: 0, ..Default::default() };
+    let mut trainer = Trainer::new(Arc::clone(bundle), cfg);
+    trainer.quiet = true;
+    trainer.final_eval = false;
+    let (_report, sess) = trainer.run_session().unwrap();
+    let (params, m, v) = sess.export().unwrap();
+    let dir = std::env::temp_dir().join("rom_integration_generate");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{}.ckpt", bundle.manifest.name));
+    Checkpoint { step: sess.step_count(), params, m, v }.save(&path).unwrap();
+    path
+}
+
+#[test]
+fn generation_deterministic_across_runs_and_parallel_sessions() {
+    let Some(bundle) = open_decodable("mamba-tiny") else { return };
+    let ckpt = checkpoint_for_generation(&bundle);
+
+    // Three prompts of a non-artifact length: exercises the decode_step
+    // prompt fallback AND chunking+padding (batch is 2 for stock presets).
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let prompts: Vec<Vec<i32>> =
+        (0..3).map(|i| corpus.generate(900 + i, 9)).collect();
+    let cfg = GenerateCfg { max_new: 6, temperature: 0.9, top_k: 8, seed: 7 };
+
+    let gen_once = move |ckpt: &std::path::Path, prompts: &[Vec<i32>]| {
+        let bundle = Bundle::open(artifacts_root().join("mamba-tiny")).unwrap();
+        let ck = Checkpoint::load(ckpt).unwrap();
+        let sess =
+            Session::restore(Arc::clone(&bundle), &ck.params, &ck.m, &ck.v, ck.step)
+                .unwrap();
+        generate(&sess, prompts, &cfg).unwrap().completions
+    };
+
+    let first = gen_once(&ckpt, &prompts);
+    assert_eq!(first.len(), 3);
+    assert!(first.iter().all(|c| c.len() == 6));
+    let again = gen_once(&ckpt, &prompts);
+    assert_eq!(first, again, "same seed + params must reproduce tokens");
+
+    // `--jobs`-style parallel sessions: two workers, each with its own
+    // client + bundle + session, must emit the identical token streams.
+    let items: Vec<String> = vec!["a".into(), "b".into()];
+    let ckpt2 = ckpt.clone();
+    let prompts2 = prompts.clone();
+    let results = run_jobs(&items, 2, move |_idx, _name| {
+        Ok(gen_once(&ckpt2, &prompts2))
+    });
+    for r in results {
+        assert_eq!(r.unwrap(), first, "parallel session diverged");
+    }
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn generate_error_paths_are_clean() {
+    let Some(bundle) = open_decodable("mamba-tiny") else { return };
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+    let cfg = GenerateCfg::default();
+    let ok_prompt = vec![vec![1, 2, 3]];
+
+    let err = generate(&sess, &[], &cfg).unwrap_err();
+    assert!(err.to_string().contains("no prompts"), "got: {err:#}");
+
+    let err = generate(&sess, &[vec![]], &cfg).unwrap_err();
+    assert!(err.to_string().contains("empty prompt"), "got: {err:#}");
+
+    let err = generate(
+        &sess,
+        &ok_prompt,
+        &GenerateCfg { max_new: 0, ..GenerateCfg::default() },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("max-new"), "got: {err:#}");
+
+    let err =
+        generate(&sess, &[vec![1, 2, 3], vec![4, 5]], &cfg).unwrap_err();
+    assert!(err.to_string().contains("ragged"), "got: {err:#}");
+
+    let vocab = bundle.manifest.vocab_size as i32;
+    let err = generate(&sess, &[vec![1, vocab]], &cfg).unwrap_err();
+    assert!(err.to_string().contains("vocabulary"), "got: {err:#}");
+
+    // Wrong-shape session entry points bail instead of panicking.
+    let err = sess.prefill(&Tensor::i32(&[1, 7], vec![0; 7])).unwrap_err();
+    assert!(err.to_string().contains("prefill tokens"), "got: {err:#}");
+    let spec = bundle.manifest.decode.as_ref().unwrap();
+    let err = sess
+        .prefill(&Tensor::i32(&[spec.batch, 7], vec![0; spec.batch * 7]))
+        .unwrap_err();
+    assert!(err.to_string().contains("no prefill artifact"), "got: {err:#}");
+
+    // Unknown variant: a clean open error, long before any device work.
+    assert!(Bundle::open(artifacts_root().join("no-such-variant-xyz")).is_err());
+}

@@ -23,4 +23,7 @@ if cargo clippy --version >/dev/null 2>&1; then
 else
   echo "warning: cargo clippy unavailable; skipping lint gate" >&2
 fi
+# Rustdoc gate: broken intra-doc links, unclosed HTML-looking tags and every
+# other rustdoc warning are errors (docs are a first-class deliverable).
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo fmt --check
