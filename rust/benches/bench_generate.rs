@@ -17,7 +17,7 @@ use rom::experiments::harness::artifacts_root;
 use rom::runtime::artifact::Bundle;
 use rom::runtime::session::Session;
 use rom::runtime::tensor::Tensor;
-use rom::substrate::bench::{bench, bench_json_path, env_u64, time_once};
+use rom::substrate::bench::{bench, bench_json_path, env_u64, merge_bench_json, time_once};
 use rom::substrate::json::Json;
 
 fn main() {
@@ -66,20 +66,19 @@ fn main() {
     let (report, gen_s) = time_once(|| generate(&sess, &prompts, &cfg).unwrap());
     let decode_ms = report.median_decode_ms().expect("max_new > 1");
     let decode_tps = report.decode_tokens_per_sec().expect("max_new > 1");
+    let device_rps = report.device_rows_per_sec().expect("max_new > 1");
     println!(
         "decode_step: {decode_ms:.2} ms/step median -> {decode_tps:.0} tokens/s \
+         effective, {device_rps:.0} rows/s device \
          ({} rows x {} steps in {gen_s:.2}s end-to-end)",
         spec.batch,
         max_new - 1
     );
 
-    // Merge the gen_* fields into the shared trajectory record.
+    // Merge the gen_* fields into the shared trajectory record — through the
+    // atomic helper, so a concurrent bench_runtime (or a crash mid-write)
+    // can never cost us the other bench's fields.
     let path = bench_json_path();
-    let mut map = match std::fs::read_to_string(&path).ok().and_then(|s| Json::parse(&s).ok())
-    {
-        Some(Json::Obj(m)) => m,
-        _ => Default::default(),
-    };
     let fields = [
         ("gen_variant", Json::str(variant.as_str())),
         ("gen_batch", Json::num(spec.batch as f64)),
@@ -90,10 +89,13 @@ fn main() {
         ("gen_prefill_ms", Json::num(prefill_stats.median_secs() * 1e3)),
         ("gen_decode_step_ms", Json::num(decode_ms)),
         ("gen_decode_tokens_per_sec", Json::num(decode_tps)),
+        ("gen_decode_device_rows_per_sec", Json::num(device_rps)),
     ];
-    for (k, v) in fields {
-        map.insert(k.to_string(), v);
-    }
-    std::fs::write(&path, Json::Obj(map).to_string()).unwrap();
+    merge_bench_json(&path, |map| {
+        for (k, v) in fields {
+            map.insert(k.to_string(), v);
+        }
+    })
+    .unwrap();
     println!("merged gen_* fields into {}", path.display());
 }

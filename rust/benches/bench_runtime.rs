@@ -1,8 +1,10 @@
 //! Runtime micro-benchmarks (§Perf): artifact compile latency, fused-step
 //! latency, eval latency, host<->literal conversion cost, the grad-accum
-//! path vs the fused path, checkpoint save/load, and the parallel variant
-//! sweep (serial vs scheduler workers). These are the numbers the L3
-//! optimization loop iterates against (EXPERIMENTS.md §Perf L3 log).
+//! path vs the fused path, checkpoint save/load, the parallel variant
+//! sweep (serial vs scheduler workers), and the continuous-batching serve
+//! loop (admission-to-first-token and per-token service latency). These are
+//! the numbers the L3 optimization loop iterates against (EXPERIMENTS.md
+//! §Perf L3 log).
 //!
 //! Besides the human-readable report, this bench emits machine-readable
 //! `BENCH_runtime.json` at the repo root (override the path with
@@ -14,6 +16,7 @@
 use std::sync::Arc;
 
 use rom::coordinator::checkpoint::Checkpoint;
+use rom::coordinator::serve::{Engine, Request as ServeRequest, ServeCfg, Submit};
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::loader::Loader;
 use rom::experiments::harness::{artifacts_root, have_variant, RunSpec};
@@ -21,7 +24,7 @@ use rom::experiments::scheduler::run_sweep;
 use rom::runtime::artifact::Bundle;
 use rom::runtime::session::Session;
 use rom::runtime::tensor::Tensor;
-use rom::substrate::bench::{bench, bench_json_path, env_u64, time_once};
+use rom::substrate::bench::{bench, bench_json_path, env_u64, merge_bench_json, time_once};
 use rom::substrate::json::Json;
 
 /// Peak resident set size in bytes (linux VmHWM); None elsewhere.
@@ -240,6 +243,63 @@ fn main() {
         }
     }
 
+    // Continuous-batching serve loop: queue wait, TTFT and per-token
+    // service latency through the real `coordinator::serve` engine
+    // (skipped when the variant ships no decode artifacts). More requests
+    // than slots, so slot turnover/swap-in is actually exercised.
+    let mut serve_fields: Vec<(&str, Json)> = Vec::new();
+    if let Some(dspec) = &man.decode {
+        let n_req =
+            env_u64("ROM_SERVE_REQUESTS", 2 * dspec.batch as u64 + 1).max(1) as usize;
+        let serve_new = (env_u64("ROM_SERVE_TOKENS", 16) as usize).max(1);
+        println!(
+            "== serve: {n_req} requests x {serve_new} tokens (batch {}) ==",
+            dspec.batch
+        );
+        let mut engine = Engine::new(&sess, &ServeCfg { queue_cap: n_req }).unwrap();
+        let (_, serve_s) = time_once(|| {
+            for i in 0..n_req as u64 {
+                let req = ServeRequest {
+                    prompt: corpus.generate(0x5E87_0000 + i, ctx),
+                    max_new: serve_new,
+                    temperature: 0.8,
+                    top_k: 8,
+                    seed: i,
+                    stop: None,
+                };
+                match engine.submit(req).unwrap() {
+                    Submit::Accepted(_) => {}
+                    Submit::Rejected(_) => unreachable!("queue sized to n_req"),
+                }
+            }
+            engine.drain(&sess).unwrap();
+        });
+        let rep = engine.report();
+        let serve_tps = rep.emitted_tokens as f64 / serve_s.max(1e-9);
+        println!(
+            "serve: {} tokens in {serve_s:.2}s -> {serve_tps:.0} tokens/s \
+             ({} prefills, {} decode steps)",
+            rep.emitted_tokens, rep.prefills, rep.decode_steps
+        );
+        serve_fields.push(("serve_requests", Json::num(n_req as f64)));
+        serve_fields.push(("serve_batch", Json::num(dspec.batch as f64)));
+        serve_fields.push(("serve_max_new", Json::num(serve_new as f64)));
+        serve_fields.push(("serve_tokens_per_sec", Json::num(serve_tps)));
+        serve_fields.push(("serve_prefills", Json::num(rep.prefills as f64)));
+        if let Some(q) = &rep.queue_wait {
+            serve_fields.push(("serve_queue_wait_ms_p50", Json::num(q.p50_ms)));
+        }
+        if let Some(t) = &rep.ttft {
+            serve_fields.push(("serve_ttft_ms_p50", Json::num(t.p50_ms)));
+            serve_fields.push(("serve_ttft_ms_p90", Json::num(t.p90_ms)));
+        }
+        if let Some(t) = &rep.per_token {
+            serve_fields.push(("serve_token_ms_p50", Json::num(t.p50_ms)));
+        }
+    } else {
+        eprintln!("serve section skipped: no decode artifacts for {variant}");
+    }
+
     // Machine-readable trajectory record.
     let mut fields = vec![
         ("variant", Json::str(variant.as_str())),
@@ -255,26 +315,23 @@ fn main() {
         fields.push(("grad_accum_step_ms", Json::num(s_ms(a))));
     }
     fields.extend(sweep_fields);
+    fields.extend(serve_fields);
     if let Some(rss) = single_session_rss {
         fields.push(("peak_rss_bytes", Json::num(rss as f64)));
     }
     // This bench owns every non-gen_* field and rewrites them wholesale
-    // (stale sweep_* keys from a previous run must not linger), but the
-    // gen_* keys belong to bench_generate and survive — running either
-    // bench never clobbers the other's fields.
+    // (stale sweep_*/serve_* keys from a previous run must not linger), but
+    // the gen_* keys belong to bench_generate and survive — the atomic
+    // helper guarantees a concurrent bench or a crash mid-write can never
+    // clobber them.
     let out_path = bench_json_path();
-    let mut map = match std::fs::read_to_string(&out_path)
-        .ok()
-        .and_then(|s| Json::parse(&s).ok())
-    {
-        Some(Json::Obj(m)) => m,
-        _ => Default::default(),
-    };
-    map.retain(|k, _| k.starts_with("gen_"));
-    for (k, v) in fields {
-        map.insert(k.to_string(), v);
-    }
-    std::fs::write(&out_path, Json::Obj(map).to_string()).unwrap();
+    merge_bench_json(&out_path, |map| {
+        map.retain(|k, _| k.starts_with("gen_"));
+        for (k, v) in fields {
+            map.insert(k.to_string(), v);
+        }
+    })
+    .unwrap();
     println!("wrote {}", out_path.display());
 }
 

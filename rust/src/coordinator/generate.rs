@@ -64,24 +64,43 @@ pub struct GenerateReport {
     pub decode_step_s: Vec<f64>,
     /// Device batch rows (the artifact's baked-in decode batch).
     pub batch: usize,
+    /// Real (non-padded) rows advanced across all timed decode steps — the
+    /// numerator of the effective throughput. A short final chunk pads the
+    /// device batch, and padded rows must not count as generated tokens.
+    pub real_rows_stepped: usize,
 }
 
 impl GenerateReport {
     /// Median decode_step latency in milliseconds (None when generation
-    /// needed no decode steps, i.e. max_new == 1).
+    /// needed no decode steps, i.e. max_new == 1). True median: even-length
+    /// samples average the two middle elements.
     pub fn median_decode_ms(&self) -> Option<f64> {
         if self.decode_step_s.is_empty() {
             return None;
         }
         let mut v = self.decode_step_s.clone();
         v.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN latency"));
-        Some(v[v.len() / 2] * 1e3)
+        let n = v.len();
+        let med = if n % 2 == 1 { v[n / 2] } else { (v[n / 2 - 1] + v[n / 2]) / 2.0 };
+        Some(med * 1e3)
     }
 
-    /// Device decode throughput: batch rows advanced per second of
-    /// decode_step wall time (padded rows included — this is the artifact's
-    /// throughput, not per-prompt speed).
+    /// Effective decode throughput: real (non-padded) rows advanced per
+    /// second of decode_step wall time — the tokens a caller actually
+    /// receives. See `device_rows_per_sec` for the raw device rate.
     pub fn decode_tokens_per_sec(&self) -> Option<f64> {
+        let total: f64 = self.decode_step_s.iter().sum();
+        if total <= 0.0 {
+            return None;
+        }
+        Some(self.real_rows_stepped as f64 / total)
+    }
+
+    /// Device decode throughput: ALL batch rows advanced per second of
+    /// decode_step wall time, padded rows included — the artifact's rate,
+    /// not per-prompt speed. Equals `decode_tokens_per_sec` only when the
+    /// prompt count is a multiple of the decode batch.
+    pub fn device_rows_per_sec(&self) -> Option<f64> {
         let total: f64 = self.decode_step_s.iter().sum();
         if total <= 0.0 {
             return None;
@@ -91,8 +110,12 @@ impl GenerateReport {
 }
 
 /// Parse the CLI prompt grammar: comma-separated token ids, `;` between
-/// prompts — `"1,2,3;4,5,6"` is two prompts of three tokens.
+/// prompts — `"1,2,3;4,5,6"` is two prompts of three tokens. One trailing
+/// `;` (a common shell-quoting artifact) is tolerated; interior empty
+/// prompts (`"1;;2"`) stay errors.
 pub fn parse_prompt_tokens(s: &str) -> Result<Vec<Vec<i32>>> {
+    let s = s.trim();
+    let s = s.strip_suffix(';').unwrap_or(s);
     if s.trim().is_empty() {
         bail!("empty --prompt-tokens: expected comma-separated ids like 1,2,3");
     }
@@ -123,6 +146,51 @@ pub fn argmax(xs: &[f32]) -> usize {
         }
     }
     best
+}
+
+/// The sampling state of ONE generated sequence: its RNG stream, sampling
+/// params, emitted tokens and finish condition. `generate` owns one per real
+/// prompt row for the life of a chunk; the serve engine keeps one resident
+/// per batch slot and swaps it with the slot's state lanes — which is why
+/// this is a first-class type rather than loop-local vectors.
+#[derive(Debug, Clone)]
+pub struct RowSampler {
+    rng: Rng,
+    pub temperature: f64,
+    pub top_k: usize,
+    /// Emission cap: `finished` turns true once this many tokens are out.
+    pub max_new: usize,
+    /// Optional stop token: emitted like any other draw, then the row is
+    /// finished. `None` always runs to `max_new`.
+    pub stop: Option<i32>,
+    /// Tokens emitted so far, in order.
+    pub emitted: Vec<i32>,
+}
+
+impl RowSampler {
+    pub fn new(
+        rng: Rng,
+        temperature: f64,
+        top_k: usize,
+        max_new: usize,
+        stop: Option<i32>,
+    ) -> RowSampler {
+        RowSampler { rng, temperature, top_k, max_new, stop, emitted: Vec::new() }
+    }
+
+    /// Draw the next token from a logits row, record and return it.
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        let tok = sample_token(logits, &mut self.rng, self.temperature, self.top_k) as i32;
+        self.emitted.push(tok);
+        tok
+    }
+
+    /// True once the row needs no more draws: `max_new` reached, or the
+    /// last emitted token was the stop token.
+    pub fn finished(&self) -> bool {
+        self.emitted.len() >= self.max_new
+            || self.stop.is_some_and(|s| self.emitted.last() == Some(&s))
+    }
 }
 
 /// Sample one token id from a logits row. Temperature <= 0 is greedy; top_k
@@ -188,14 +256,23 @@ pub fn generate(
     let mut completions: Vec<Vec<i32>> = Vec::with_capacity(prompts.len());
     let mut prefill_s = 0.0f64;
     let mut decode_step_s: Vec<f64> = Vec::new();
+    let mut real_rows_stepped = 0usize;
 
     for chunk in prompts.chunks(bd) {
         // Pad the device batch with copies of the chunk's first prompt.
         let rows: Vec<&Vec<i32>> =
             (0..bd).map(|r| chunk.get(r).unwrap_or(&chunk[0])).collect();
         let row_base = completions.len(); // global index of this chunk's row 0
-        let mut rngs: Vec<Rng> = (0..chunk.len())
-            .map(|r| Rng::new(cfg.seed).fold_in((row_base + r) as u64))
+        let mut samplers: Vec<RowSampler> = (0..chunk.len())
+            .map(|r| {
+                RowSampler::new(
+                    Rng::new(cfg.seed).fold_in((row_base + r) as u64),
+                    cfg.temperature,
+                    cfg.top_k,
+                    cfg.max_new,
+                    None,
+                )
+            })
             .collect();
 
         // Consume the prompt: one prefill call, or the stepwise fallback.
@@ -219,8 +296,6 @@ pub fn generate(
 
         // Sampling loop: draw from the current logits, then advance the
         // state only while more tokens are needed.
-        let mut chunk_out: Vec<Vec<i32>> =
-            chunk.iter().map(|_| Vec::with_capacity(cfg.max_new)).collect();
         for step_i in 0..cfg.max_new {
             let lv = logits.as_f32()?;
             if lv.len() != bd * vocab {
@@ -230,22 +305,20 @@ pub fn generate(
             for r in 0..bd {
                 let row_logits = &lv[r * vocab..(r + 1) * vocab];
                 let tok = if r < chunk.len() {
-                    sample_token(row_logits, &mut rngs[r], cfg.temperature, cfg.top_k)
+                    samplers[r].sample(row_logits)
                 } else {
-                    argmax(row_logits) // padded row: cheapest deterministic fill
+                    argmax(row_logits) as i32 // padded row: deterministic fill
                 };
-                next.push(tok as i32);
-                if r < chunk.len() {
-                    chunk_out[r].push(tok as i32);
-                }
+                next.push(tok);
             }
             if step_i + 1 < cfg.max_new {
                 let t1 = Instant::now();
                 logits = sess.decode_step(&Tensor::i32(&[bd], next), &mut state)?;
                 decode_step_s.push(t1.elapsed().as_secs_f64());
+                real_rows_stepped += chunk.len();
             }
         }
-        completions.extend(chunk_out);
+        completions.extend(samplers.into_iter().map(|s| s.emitted));
     }
 
     Ok(GenerateReport {
@@ -255,6 +328,7 @@ pub fn generate(
         prefill_s,
         decode_step_s,
         batch: bd,
+        real_rows_stepped,
     })
 }
 
@@ -270,6 +344,82 @@ mod tests {
         assert!(parse_prompt_tokens("").is_err());
         assert!(parse_prompt_tokens("1,2;;3").is_err());
         assert!(parse_prompt_tokens("1,x,3").is_err());
+    }
+
+    #[test]
+    fn parse_prompts_tolerates_trailing_semicolon() {
+        // `rom generate --prompt-tokens '1,2,3;'` — a shell artifact, not an
+        // empty prompt.
+        assert_eq!(parse_prompt_tokens("1,2,3;").unwrap(), vec![vec![1, 2, 3]]);
+        assert_eq!(
+            parse_prompt_tokens(" 1,2;3,4; ").unwrap(),
+            vec![vec![1, 2], vec![3, 4]]
+        );
+        // Only ONE trailing separator is forgiven; doubled is still a typo.
+        assert!(parse_prompt_tokens("1,2;;").is_err());
+        assert!(parse_prompt_tokens(";").is_err());
+    }
+
+    fn report_with(batch: usize, decode_step_s: Vec<f64>, real_rows: usize) -> GenerateReport {
+        GenerateReport {
+            completions: Vec::new(),
+            prompt_len: 4,
+            prefill_used_artifact: true,
+            prefill_s: 0.0,
+            decode_step_s,
+            batch,
+            real_rows_stepped: real_rows,
+        }
+    }
+
+    #[test]
+    fn median_decode_is_a_true_median() {
+        // Odd count: the middle element.
+        let r = report_with(1, vec![0.003, 0.001, 0.002], 3);
+        assert_eq!(r.median_decode_ms(), Some(2.0));
+        // Even count: MEAN of the two middle elements, not the upper one.
+        let r = report_with(1, vec![0.004, 0.001, 0.003, 0.002], 4);
+        assert_eq!(r.median_decode_ms(), Some(2.5));
+        assert_eq!(report_with(1, vec![], 0).median_decode_ms(), None);
+    }
+
+    #[test]
+    fn padded_rows_do_not_inflate_throughput() {
+        // One real prompt in a 4-row device batch, 5 timed steps of 10ms:
+        // the device advances 20 rows but only 5 tokens reach a caller.
+        let r = report_with(4, vec![0.01; 5], 5);
+        let effective = r.decode_tokens_per_sec().unwrap();
+        let device = r.device_rows_per_sec().unwrap();
+        assert!((effective - 100.0).abs() < 1e-9, "effective {effective}");
+        assert!((device - 400.0).abs() < 1e-9, "device {device}");
+        // Full batch: the two rates agree.
+        let full = report_with(4, vec![0.01; 5], 20);
+        assert_eq!(
+            full.decode_tokens_per_sec().unwrap(),
+            full.device_rows_per_sec().unwrap()
+        );
+    }
+
+    #[test]
+    fn row_sampler_matches_raw_stream_and_finishes() {
+        let logits: Vec<f32> = (0..16).map(|i| ((i * 13) % 7) as f32 * 0.4).collect();
+        // The sampler's draws are exactly the raw sample_token stream on the
+        // same RNG (slot-residency must not change the tokens).
+        let mut raw_rng = Rng::new(9).fold_in(0);
+        let mut s = RowSampler::new(Rng::new(9).fold_in(0), 1.2, 4, 3, None);
+        for _ in 0..3 {
+            let want = sample_token(&logits, &mut raw_rng, 1.2, 4) as i32;
+            assert!(!s.finished());
+            assert_eq!(s.sample(&logits), want);
+        }
+        assert!(s.finished(), "max_new reached");
+        assert_eq!(s.emitted.len(), 3);
+
+        // Stop token: emitted, then finished early.
+        let mut s = RowSampler::new(Rng::new(0), 0.0, 0, 10, Some(argmax(&logits) as i32));
+        s.sample(&logits);
+        assert!(s.finished(), "stop token finishes the row");
+        assert_eq!(s.emitted.len(), 1);
     }
 
     #[test]

@@ -6,4 +6,5 @@ pub mod generate;
 pub mod metrics;
 pub mod monitor;
 pub mod schedule;
+pub mod serve;
 pub mod trainer;

@@ -1,0 +1,637 @@
+//! Continuous-batching generation service: the long-lived request loop
+//! behind `rom serve`.
+//!
+//! The decode artifacts bake a fixed device batch of `decode_spec().batch`
+//! rows, and SSM decode state is fixed-size per sequence — so serving is
+//! slot scheduling: the engine keeps one live batched `DecodeState`, treats
+//! each batch row as a slot, and when a sequence finishes (max_new reached
+//! or stop token sampled) it swaps the next queued prompt into the freed
+//! slot's state lanes (`Session::inject_state_row`) without disturbing the
+//! other rows. Prompts whose length matches a `prefill_L{L}` artifact are
+//! consumed in one device call; any other length goes through the stepwise
+//! decode_step fallback — and because admission is per-slot, requests of
+//! DIFFERENT prompt lengths coexist in one batch (the equal-length
+//! restriction of `generate` holds only within one device call, not across
+//! the request stream).
+//!
+//! Determinism contract: a request samples from `Rng::new(seed).fold_in(0)`
+//! and its row's logits depend only on its own tokens (all artifact ops are
+//! per-row), so each response is bit-identical to a standalone
+//! `rom generate` run with the same checkpoint, prompt, seed and sampling
+//! params — regardless of which slot it landed in, what its neighbors were
+//! doing, or how admissions interleaved. One exception is structural:
+//! layouts with SWA blocks read the shared `pos` state scalar (RoPE +
+//! cache-validity masking), so their rows cannot sit at different sequence
+//! positions in one batch. For those the engine degrades to gang admission
+//! (`DecodeSpec::position_dependent`): it waits until every slot is free,
+//! admits a FIFO run of equal-length prompts on a fresh state, and swaps
+//! nothing in mid-stream. Pure-SSM layouts get full continuous batching.
+//!
+//! The engine is deliberately single-threaded and pull-based: `submit`
+//! enqueues (bounded, with backpressure), `step` advances the world by at
+//! most one batched decode call, and the caller owns the loop — the CLI
+//! pumps it against a stdin reader thread, tests drive it deterministically,
+//! and the session never has to cross a thread boundary.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::generate::{parse_prompt_tokens, RowSampler};
+use crate::runtime::session::{DecodeState, Session};
+use crate::runtime::tensor::Tensor;
+use crate::substrate::rng::Rng;
+
+/// Engine-level configuration (per-request knobs live on `Request`).
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Admission-queue bound: `submit` rejects (returns the request to the
+    /// caller) once this many requests are waiting for a slot.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { queue_cap: 64 }
+    }
+}
+
+/// One generation request: a prompt plus its own sampling params — every
+/// request on the loop can use a different temperature/seed/stop condition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    /// Tokens to generate (>= 1); generation may end earlier on `stop`.
+    pub max_new: usize,
+    /// Softmax temperature; <= 0 selects greedy argmax decoding.
+    pub temperature: f64,
+    /// Restrict sampling to the k highest-probability tokens (0 = full
+    /// vocabulary). Ignored under greedy decoding.
+    pub top_k: usize,
+    /// RNG seed; the request samples from `Rng::new(seed).fold_in(0)` — the
+    /// stream a single-prompt `rom generate --seed` run uses.
+    pub seed: u64,
+    /// Optional stop token: emitted like any other draw, then the request
+    /// finishes early.
+    pub stop: Option<i32>,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            prompt: Vec::new(),
+            max_new: 32,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            stop: None,
+        }
+    }
+}
+
+/// Why a request finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Ran to its `max_new` emission cap.
+    MaxNew,
+    /// Sampled its stop token (included in the output).
+    Stop,
+}
+
+/// One completed request with its latency breakdown.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Admission id handed back by `submit`, in submission order.
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Sampled continuation (stop token included when `finish == Stop`).
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Whether the prompt matched a `prefill_L{L}` artifact (false = the
+    /// stepwise decode_step fallback consumed it).
+    pub prefill_used_artifact: bool,
+    /// Submission -> slot admission (time spent queued behind other work).
+    pub queue_wait_s: f64,
+    /// Submission -> first token sampled (queue wait + prompt consumption).
+    pub ttft_s: f64,
+    /// Wall time of each batched decode step this request rode on — its
+    /// per-token inter-arrival latencies after the first token.
+    pub token_s: Vec<f64>,
+}
+
+/// Outcome of `submit`: accepted into the queue, or bounced by backpressure
+/// with the request handed back intact so the caller can retry later.
+#[derive(Debug)]
+pub enum Submit {
+    Accepted(u64),
+    Rejected(Request),
+}
+
+/// Robust summary of one latency distribution, in milliseconds.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencyStats {
+    /// Summarize samples given in seconds (None when empty).
+    pub fn from_secs(samples: &[f64]) -> Option<LatencyStats> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = samples.iter().map(|s| s * 1e3).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN latency"));
+        let q = |p: f64| v[((v.len() - 1) as f64 * p) as usize];
+        Some(LatencyStats {
+            count: v.len(),
+            mean_ms: v.iter().sum::<f64>() / v.len() as f64,
+            p50_ms: q(0.5),
+            p90_ms: q(0.9),
+            p99_ms: q(0.99),
+            max_ms: *v.last().expect("non-empty"),
+        })
+    }
+}
+
+/// Aggregate service counters + latency histograms over every completed
+/// request (the serve section of `BENCH_runtime.json` is built from this).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completed: usize,
+    /// Total tokens emitted across completed requests.
+    pub emitted_tokens: usize,
+    /// Prompt consumptions performed (slot swap-ins + gang admissions).
+    pub prefills: usize,
+    /// Batched decode_step device calls driven by the loop.
+    pub decode_steps: usize,
+    pub queue_wait: Option<LatencyStats>,
+    pub ttft: Option<LatencyStats>,
+    pub per_token: Option<LatencyStats>,
+}
+
+/// A request occupying one batch row of the live decode state.
+struct Slot {
+    id: u64,
+    prompt: Vec<i32>,
+    sampler: RowSampler,
+    /// Last sampled token — the slot's input to the next batched step.
+    next_token: i32,
+    prefill_used_artifact: bool,
+    queue_wait_s: f64,
+    ttft_s: f64,
+    token_s: Vec<f64>,
+}
+
+struct Queued {
+    req: Request,
+    id: u64,
+    submit_t: Instant,
+}
+
+/// The continuous-batching engine. Construct with the session that will
+/// drive it, `submit` requests, and pump `step` (or `drain`) with that same
+/// session; completed `Response`s come back from each call.
+pub struct Engine {
+    queue: VecDeque<Queued>,
+    slots: Vec<Option<Slot>>,
+    /// Live batched recurrent state; None until the first admission.
+    state: Option<DecodeState>,
+    batch: usize,
+    vocab: usize,
+    prefill_lens: Vec<usize>,
+    /// SWA layouts read the shared `pos` scalar: gang admission only.
+    position_dependent: bool,
+    queue_cap: usize,
+    next_id: u64,
+    // Accumulators behind `report()`.
+    completed: usize,
+    emitted_tokens: usize,
+    prefills: usize,
+    decode_steps: usize,
+    queue_wait_samples: Vec<f64>,
+    ttft_samples: Vec<f64>,
+    token_samples: Vec<f64>,
+}
+
+/// Request sanity against the manifest (free function so the CLI can check
+/// lines before they ever reach the engine).
+pub fn validate_request(req: &Request, vocab: usize) -> Result<()> {
+    if req.prompt.is_empty() {
+        bail!("empty prompt");
+    }
+    if req.max_new == 0 {
+        bail!("max-new must be >= 1 (got 0)");
+    }
+    if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+        bail!("token {t} outside the vocabulary [0, {vocab})");
+    }
+    Ok(())
+}
+
+impl Engine {
+    pub fn new(sess: &Session, cfg: &ServeCfg) -> Result<Engine> {
+        let spec = sess.bundle.decode_spec()?;
+        if cfg.queue_cap == 0 {
+            bail!("queue_cap must be >= 1");
+        }
+        Ok(Engine {
+            queue: VecDeque::new(),
+            slots: (0..spec.batch).map(|_| None).collect(),
+            state: None,
+            batch: spec.batch,
+            vocab: sess.bundle.manifest.vocab_size,
+            prefill_lens: spec.prefill_lens.clone(),
+            position_dependent: spec.position_dependent(),
+            queue_cap: cfg.queue_cap,
+            next_id: 0,
+            completed: 0,
+            emitted_tokens: 0,
+            prefills: 0,
+            decode_steps: 0,
+            queue_wait_samples: Vec::new(),
+            ttft_samples: Vec::new(),
+            token_samples: Vec::new(),
+        })
+    }
+
+    /// Enqueue a request. `Submit::Rejected` hands it back when the bounded
+    /// queue is full (backpressure); `Err` means the request itself is
+    /// invalid and retrying cannot help.
+    pub fn submit(&mut self, req: Request) -> Result<Submit> {
+        validate_request(&req, self.vocab)?;
+        if self.queue.len() >= self.queue_cap {
+            return Ok(Submit::Rejected(req));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Queued { req, id, submit_t: Instant::now() });
+        Ok(Submit::Accepted(id))
+    }
+
+    /// No queued and no in-flight work.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Requests waiting for a slot.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests currently occupying slots.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Advance the service: admit queued prompts into free slots, then run
+    /// at most one batched decode step. Returns the requests that completed
+    /// during this call. Guaranteed progress: a non-idle engine always
+    /// admits or decodes.
+    pub fn step(&mut self, sess: &Session) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+        if self.position_dependent {
+            self.admit_gang(sess, &mut done)?;
+        } else {
+            self.admit_slots(sess, &mut done)?;
+        }
+        self.decode_once(sess, &mut done)?;
+        Ok(done)
+    }
+
+    /// Pump `step` until idle (the batch-mode tail of the CLI loop).
+    pub fn drain(&mut self, sess: &Session) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while !self.idle() {
+            out.extend(self.step(sess)?);
+        }
+        Ok(out)
+    }
+
+    /// Aggregate counters + latency histograms over completed requests.
+    pub fn report(&self) -> ServeReport {
+        ServeReport {
+            completed: self.completed,
+            emitted_tokens: self.emitted_tokens,
+            prefills: self.prefills,
+            decode_steps: self.decode_steps,
+            queue_wait: LatencyStats::from_secs(&self.queue_wait_samples),
+            ttft: LatencyStats::from_secs(&self.ttft_samples),
+            per_token: LatencyStats::from_secs(&self.token_samples),
+        }
+    }
+
+    // ---- admission ---------------------------------------------------------
+
+    /// Position-invariant layouts: fill every free slot from the queue, one
+    /// swap-in per request. Each admission consumes the prompt on a scratch
+    /// state (rows replicated, so every row carries the same lanes) and
+    /// injects one row into the freed slot of the live state.
+    fn admit_slots(&mut self, sess: &Session, done: &mut Vec<Response>) -> Result<()> {
+        while !self.queue.is_empty() {
+            let Some(r) = self.slots.iter().position(|s| s.is_none()) else { break };
+            let q = self.queue.pop_front().expect("checked non-empty");
+            let queue_wait_s = q.submit_t.elapsed().as_secs_f64();
+            let rows: Vec<&Vec<i32>> = vec![&q.req.prompt; self.batch];
+            let (logits, scratch, used_artifact) = self.consume_prompt(sess, &rows)?;
+            let lv = logits.as_f32()?;
+            let mut sampler = sampler_for(&q.req);
+            let first = sampler.sample(&lv[..self.vocab]);
+            let ttft_s = q.submit_t.elapsed().as_secs_f64();
+            let slot = Slot {
+                id: q.id,
+                prompt: q.req.prompt,
+                sampler,
+                next_token: first,
+                prefill_used_artifact: used_artifact,
+                queue_wait_s,
+                ttft_s,
+                token_s: Vec::new(),
+            };
+            if slot.sampler.finished() {
+                // Completed at admission (max_new == 1 or instant stop):
+                // never occupies the live state.
+                self.complete(slot, done);
+                continue;
+            }
+            if let Some(live) = self.state.as_mut() {
+                sess.inject_state_row(live, r, &scratch, 0)?;
+            } else {
+                // Scratch rows are replicas, so row r already holds the
+                // request's lanes — adopt the whole state on first use.
+                self.state = Some(scratch);
+            }
+            self.slots[r] = Some(slot);
+        }
+        Ok(())
+    }
+
+    /// Position-dependent (SWA) layouts: every batch row must share the
+    /// sequence position, so admission waits for ALL slots to free, then
+    /// starts a FIFO run of equal-length prompts together on a fresh state.
+    fn admit_gang(&mut self, sess: &Session, done: &mut Vec<Response>) -> Result<()> {
+        if self.queue.is_empty() || self.slots.iter().any(|s| s.is_some()) {
+            return Ok(());
+        }
+        let lead_len = self.queue[0].req.prompt.len();
+        let take = self
+            .queue
+            .iter()
+            .take(self.batch)
+            .take_while(|q| q.req.prompt.len() == lead_len)
+            .count();
+        let gang: Vec<Queued> = self.queue.drain(..take).collect();
+        let queue_waits: Vec<f64> =
+            gang.iter().map(|q| q.submit_t.elapsed().as_secs_f64()).collect();
+
+        let rows: Vec<&Vec<i32>> =
+            (0..self.batch).map(|r| &gang.get(r).unwrap_or(&gang[0]).req.prompt).collect();
+        self.state = None; // fresh sequence positions for the new gang
+        let (logits, state, used_artifact) = self.consume_prompt(sess, &rows)?;
+        let lv = logits.as_f32()?;
+        self.state = Some(state);
+
+        for (r, (q, queue_wait_s)) in gang.into_iter().zip(queue_waits).enumerate() {
+            let mut sampler = sampler_for(&q.req);
+            let first = sampler.sample(&lv[r * self.vocab..][..self.vocab]);
+            let ttft_s = q.submit_t.elapsed().as_secs_f64();
+            let slot = Slot {
+                id: q.id,
+                prompt: q.req.prompt,
+                sampler,
+                next_token: first,
+                prefill_used_artifact: used_artifact,
+                queue_wait_s,
+                ttft_s,
+                token_s: Vec::new(),
+            };
+            if slot.sampler.finished() {
+                self.complete(slot, done);
+            } else {
+                self.slots[r] = Some(slot);
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume one prompt batch exactly as `generate` does: a single fused
+    /// prefill call when the length matches an artifact, the stepwise
+    /// decode_step fallback otherwise. Returns the last-position logits,
+    /// the resulting state and whether the artifact path ran.
+    fn consume_prompt(
+        &mut self,
+        sess: &Session,
+        rows: &[&Vec<i32>],
+    ) -> Result<(Tensor, DecodeState, bool)> {
+        let len = rows[0].len();
+        self.prefills += 1;
+        if self.prefill_lens.contains(&len) {
+            let mut flat = Vec::with_capacity(self.batch * len);
+            for row in rows {
+                flat.extend_from_slice(row);
+            }
+            let (logits, state) = sess.prefill(&Tensor::i32(&[self.batch, len], flat))?;
+            return Ok((logits, state, true));
+        }
+        let mut state = sess.init_decode_state()?;
+        let mut logits = None;
+        for t in 0..len {
+            let toks: Vec<i32> = rows.iter().map(|r| r[t]).collect();
+            logits = Some(sess.decode_step(&Tensor::i32(&[self.batch], toks), &mut state)?);
+        }
+        Ok((logits.expect("prompt len >= 1"), state, false))
+    }
+
+    // ---- decoding ----------------------------------------------------------
+
+    /// One batched decode step: every occupied slot advances by one token;
+    /// free rows are fed a zero token (their lanes are dead until the next
+    /// swap-in overwrites them, and rows never interact).
+    fn decode_once(&mut self, sess: &Session, done: &mut Vec<Response>) -> Result<()> {
+        if self.slots.iter().all(|s| s.is_none()) {
+            return Ok(());
+        }
+        let mut toks = vec![0i32; self.batch];
+        for (r, slot) in self.slots.iter().enumerate() {
+            if let Some(s) = slot {
+                toks[r] = s.next_token;
+            }
+        }
+        let state = self.state.as_mut().expect("occupied slots imply live state");
+        let t0 = Instant::now();
+        let logits = sess.decode_step(&Tensor::i32(&[self.batch], toks), state)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.decode_steps += 1;
+        let lv = logits.as_f32()?;
+        if lv.len() != self.batch * self.vocab {
+            bail!("decode logits: {} values, expected {}", lv.len(), self.batch * self.vocab);
+        }
+        let vocab = self.vocab;
+        let mut finished = Vec::new();
+        for (r, entry) in self.slots.iter_mut().enumerate() {
+            let Some(slot) = entry else { continue };
+            let tok = slot.sampler.sample(&lv[r * vocab..][..vocab]);
+            slot.token_s.push(dt);
+            if slot.sampler.finished() {
+                finished.push(r);
+            } else {
+                slot.next_token = tok;
+            }
+        }
+        for r in finished {
+            let slot = self.slots[r].take().expect("just finished");
+            self.complete(slot, done);
+        }
+        Ok(())
+    }
+
+    /// Retire a finished slot into a `Response` and fold its latencies into
+    /// the service histograms.
+    fn complete(&mut self, slot: Slot, done: &mut Vec<Response>) {
+        let finish = match slot.sampler.stop {
+            Some(s) if slot.sampler.emitted.last() == Some(&s) => FinishReason::Stop,
+            _ => FinishReason::MaxNew,
+        };
+        self.completed += 1;
+        self.emitted_tokens += slot.sampler.emitted.len();
+        self.queue_wait_samples.push(slot.queue_wait_s);
+        self.ttft_samples.push(slot.ttft_s);
+        self.token_samples.extend_from_slice(&slot.token_s);
+        done.push(Response {
+            id: slot.id,
+            prompt: slot.prompt,
+            tokens: slot.sampler.emitted,
+            finish,
+            prefill_used_artifact: slot.prefill_used_artifact,
+            queue_wait_s: slot.queue_wait_s,
+            ttft_s: slot.ttft_s,
+            token_s: slot.token_s,
+        });
+    }
+}
+
+/// Fresh sampling state for one request (the `fold_in(0)` stream a
+/// single-prompt `rom generate` run would use — the bit-identity contract).
+fn sampler_for(req: &Request) -> RowSampler {
+    RowSampler::new(
+        Rng::new(req.seed).fold_in(0),
+        req.temperature,
+        req.top_k,
+        req.max_new,
+        req.stop,
+    )
+}
+
+/// Parse one request line of the serve CLI: `TOKENS [key=val ...]` where
+/// TOKENS follows the `--prompt-tokens` grammar (so `1,2;3,4` submits two
+/// requests) and overrides are any of `max-new=N temperature=X top-k=K
+/// seed=N stop=T`, applied on top of `defaults` for every prompt on the
+/// line. Blank lines and `#` comments yield no requests.
+pub fn parse_request_line(line: &str, defaults: &Request) -> Result<Vec<Request>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(Vec::new());
+    }
+    let mut parts = line.split_whitespace();
+    let toks = parts.next().expect("non-empty line has a first field");
+    let prompts = parse_prompt_tokens(toks)?;
+    let mut base = defaults.clone();
+    for kv in parts {
+        let Some((k, v)) = kv.split_once('=') else {
+            bail!("bad override {kv:?} (expected key=val)");
+        };
+        match k {
+            "max-new" => base.max_new = parse_kv(k, v)?,
+            "temperature" => base.temperature = parse_kv(k, v)?,
+            "top-k" => base.top_k = parse_kv(k, v)?,
+            "seed" => base.seed = parse_kv(k, v)?,
+            "stop" => base.stop = Some(parse_kv(k, v)?),
+            other => bail!("unknown override {other:?} (max-new/temperature/top-k/seed/stop)"),
+        }
+    }
+    Ok(prompts
+        .into_iter()
+        .map(|prompt| Request { prompt, ..base.clone() })
+        .collect())
+}
+
+fn parse_kv<T: std::str::FromStr>(k: &str, v: &str) -> Result<T> {
+    v.parse().ok().with_context(|| format!("bad value {v:?} for {k}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_stats_quantiles_ordered() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        let s = LatencyStats::from_secs(&samples).unwrap();
+        assert_eq!(s.count, 100);
+        assert!(s.p50_ms <= s.p90_ms && s.p90_ms <= s.p99_ms && s.p99_ms <= s.max_ms);
+        assert_eq!(s.max_ms, 100.0);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert!(LatencyStats::from_secs(&[]).is_none());
+    }
+
+    #[test]
+    fn request_validation() {
+        let ok = Request { prompt: vec![1, 2], ..Request::default() };
+        assert!(validate_request(&ok, 10).is_ok());
+        let empty = Request { prompt: vec![], ..Request::default() };
+        assert!(validate_request(&empty, 10).is_err());
+        let oov = Request { prompt: vec![1, 10], ..Request::default() };
+        assert!(validate_request(&oov, 10).unwrap_err().to_string().contains("vocabulary"));
+        let zero = Request { prompt: vec![1], max_new: 0, ..Request::default() };
+        assert!(validate_request(&zero, 10).unwrap_err().to_string().contains("max-new"));
+    }
+
+    #[test]
+    fn request_line_grammar() {
+        let d = Request { max_new: 8, ..Request::default() };
+        // Comments and blanks are silent.
+        assert!(parse_request_line("", &d).unwrap().is_empty());
+        assert!(parse_request_line("# a comment", &d).unwrap().is_empty());
+        // Defaults flow through; `;` fans out into several requests.
+        let rs = parse_request_line("1,2;3,4", &d).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].prompt, vec![1, 2]);
+        assert_eq!(rs[1].prompt, vec![3, 4]);
+        assert!(rs.iter().all(|r| r.max_new == 8 && r.stop.is_none()));
+        // Overrides apply to every prompt on the line.
+        let rs = parse_request_line(
+            "5,6 max-new=3 temperature=0.7 top-k=4 seed=9 stop=2",
+            &d,
+        )
+        .unwrap();
+        assert_eq!(rs.len(), 1);
+        let r = &rs[0];
+        assert_eq!((r.max_new, r.top_k, r.seed, r.stop), (3, 4, 9, Some(2)));
+        assert!((r.temperature - 0.7).abs() < 1e-12);
+        // Trailing `;` tolerated (same parser as --prompt-tokens).
+        assert_eq!(parse_request_line("7,8;", &d).unwrap().len(), 1);
+        // Malformed overrides and tokens are loud.
+        assert!(parse_request_line("1,2 max-new", &d).is_err());
+        assert!(parse_request_line("1,2 max-new=x", &d).is_err());
+        assert!(parse_request_line("1,2 wat=3", &d).is_err());
+        assert!(parse_request_line("1,x", &d).is_err());
+    }
+
+    #[test]
+    fn finish_reason_from_sampler_state() {
+        // `complete` derives Stop only when the LAST emitted token is the
+        // stop token — mirrored here through the public sampler type.
+        let mut s = RowSampler::new(Rng::new(0), 0.0, 0, 4, Some(1));
+        s.sample(&[0.0, 5.0]); // emits 1 == stop
+        assert!(s.finished());
+        let mut m = RowSampler::new(Rng::new(0), 0.0, 0, 1, Some(7));
+        m.sample(&[0.0, 5.0]); // emits 1, cap 1 reached, stop never seen
+        assert!(m.finished());
+        assert_ne!(m.emitted.last(), Some(&7));
+    }
+}

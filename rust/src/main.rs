@@ -8,10 +8,14 @@
 //! train <variant>        train from scratch on the synthetic corpus
 //! eval <variant>         PPL sweep from a checkpoint
 //! generate <variant>     autoregressive decoding from a checkpoint
+//! serve <variant>        continuous-batching generation service
 //! probes <variant>       downstream probe scores (Table 2 stand-in)
 //! experiment <id>        regenerate a paper table/figure
 //! ```
 
+use std::collections::VecDeque;
+use std::io::BufRead;
+use std::sync::mpsc::TryRecvError;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -20,6 +24,10 @@ use rom::coordinator::checkpoint::Checkpoint;
 use rom::coordinator::downstream::{score_cloze, score_continuation};
 use rom::coordinator::eval::eval_ppl_sweep;
 use rom::coordinator::generate::{generate, parse_prompt_tokens, GenerateCfg};
+use rom::coordinator::serve::{
+    parse_request_line, Engine, FinishReason, Request as ServeRequest, ServeCfg,
+    Submit,
+};
 use rom::coordinator::trainer::Trainer;
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::probes::{make_cloze, make_continuation};
@@ -48,6 +56,17 @@ usage: rom <subcommand> [options]
                                     lengths), greedy by default,
                                     temperature/top-k sampling on a seeded
                                     stream; prints per-token latency
+  serve <variant> --ckpt FILE       continuous-batching generation service:
+                  [--requests FILE] [--max-new N] [--temperature X]
+                  [--top-k K] [--seed N] [--stop TOK] [--queue N]
+                                    reads request lines from --requests (or
+                                    stdin): 'TOKENS [max-new=N] [seed=N]
+                                    [temperature=X] [top-k=K] [stop=T]';
+                                    prompts of different lengths share the
+                                    decode batch (slot swap-in); each
+                                    response is bit-identical to a
+                                    standalone `rom generate` run with the
+                                    same params
   probes <variant> [--steps N] [--lr X]
                                     downstream probes (Table 2 stand-in)
   experiment <id> [--steps N] [--jobs N]
@@ -71,6 +90,7 @@ fn main() -> Result<()> {
         Some("train") => train(&args),
         Some("eval") => eval_cmd(&args),
         Some("generate") => generate_cmd(&args),
+        Some("serve") => serve_cmd(&args),
         Some("probes") => probes(&args),
         Some("experiment") => experiment(&args),
         Some("help") | None => {
@@ -252,6 +272,122 @@ fn generate_cmd(args: &Args) -> Result<()> {
              (batch {} rows/step)",
             report.batch
         );
+    }
+    Ok(())
+}
+
+/// `rom serve <variant> --ckpt FILE [--requests FILE]`: the long-lived
+/// continuous-batching loop. Request lines stream in from a file or stdin
+/// on a reader thread over a bounded channel (so a slow decode loop
+/// backpressures the producer instead of buffering unboundedly), the engine
+/// pumps one batched decode step per iteration, and responses print as
+/// sequences finish — not in admission order.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let name = variant_arg(args)?;
+    let ckpt_path = required_opt(args, "ckpt")?;
+    let defaults = ServeRequest {
+        prompt: Vec::new(),
+        max_new: args.get_usize("max-new", 32),
+        temperature: args.get_f64("temperature", 0.0),
+        top_k: args.get_usize("top-k", 0),
+        seed: args.get_u64("seed", 0),
+        stop: args.get_opt("stop").map_err(usage_err)?,
+    };
+    let cfg = ServeCfg { queue_cap: args.get_usize("queue", 64) };
+    let bundle = Bundle::open(artifacts_root().join(&name))
+        .with_context(|| format!("loading variant {name}"))?;
+    let ck = Checkpoint::load(std::path::Path::new(ckpt_path))?;
+    let sess = Session::restore(Arc::clone(&bundle), &ck.params, &ck.m, &ck.v, ck.step)?;
+    let mut engine = Engine::new(&sess, &cfg)?;
+
+    let source: Box<dyn BufRead + Send> = match args.get("requests") {
+        Some(p) => Box::new(std::io::BufReader::new(
+            std::fs::File::open(p).with_context(|| format!("opening {p}"))?,
+        )),
+        None => Box::new(std::io::BufReader::new(std::io::stdin())),
+    };
+    let (tx, rx) = std::sync::mpsc::sync_channel::<String>(cfg.queue_cap);
+    let reader = std::thread::spawn(move || -> std::io::Result<()> {
+        for line in source.lines() {
+            if tx.send(line?).is_err() {
+                break; // pump gone — stop reading
+            }
+        }
+        Ok(())
+    });
+
+    let mut pending: VecDeque<ServeRequest> = VecDeque::new();
+    let mut eof = false;
+    while !(eof && pending.is_empty() && engine.idle()) {
+        // Hand pending requests to the engine until it pushes back.
+        while let Some(req) = pending.pop_front() {
+            match engine.submit(req)? {
+                Submit::Accepted(_) => {}
+                Submit::Rejected(req) => {
+                    pending.push_front(req);
+                    break;
+                }
+            }
+        }
+        // Pull request lines: non-blocking while work is in flight, blocking
+        // only when fully idle (nothing to do but wait for the next line).
+        while pending.len() < cfg.queue_cap {
+            let idle = engine.idle() && pending.is_empty();
+            let line = if idle && !eof {
+                rx.recv().ok()
+            } else {
+                match rx.try_recv() {
+                    Ok(l) => Some(l),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => None,
+                }
+            };
+            match line {
+                Some(l) => {
+                    pending.extend(parse_request_line(&l, &defaults).map_err(usage_err)?)
+                }
+                None => {
+                    eof = true;
+                    break;
+                }
+            }
+        }
+        for resp in engine.step(&sess)? {
+            let fmt = |ts: &[i32]| {
+                ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+            };
+            let finish = match resp.finish {
+                FinishReason::Stop => "stop",
+                FinishReason::MaxNew => "max-new",
+            };
+            println!(
+                "req {}: {} => {} ({finish}; wait {:.1} ms, ttft {:.1} ms)",
+                resp.id,
+                fmt(&resp.prompt),
+                fmt(&resp.tokens),
+                resp.queue_wait_s * 1e3,
+                resp.ttft_s * 1e3
+            );
+        }
+    }
+    reader
+        .join()
+        .map_err(|_| anyhow!("request reader thread panicked"))?
+        .context("reading requests")?;
+
+    let rep = engine.report();
+    println!(
+        "served:   {} requests, {} tokens, {} prefills, {} decode steps",
+        rep.completed, rep.emitted_tokens, rep.prefills, rep.decode_steps
+    );
+    if let Some(t) = &rep.ttft {
+        println!(
+            "ttft:     p50 {:.1} ms, p90 {:.1} ms, max {:.1} ms",
+            t.p50_ms, t.p90_ms, t.max_ms
+        );
+    }
+    if let Some(t) = &rep.per_token {
+        println!("token:    p50 {:.2} ms, p99 {:.2} ms", t.p50_ms, t.p99_ms);
     }
     Ok(())
 }

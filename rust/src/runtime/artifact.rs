@@ -63,6 +63,19 @@ impl DecodeSpec {
     pub fn zero_state(&self) -> Vec<Tensor> {
         self.state.iter().map(|s| Tensor::zeros(&s.shape, s.dtype)).collect()
     }
+
+    /// Whether any state leaf belongs to a block that reads the shared `pos`
+    /// scalar (SWA rolling KV caches use it for RoPE rotation and cache-
+    /// validity masking). Pure-SSM layouts carry `pos` but never read it, so
+    /// their rows can sit at different sequence positions inside one batched
+    /// decode_step — the property slot-based continuous batching relies on.
+    /// Position-dependent layouts must keep every batch row at the same
+    /// position (gang admission in the serve engine).
+    pub fn position_dependent(&self) -> bool {
+        self.state.iter().any(|s| {
+            s.name.ends_with(".k_cache") || s.name.ends_with(".v_cache")
+        })
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -401,6 +414,15 @@ mod tests {
         assert_eq!(d.prefill_lens, vec![16, 32]);
         assert_eq!(d.state.len(), 3);
         assert_eq!(d.state[0].name, "pos");
+        // conv+ssm lanes never read `pos`; a KV-cache leaf flips the bit.
+        assert!(!d.position_dependent());
+        let mut swa = d.clone();
+        swa.state.push(ParamSpec {
+            name: "blocks.1.k_cache".into(),
+            shape: vec![2, 8, 64],
+            dtype: DType::F32,
+        });
+        assert!(swa.position_dependent());
         assert_eq!(d.state[0].dtype, DType::I32);
         assert_eq!(d.state[0].numel(), 1); // scalar: empty shape, one element
         assert_eq!(d.state[1].shape, vec![2, 3, 64]);

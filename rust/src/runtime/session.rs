@@ -23,7 +23,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::artifact::Bundle;
-use crate::runtime::tensor::Tensor;
+use crate::runtime::tensor::{Tensor, TensorData};
 
 /// Loss + telemetry decoded from one training step.
 #[derive(Debug, Clone)]
@@ -407,6 +407,99 @@ impl Session {
         Ok(logits)
     }
 
+    // ---- Per-slot state lanes ---------------------------------------------
+    // A batched DecodeState carries `decode_spec().batch` independent
+    // sequences, one per leading-dim row of every non-pos leaf. These entry
+    // points move ONE row between states (host roundtrip — used at request
+    // swap-in/swap-out cadence by the serve engine, never per token). The
+    // shared `pos` scalar (leaf 0) is deliberately untouched: layouts whose
+    // blocks read it cannot mix rows at different positions in one batch
+    // (`DecodeSpec::position_dependent`), and layouts that can mix rows
+    // never read it.
+
+    /// Extract row `row` of every recurrent state lane as host tensors of
+    /// shape `[1, ...]` (leaf 0, the `pos` scalar, is skipped — it has no
+    /// per-row lane).
+    pub fn extract_state_row(&self, state: &DecodeState, row: usize) -> Result<Vec<Tensor>> {
+        let spec = self.bundle.decode_spec()?;
+        self.check_state_row(state, row, "extract_state_row")?;
+        let mut out = Vec::with_capacity(state.lits.len().saturating_sub(1));
+        for (leaf, lit) in state.lits.iter().enumerate().skip(1) {
+            let t = Tensor::from_literal(lit)?;
+            let row_elems = lane_elems(&t, spec.batch, leaf)?;
+            let mut shape = t.shape.clone();
+            shape[0] = 1;
+            let lane = match &t.data {
+                TensorData::F32(v) => {
+                    Tensor::f32(&shape, v[row * row_elems..][..row_elems].to_vec())
+                }
+                TensorData::I32(v) => {
+                    Tensor::i32(&shape, v[row * row_elems..][..row_elems].to_vec())
+                }
+            };
+            out.push(lane);
+        }
+        Ok(out)
+    }
+
+    /// Overwrite row `dst_row` of every recurrent state lane in `dst` with
+    /// row `src_row` of `src` — the serve engine's swap-in: a freshly
+    /// prefilled sequence (row `src_row` of a scratch state) takes over one
+    /// slot of the live batched state. Only the edited leaves re-upload;
+    /// `pos` and every other row are untouched.
+    pub fn inject_state_row(
+        &self,
+        dst: &mut DecodeState,
+        dst_row: usize,
+        src: &DecodeState,
+        src_row: usize,
+    ) -> Result<()> {
+        let spec = self.bundle.decode_spec()?;
+        self.check_state_row(dst, dst_row, "inject_state_row dst")?;
+        self.check_state_row(src, src_row, "inject_state_row src")?;
+        for leaf in 1..dst.lits.len() {
+            let mut d = Tensor::from_literal(&dst.lits[leaf])?;
+            let s = Tensor::from_literal(&src.lits[leaf])?;
+            if d.shape != s.shape {
+                bail!(
+                    "inject_state_row: leaf {leaf} shape {:?} vs {:?}",
+                    d.shape,
+                    s.shape
+                );
+            }
+            let row_elems = lane_elems(&d, spec.batch, leaf)?;
+            match (&mut d.data, &s.data) {
+                (TensorData::F32(dv), TensorData::F32(sv)) => {
+                    dv[dst_row * row_elems..][..row_elems]
+                        .copy_from_slice(&sv[src_row * row_elems..][..row_elems]);
+                }
+                (TensorData::I32(dv), TensorData::I32(sv)) => {
+                    dv[dst_row * row_elems..][..row_elems]
+                        .copy_from_slice(&sv[src_row * row_elems..][..row_elems]);
+                }
+                _ => bail!("inject_state_row: leaf {leaf} dtype mismatch"),
+            }
+            dst.lits[leaf] = self.upload(&d)?;
+        }
+        Ok(())
+    }
+
+    /// Shared validation for the per-slot lane entry points.
+    fn check_state_row(&self, state: &DecodeState, row: usize, what: &str) -> Result<()> {
+        let spec = self.bundle.decode_spec()?;
+        if state.lits.len() != spec.state.len() {
+            bail!(
+                "{what}: state has {} leaves, spec says {}",
+                state.lits.len(),
+                spec.state.len()
+            );
+        }
+        if row >= spec.batch {
+            bail!("{what}: row {row} outside the decode batch of {}", spec.batch);
+        }
+        Ok(())
+    }
+
     /// Decompose a decode-artifact output tuple: leaf 0 is the logits (the
     /// only per-token host decode), the rest is the carried state.
     fn split_decode_outputs(
@@ -438,4 +531,15 @@ fn expect_shape(t: &Tensor, shape: &[usize], what: &str) -> Result<()> {
         bail!("{what}: shape {:?} != expected {:?}", t.shape, shape);
     }
     Ok(())
+}
+
+/// Elements of one batch row of a state lane, validating that the leading
+/// dim matches the decode batch.
+fn lane_elems(t: &Tensor, batch: usize, leaf: usize) -> Result<usize> {
+    match t.shape.first() {
+        Some(&b) if b == batch => Ok(t.len() / batch),
+        other => bail!(
+            "state leaf {leaf}: leading dim {other:?} != decode batch {batch}"
+        ),
+    }
 }

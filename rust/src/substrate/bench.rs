@@ -5,7 +5,15 @@
 //! `cargo bench` custom-harness targets. Table/figure benches use `Reporter`
 //! to print paper-style rows.
 
-use std::time::Instant;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::substrate::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct BenchStats {
@@ -94,6 +102,130 @@ pub fn bench_json_path() -> std::path::PathBuf {
 /// Numeric env-var knob with a default (bench iteration counts and sizes).
 pub fn env_u64(key: &str, default: u64) -> u64 {
     std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+// ---- Atomic trajectory-record merging --------------------------------------
+// `BENCH_runtime.json` is co-owned by several bench binaries (and potentially
+// several concurrent runs). Every writer goes through `merge_bench_json`:
+// read the current record under a lock, apply the caller's update, publish
+// via tmp-file + rename (the same atomic-publish pattern as checkpoint
+// saves). A corrupt existing file is an ERROR — the perf trajectory is the
+// deliverable, so it must never be silently reset to `{}`.
+
+/// Same-process writer serialization (threads of one bench process).
+static MERGE_GUARD: Mutex<()> = Mutex::new(());
+/// Uniquifies tmp-file names so concurrent processes never collide.
+static MERGE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A lock file held for the read-modify-write window. Best-effort cross-
+/// process exclusion via `create_new`; released (removed) on drop so error
+/// paths cannot leak a held lock.
+struct MergeLock {
+    path: PathBuf,
+}
+
+impl MergeLock {
+    fn acquire(target: &Path) -> Result<MergeLock> {
+        let path = lock_path(target);
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(_) => return Ok(MergeLock { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    // A holder that crashed mid-merge leaves the lock behind;
+                    // steal it once it is clearly stale (merges take ms).
+                    if let Ok(meta) = std::fs::metadata(&path) {
+                        let stale = meta
+                            .modified()
+                            .ok()
+                            .and_then(|m| m.elapsed().ok())
+                            .is_some_and(|age| age > Duration::from_secs(10));
+                        if stale {
+                            let _ = std::fs::remove_file(&path);
+                            continue;
+                        }
+                    }
+                    if Instant::now() > deadline {
+                        bail!(
+                            "timed out waiting for bench-merge lock {} — remove it \
+                             if no bench is running",
+                            path.display()
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("creating lock {}", path.display()))
+                }
+            }
+        }
+    }
+}
+
+impl Drop for MergeLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+fn lock_path(target: &Path) -> PathBuf {
+    let mut name = target.file_name().unwrap_or_default().to_os_string();
+    name.push(".lock");
+    target.with_file_name(name)
+}
+
+/// Read-modify-write one flat JSON object file atomically and loss-proof:
+///
+/// - concurrent writers serialize on a process mutex + on-disk lock file, so
+///   two benches merging disjoint fields both land;
+/// - the update is published via tmp-file + `std::fs::rename`, so a reader
+///   (or a crash mid-write) never observes a partial file;
+/// - a missing file starts from an empty record, but an existing file that
+///   fails to parse as a JSON object is a hard error — never silently
+///   replaced (a whitespace-only file counts as empty, not corrupt).
+pub fn merge_bench_json(
+    path: &Path,
+    update: impl FnOnce(&mut BTreeMap<String, Json>),
+) -> Result<()> {
+    let _guard = MERGE_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let _lock = MergeLock::acquire(path)?;
+
+    let mut map = match std::fs::read_to_string(path) {
+        Ok(text) if text.trim().is_empty() => BTreeMap::new(),
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(m)) => m,
+            Ok(other) => bail!(
+                "{}: expected a JSON object, found {} — refusing to overwrite \
+                 the perf trajectory (fix or delete the file)",
+                path.display(),
+                other.kind()
+            ),
+            Err(e) => bail!(
+                "{}: unparseable JSON ({e}) — refusing to overwrite the perf \
+                 trajectory (fix or delete the file)",
+                path.display()
+            ),
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => BTreeMap::new(),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+
+    update(&mut map);
+
+    let seq = MERGE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut tmp_name = path.file_name().unwrap_or_default().to_os_string();
+    tmp_name.push(format!(".tmp.{}.{seq}", std::process::id()));
+    let tmp = path.with_file_name(tmp_name);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        std::io::Write::write_all(&mut f, Json::Obj(map).to_string().as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    Ok(())
 }
 
 /// Paper-style table printer: fixed-width columns, one row per variant.
@@ -185,5 +317,128 @@ mod tests {
         r.row(&["mamba".into(), "10.7".into()]);
         r.row(&["rom".into(), "9.5".into()]);
         r.print(); // smoke: no panic
+    }
+
+    fn merge_dir(test: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("rom_bench_merge_{}_{test}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn read_obj(path: &Path) -> BTreeMap<String, Json> {
+        match Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap() {
+            Json::Obj(m) => m,
+            other => panic!("expected object, got {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn merge_creates_then_preserves_other_fields() {
+        let dir = merge_dir("create");
+        let path = dir.join("BENCH.json");
+        merge_bench_json(&path, |m| {
+            m.insert("a".into(), Json::num(1.0));
+        })
+        .unwrap();
+        merge_bench_json(&path, |m| {
+            m.insert("b".into(), Json::num(2.0));
+        })
+        .unwrap();
+        let m = read_obj(&path);
+        assert_eq!(m.get("a"), Some(&Json::Num(1.0)));
+        assert_eq!(m.get("b"), Some(&Json::Num(2.0)));
+        // No tmp or lock residue after a clean merge.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name() != "BENCH.json")
+            .collect();
+        assert!(leftovers.is_empty(), "residue: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_rejects_corrupt_input_without_touching_it() {
+        let dir = merge_dir("corrupt");
+        let path = dir.join("BENCH.json");
+        std::fs::write(&path, "{\"a\": 1").unwrap(); // truncated write
+        let err = merge_bench_json(&path, |m| {
+            m.insert("b".into(), Json::num(2.0));
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("refusing"), "got: {err:#}");
+        // The corrupt evidence survives for inspection — never reset to {}.
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"a\": 1");
+
+        // A non-object top level is equally fatal.
+        std::fs::write(&path, "[1, 2]").unwrap();
+        assert!(merge_bench_json(&path, |_| {}).is_err());
+
+        // Whitespace-only counts as an empty record, not corruption.
+        std::fs::write(&path, "  \n").unwrap();
+        merge_bench_json(&path, |m| {
+            m.insert("c".into(), Json::num(3.0));
+        })
+        .unwrap();
+        assert_eq!(read_obj(&path).get("c"), Some(&Json::Num(3.0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_merges_lose_nothing() {
+        // Two threads interleave read-modify-write cycles on disjoint field
+        // sets; every field must land (the lost-update race this helper
+        // exists to prevent).
+        let dir = merge_dir("concurrent");
+        let path = dir.join("BENCH.json");
+        let per_thread = 40usize;
+        let threads: Vec<_> = (0..2)
+            .map(|t| {
+                let path = path.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        merge_bench_json(&path, |m| {
+                            m.insert(format!("t{t}_{i}"), Json::num(i as f64));
+                        })
+                        .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let m = read_obj(&path);
+        assert_eq!(m.len(), 2 * per_thread, "fields lost: have {}", m.len());
+        for t in 0..2 {
+            for i in 0..per_thread {
+                assert!(m.contains_key(&format!("t{t}_{i}")), "missing t{t}_{i}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_waits_out_a_foreign_lock() {
+        // A lock held by another writer delays the merge instead of failing
+        // it: the holder releases after 50ms and the merge then lands.
+        let dir = merge_dir("stale");
+        let path = dir.join("BENCH.json");
+        let lock = lock_path(&path);
+        std::fs::write(&lock, "").unwrap();
+        let lock2 = lock.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            std::fs::remove_file(&lock2).unwrap();
+        });
+        merge_bench_json(&path, |m| {
+            m.insert("after_wait".into(), Json::num(1.0));
+        })
+        .unwrap();
+        t.join().unwrap();
+        assert!(read_obj(&path).contains_key("after_wait"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -70,6 +70,18 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// A typed OPTIONAL option: `Ok(None)` when absent, `Ok(Some(parsed))`
+    /// when present. Unlike the defaulting `get_*` family, a present but
+    /// malformed value is an error naming the flag — never a silent default.
+    pub fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                v.parse().map(Some).map_err(|_| format!("--{key}: bad value {v:?}"))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +117,15 @@ mod tests {
         assert!(a.subcommand.is_none());
         assert_eq!(a.get_or("missing", "d"), "d");
         assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn typed_optional_values() {
+        let a = Args::parse(&s(&["x", "--stop", "5", "--queue", "oops"]), &[]);
+        assert_eq!(a.get_opt::<i32>("stop"), Ok(Some(5)));
+        assert_eq!(a.get_opt::<i32>("missing"), Ok(None));
+        let err = a.get_opt::<usize>("queue").unwrap_err();
+        assert!(err.contains("--queue") && err.contains("oops"));
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! Serve integration: the continuous-batching engine's determinism contract
+//! (every response bit-identical to a standalone `rom generate` run with the
+//! same checkpoint/prompt/seed/params, regardless of admission order or slot
+//! placement), backpressure on the bounded queue, clean drain/shutdown, and
+//! the per-slot state-lane surgery it is built on.
+//!
+//! Requires `make artifacts` (tests skip politely when artifacts are absent
+//! or predate the decoding subsystem).
+
+use std::sync::Arc;
+
+use rom::config::TrainCfg;
+use rom::coordinator::checkpoint::Checkpoint;
+use rom::coordinator::generate::{generate, GenerateCfg};
+use rom::coordinator::serve::{Engine, FinishReason, Request, Response, ServeCfg, Submit};
+use rom::coordinator::trainer::Trainer;
+use rom::data::corpus::{Corpus, CorpusSpec};
+use rom::runtime::artifact::Bundle;
+use rom::runtime::session::Session;
+use rom::runtime::tensor::Tensor;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Open a bundle iff it exists AND ships generation artifacts.
+fn open_decodable(name: &str) -> Option<Arc<Bundle>> {
+    if !artifacts_root().join(name).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/{name} missing (run `make artifacts`)");
+        return None;
+    }
+    let bundle = Bundle::open(artifacts_root().join(name)).unwrap();
+    if bundle.manifest.decode.is_none() {
+        eprintln!("skipping: artifacts/{name} predates decode artifacts");
+        return None;
+    }
+    Some(bundle)
+}
+
+/// Train briefly and checkpoint, so logits are non-degenerate.
+fn checkpoint_for_serving(bundle: &Arc<Bundle>) -> std::path::PathBuf {
+    let cfg = TrainCfg { steps: 5, max_lr: 3e-3, log_every: 0, ..Default::default() };
+    let mut trainer = Trainer::new(Arc::clone(bundle), cfg);
+    trainer.quiet = true;
+    trainer.final_eval = false;
+    let (_report, sess) = trainer.run_session().unwrap();
+    let (params, m, v) = sess.export().unwrap();
+    let dir = std::env::temp_dir().join("rom_integration_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{}.ckpt", bundle.manifest.name));
+    Checkpoint { step: sess.step_count(), params, m, v }.save(&path).unwrap();
+    path
+}
+
+/// The standalone `rom generate` run a serve response must reproduce.
+fn reference_completion(sess: &Session, req: &Request) -> Vec<i32> {
+    let cfg = GenerateCfg {
+        max_new: req.max_new,
+        temperature: req.temperature,
+        top_k: req.top_k,
+        seed: req.seed,
+    };
+    generate(sess, &[req.prompt.clone()], &cfg).unwrap().completions.remove(0)
+}
+
+#[test]
+fn staggered_admissions_match_standalone_generate() {
+    let Some(bundle) = open_decodable("mamba-tiny") else { return };
+    let ckpt = checkpoint_for_serving(&bundle);
+    let ck = Checkpoint::load(&ckpt).unwrap();
+    let sess = Session::restore(Arc::clone(&bundle), &ck.params, &ck.m, &ck.v, ck.step).unwrap();
+    let ctx = bundle.manifest.eval_lens[0]; // a prefill-artifact length
+
+    // Mixed prompt LENGTHS in one request stream — the restriction `generate`
+    // imposes (equal lengths per call) must not exist at the request level.
+    // Request 0 rides the prefill artifact; 1 and 2 take the stepwise
+    // fallback. Every request has its own seed and sampling params.
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let reqs = [
+        Request {
+            prompt: corpus.generate(901, ctx),
+            max_new: 6,
+            temperature: 0.9,
+            top_k: 8,
+            seed: 7,
+            stop: None,
+        },
+        Request {
+            prompt: corpus.generate(902, 9),
+            max_new: 5,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 3,
+            stop: None,
+        },
+        Request {
+            prompt: corpus.generate(903, 9),
+            max_new: 7,
+            temperature: 1.1,
+            top_k: 4,
+            seed: 11,
+            stop: None,
+        },
+    ];
+    let refs: Vec<Vec<i32>> = reqs.iter().map(|r| reference_completion(&sess, r)).collect();
+
+    // Staggered admission: request 0 decodes alone for a while before 1 and
+    // 2 swap into whatever slots free up — placement must not matter.
+    let mut engine = Engine::new(&sess, &ServeCfg { queue_cap: 8 }).unwrap();
+    let mut responses: Vec<Response> = Vec::new();
+    assert!(matches!(engine.submit(reqs[0].clone()).unwrap(), Submit::Accepted(0)));
+    responses.extend(engine.step(&sess).unwrap());
+    responses.extend(engine.step(&sess).unwrap());
+    assert_eq!(engine.active(), 1, "request 0 should be mid-decode");
+    assert!(matches!(engine.submit(reqs[1].clone()).unwrap(), Submit::Accepted(1)));
+    assert!(matches!(engine.submit(reqs[2].clone()).unwrap(), Submit::Accepted(2)));
+    responses.extend(engine.drain(&sess).unwrap());
+    assert!(engine.idle());
+
+    assert_eq!(responses.len(), 3);
+    responses.sort_by_key(|r| r.id);
+    for (i, (resp, reference)) in responses.iter().zip(&refs).enumerate() {
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.prompt, reqs[i].prompt);
+        assert_eq!(
+            &resp.tokens, reference,
+            "request {i}: serve tokens diverged from standalone generate"
+        );
+        assert_eq!(resp.finish, FinishReason::MaxNew);
+        // Latency accounting shape: wait precedes first token; one interval
+        // per token after the first.
+        assert!(resp.queue_wait_s <= resp.ttft_s);
+        assert_eq!(resp.token_s.len(), resp.tokens.len() - 1);
+    }
+    assert!(responses[0].prefill_used_artifact, "length {ctx} has an artifact");
+    assert!(!responses[1].prefill_used_artifact, "length 9 is stepwise");
+
+    let rep = engine.report();
+    assert_eq!(rep.completed, 3);
+    assert_eq!(rep.emitted_tokens, 6 + 5 + 7);
+    assert_eq!(rep.prefills, 3);
+    assert!(rep.queue_wait.is_some() && rep.ttft.is_some() && rep.per_token.is_some());
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn stop_token_finishes_early_with_reference_prefix() {
+    let Some(bundle) = open_decodable("mamba-tiny") else { return };
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let base = Request {
+        prompt: corpus.generate(904, 9),
+        max_new: 8,
+        temperature: 0.9,
+        top_k: 8,
+        seed: 13,
+        stop: None,
+    };
+    let reference = reference_completion(&sess, &base);
+
+    // Stop on a token the reference run is known to emit: serve must return
+    // exactly the reference prefix through its FIRST occurrence.
+    let stop = reference[2];
+    let cut = reference.iter().position(|&t| t == stop).unwrap();
+    let mut engine = Engine::new(&sess, &ServeCfg::default()).unwrap();
+    engine.submit(Request { stop: Some(stop), ..base }).unwrap();
+    let responses = engine.drain(&sess).unwrap();
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].tokens, reference[..=cut]);
+    assert_eq!(responses[0].finish, FinishReason::Stop);
+}
+
+#[test]
+fn backpressure_hands_back_requests_and_shutdown_is_clean() {
+    let Some(bundle) = open_decodable("mamba-tiny") else { return };
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+    let mut engine = Engine::new(&sess, &ServeCfg { queue_cap: 1 }).unwrap();
+    let req = |seed: u64| Request {
+        prompt: vec![1, 2, 3],
+        max_new: 2,
+        temperature: 0.0,
+        top_k: 0,
+        seed,
+        stop: None,
+    };
+
+    // Invalid requests are errors (retrying cannot help) ...
+    assert!(engine.submit(Request { prompt: vec![], ..req(0) }).is_err());
+    assert!(engine.submit(Request { max_new: 0, ..req(0) }).is_err());
+    let vocab = bundle.manifest.vocab_size as i32;
+    assert!(engine.submit(Request { prompt: vec![vocab], ..req(0) }).is_err());
+
+    // ... while a full queue is backpressure: the request comes back intact.
+    assert!(matches!(engine.submit(req(0)).unwrap(), Submit::Accepted(_)));
+    match engine.submit(req(1)).unwrap() {
+        Submit::Rejected(r) => assert_eq!(r, req(1)),
+        Submit::Accepted(id) => panic!("queue_cap 1 accepted a second request ({id})"),
+    }
+    assert_eq!(engine.queue_len(), 1);
+
+    // Admission frees the queue; the bounced request goes through now.
+    let mut responses = engine.step(&sess).unwrap();
+    assert!(matches!(engine.submit(req(1)).unwrap(), Submit::Accepted(_)));
+
+    // Clean shutdown: drain leaves the engine idle with everything answered.
+    responses.extend(engine.drain(&sess).unwrap());
+    assert!(engine.idle());
+    assert_eq!(engine.active(), 0);
+    assert_eq!(engine.queue_len(), 0);
+    assert_eq!(responses.len(), 2);
+    let rep = engine.report();
+    assert_eq!(rep.completed, 2);
+    assert_eq!(rep.emitted_tokens, 4);
+    assert_eq!(engine.drain(&sess).unwrap().len(), 0, "idle drain is a no-op");
+}
+
+/// Bitwise equality of extracted state lanes.
+fn lanes_eq(a: &[Tensor], b: &[Tensor]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.shape == y.shape
+                && match (x.as_f32(), y.as_f32()) {
+                    (Ok(xs), Ok(ys)) => {
+                        xs.iter().zip(ys).all(|(p, q)| p.to_bits() == q.to_bits())
+                    }
+                    _ => x.as_i32().unwrap() == y.as_i32().unwrap(),
+                }
+        })
+}
+
+#[test]
+fn state_row_extract_inject_roundtrip() {
+    let Some(bundle) = open_decodable("mamba-tiny") else { return };
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+    let b = bundle.manifest.decode.as_ref().unwrap().batch;
+    assert!(b >= 2, "stock decode presets bake batch >= 2");
+
+    // Advance two states on DIFFERENT token streams so their lanes diverge.
+    let mut dst = sess.init_decode_state().unwrap();
+    let mut src = sess.init_decode_state().unwrap();
+    for t in 0..4 {
+        sess.decode_step(&Tensor::i32(&[b], vec![1 + t; b]), &mut dst).unwrap();
+        sess.decode_step(&Tensor::i32(&[b], vec![5 + t; b]), &mut src).unwrap();
+    }
+    let dst_row0 = sess.extract_state_row(&dst, 0).unwrap();
+    let dst_row1 = sess.extract_state_row(&dst, 1).unwrap();
+    let donor = sess.extract_state_row(&src, 0).unwrap();
+    // Replicated token streams give identical rows within a state; the two
+    // states differ from each other.
+    assert!(lanes_eq(&dst_row0, &dst_row1));
+    assert!(lanes_eq(&donor, &sess.extract_state_row(&src, 1).unwrap()));
+    assert!(!lanes_eq(&dst_row1, &donor));
+
+    // Inject src row 0 into dst row 1: row 1 becomes the donor bit-for-bit,
+    // row 0 is untouched — the serve swap-in invariant.
+    sess.inject_state_row(&mut dst, 1, &src, 0).unwrap();
+    assert!(lanes_eq(&sess.extract_state_row(&dst, 1).unwrap(), &donor));
+    assert!(lanes_eq(&sess.extract_state_row(&dst, 0).unwrap(), &dst_row0));
+
+    // Out-of-range rows bail instead of corrupting state.
+    assert!(sess.extract_state_row(&dst, b).is_err());
+}
