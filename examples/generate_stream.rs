@@ -50,9 +50,10 @@ fn main() -> anyhow::Result<()> {
             println!("row {i} topics: [{}]", topics.join(" "));
         }
         println!(
-            "prompt consumed in {:.1} ms ({})",
+            "prompt consumed in {:.1} ms ({} of {} tokens via prefill artifact)",
             report.prefill_s * 1e3,
-            if report.prefill_used_artifact { "one prefill call" } else { "stepwise" }
+            report.prefill_artifact_tokens,
+            report.prompt_len
         );
         if let (Some(ms), Some(tps)) =
             (report.median_decode_ms(), report.decode_tokens_per_sec())

@@ -122,9 +122,9 @@ def lower_variant(cfg: ModelConfig, out_dir: str, golden: bool = False) -> Dict:
         f"eval_last_L{L}.hlo.txt",
         jax.jit(train.make_eval_last_fn(cfg)).lower(params_sd, etok, etok))
 
-    # Generation artifacts: one-token decode step + prefill at each eval
-    # length, with the recurrent state as an explicit flat tensor list (the
-    # manifest "decode" section is the calling convention).
+    # Generation artifacts: one-token decode step + chunk-parallel prefill at
+    # each eval length, with the recurrent state as an explicit flat tensor
+    # list (the manifest "decode" section is the calling convention).
     decode_reason = decode.unsupported_reason(cfg)
     decode_manifest = None
     if decode_reason is None:

@@ -7,9 +7,14 @@ artifacts per variant, lowered by `compile.aot` next to the training ones:
 
   prefill_L{L} : (params, tokens (B, L) i32) -> (logits (B, V), state...)
                  consume a prompt, return last-position logits + the packed
-                 recurrent state (lowered as a fused lax.scan over the step
-                 body — one device call; chunk-parallel prefill is a future
-                 optimization, see ROADMAP).
+                 recurrent state. Lowered CHUNK-PARALLEL in L: each block runs
+                 its training-side forward over the whole prompt (associative
+                 scans for Mamba-1/2, windowed attention for SWA, one fused
+                 sequential scan for GDN) and additionally extracts the decode
+                 state — the scan carries, the last k-1 conv inputs, the last
+                 `window` post-RoPE K/V rows. `make_stepwise_prefill_fn` keeps
+                 the old sequential lax.scan over the step body as the parity
+                 reference.
   decode_step  : (params, token (B,) i32, state...) -> (logits (B, V), state...)
                  one token in, carried state in -> next-token logits, state out.
 
@@ -38,13 +43,13 @@ import jax
 import jax.numpy as jnp
 
 from compile.config import ModelConfig
-from compile.layers.attention import attn_block_step
-from compile.layers.gdn import gdn_block_step
-from compile.layers.mamba2 import mamba2_block_step
+from compile.layers.attention import attn_block_prefill, attn_block_step
+from compile.layers.gdn import gdn_block_prefill, gdn_block_step
+from compile.layers.mamba2 import mamba2_block_prefill, mamba2_block_step
 from compile.layers.mlp import mlp_block
 from compile.layers.norm import rms_norm
 from compile.layers.router import Routing
-from compile.layers.ssm import mamba_block_step
+from compile.layers.ssm import mamba_block_prefill, mamba_block_step
 
 
 def unsupported_reason(cfg: ModelConfig) -> Optional[str]:
@@ -173,10 +178,70 @@ def make_decode_step_fn(cfg: ModelConfig):
 def make_prefill_fn(cfg: ModelConfig):
     """Prompt consumption: (params, tokens (B, L)) -> (last logits, state).
 
-    Lowered as a lax.scan over the decode step body, so prefill + k x
-    decode_step is consistent with L+k decode steps *by construction* —
-    the parity tests then only need to pin the step body itself against
-    the full-window forward.
+    Chunk-parallel in L: mirrors `model.forward`'s block loop on the full
+    prompt (pre-norm residual stream, hybrid routing inheritance, tied/untied
+    head) with the `*_block_prefill` bodies, which run the training-side
+    parallel forward AND extract the packed decode state. One device call,
+    no per-token sequential dependency outside the scan recurrences
+    themselves — this is what closed the measured 169x prefill/decode
+    per-token gap (EXPERIMENTS.md §decoding).
+
+    Parity with `make_stepwise_prefill_fn` (same state, same logits, up to
+    scan-reassociation fp drift) is pinned by python/tests/test_decode.py
+    for every layout at every eval_lens.
+    """
+    layout = cfg.block_layout()
+
+    def prefill(params, tokens):
+        B, L = tokens.shape
+        x = params["embed"][tokens]                        # (B, L, D)
+        state: List[jax.Array] = [jnp.asarray(L, jnp.int32)]
+        prev_rom_routing: Optional[Routing] = None
+
+        for i, kind in enumerate(layout):
+            p = params["blocks"][i]
+            h = rms_norm(x, params["norms"][i])
+            if kind == "mamba":
+                out, conv, ssm, rom_r = mamba_block_prefill(cfg, p, h)
+                state += [conv, ssm]
+                prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
+            elif kind == "mamba2":
+                out, conv, ssd, rom_r = mamba2_block_prefill(cfg, p, h)
+                state += [conv, ssd]
+                prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
+            elif kind == "gdn":
+                out, conv, delta, rom_r = gdn_block_prefill(cfg, p, h)
+                state += [conv, delta]
+                prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
+            elif kind == "swa":
+                out, kc, vc = attn_block_prefill(cfg, p, h)
+                state += [kc, vc]
+            elif kind == "mlp":
+                inherited = None
+                if cfg.ffn_moe.enabled and "router" not in p:
+                    inherited = prev_rom_routing
+                out, _ = mlp_block(cfg, p, h, inherited=inherited)
+            else:
+                raise AssertionError(kind)
+            x = x + out
+
+        x = rms_norm(x[:, -1, :], params["final_norm"])
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["lm_head"]
+        return logits, state
+
+    return prefill
+
+
+def make_stepwise_prefill_fn(cfg: ModelConfig):
+    """Sequential reference prefill: a lax.scan over the decode step body.
+
+    Prefill + k x decode_step is consistent with L+k decode steps *by
+    construction* here, which makes this the oracle the chunk-parallel
+    `make_prefill_fn` is parity-tested against (it is NOT what `aot` lowers
+    anymore — at L=128 it costs ~169x the per-token decode price).
     """
 
     def prefill(params, tokens):

@@ -53,11 +53,22 @@ def selective_scan_ref(u, dt, A, B, C, D):
 
 
 def selective_scan_assoc(u, dt, A, B, C, D, chunk: int = 64):
-    """Chunked associative-scan implementation (the fast L2 default).
+    """Chunked associative-scan implementation (the fast L2 default)."""
+    y, _h = selective_scan_assoc_carry(u, dt, A, B, C, D, chunk)
+    return y
+
+
+def selective_scan_assoc_carry(u, dt, A, B, C, D, chunk: int = 64):
+    """Chunked associative scan that also returns the final recurrent state.
 
     Within a chunk the linear recurrence h_t = a_t h_{t-1} + b_t is solved with
     an associative scan; chunk carries are propagated sequentially with
-    lax.scan, bounding peak memory at (B, chunk, Di, N).
+    lax.scan, bounding peak memory at (B, chunk, Di, N). The final lax.scan
+    carry IS the post-sequence state h_T — the chunk-parallel prefill extracts
+    it to seed `decode_step`.
+
+    Returns:
+      (y (B, T, Di), h_final (B, Di, N))
     """
     Bsz, T, Di = u.shape
     N = A.shape[1]
@@ -90,9 +101,9 @@ def selective_scan_assoc(u, dt, A, B, C, D, chunk: int = 64):
         jnp.moveaxis(dBu_c, 1, 0),
         jnp.moveaxis(C_c, 1, 0),
     )
-    _, ys = jax.lax.scan(chunk_step, h0, xs)            # (n_chunks,B,chunk,Di)
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)      # ys: (n_chunks,B,chunk,Di)
     y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, Di)
-    return y + u * D
+    return y + u * D, h_final
 
 
 # --------------------------------------------------------------------------

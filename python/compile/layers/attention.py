@@ -113,6 +113,59 @@ def attn_block(cfg: ModelConfig, p: Dict, x: jax.Array, *, window: Optional[int]
     return out.reshape(B, T, D), stats
 
 
+def attn_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array):
+    """Parallel-in-T SWA forward from position 0 that also builds the rolling
+    KV caches `attn_block_step` continues from.
+
+    The caches hold the last `cfg.window` post-RoPE key rows and value rows in
+    the (B, W, D) row layout of the step path, oldest slot first. Prompts
+    shorter than the window leave zero rows at the front; the step's position
+    validity mask makes them unreadable, so their contents never matter.
+
+    Args:
+      x: (B, T, D) token representations, positions 0..T-1.
+    Returns:
+      (out (B, T, D), k_cache (B, W, D), v_cache (B, W, D)).
+    """
+    B, T, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    W = cfg.window
+    flat = x.reshape(B * T, D)
+
+    r: Optional[Routing] = None
+    if cfg.attn_moe != "none":
+        r = route_tokens(flat, p["router"], top_k=1)
+
+    def proj(bank: str, inp):
+        w = p[f"w_{bank}"]
+        if w.ndim == 3 and w.shape[0] > 1:
+            y = bank_apply(inp, w, r)
+            if bank == "o":
+                y = y * jnp.sum(r.gates, axis=-1, keepdims=True)
+            return y
+        return bank_apply(inp, w, None)
+
+    q = proj("q", flat).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    kk = proj("k", flat).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    v_rows = proj("v", flat).reshape(B, T, D)              # step cache layout
+    v = v_rows.reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    q, kk = rope(q), rope(kk)                              # absolute pos 0..T-1
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, kk) / jnp.sqrt(Dh)
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = (i >= j) & (i - j < W)
+    scores = jnp.where(mask, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bhsd->bhtd", attn, v)
+    out = proj("o", ctx.transpose(0, 2, 1, 3).reshape(B * T, D))
+
+    k_rows = kk.transpose(0, 2, 1, 3).reshape(B, T, D)     # post-RoPE keys
+    k_cache = jnp.pad(k_rows, ((0, 0), (W, 0), (0, 0)))[:, T:, :]
+    v_cache = jnp.pad(v_rows, ((0, 0), (W, 0), (0, 0)))[:, T:, :]
+    return out.reshape(B, T, D), k_cache, v_cache
+
+
 def attn_block_step(cfg: ModelConfig, p: Dict, x: jax.Array,
                     k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array):
     """One-token forward of `attn_block` on rolling KV caches.

@@ -60,6 +60,17 @@ def init_gdn_block(cfg: ModelConfig, key) -> Dict:
 
 def _delta_scan(q, k, v, alpha, beta):
     """q/k/v: (B,T,H,Dk), alpha/beta: (B,T,H) -> y: (B,T,H,Dk)."""
+    y, _S = _delta_scan_carry(q, k, v, alpha, beta)
+    return y
+
+
+def _delta_scan_carry(q, k, v, alpha, beta):
+    """`_delta_scan` that also returns the final state S_T (B,H,Dk,Dk).
+
+    The delta rule stays a sequential lax.scan (not associative in this form),
+    but prefill still runs it ONCE over the whole prompt instead of per-token
+    through the full block stack — one scan body per GDN block, everything
+    around it parallel."""
     B, T, H, Dk = q.shape
 
     def step(S, inp):
@@ -73,8 +84,8 @@ def _delta_scan(q, k, v, alpha, beta):
 
     S0 = jnp.zeros((B, H, Dk, Dk), dtype=q.dtype)
     xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, alpha, beta))
-    _, ys = jax.lax.scan(step, S0, xs)
-    return jnp.moveaxis(ys, 0, 1)
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S_final
 
 
 def gdn_block(cfg: ModelConfig, p: Dict, x: jax.Array,
@@ -110,6 +121,54 @@ def gdn_block(cfg: ModelConfig, p: Dict, x: jax.Array,
     if r is not None:
         out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
     return out.reshape(B, T, D), r, stats
+
+
+def gdn_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array):
+    """Parallel-in-T forward of `gdn_block` that also extracts decode state.
+
+    Everything except the (inherently sequential) delta recurrence runs
+    parallel over the prompt; the recurrence itself runs once as a single
+    lax.scan. Also returns the rolling q-path conv window (last k-1 pre-conv
+    inputs, zero left-padded) and the final delta-rule state S.
+
+    Args:
+      x: (B, T, D) token representations, positions 0..T-1.
+    Returns:
+      (out (B, T, D), conv_state (B, k-1, Di), delta_state (B, H, Dk, Dk),
+       Routing or None).
+    """
+    B, T, D = x.shape
+    Di, H, Dk = _dims(cfg)
+    ck = cfg.conv_kernel
+    flat = x.reshape(B * T, D)
+
+    r: Optional[Routing] = None
+    if cfg.rom.enabled:
+        r = route_tokens(flat, p["router"], cfg.rom.top_k)
+
+    proj = bank_apply(flat, p["w_in"], r)
+    q, k, v, g, ab = jnp.split(proj, [Di, 2 * Di, 3 * Di, 4 * Di], axis=-1)
+    alpha_raw, beta_raw = jnp.split(ab, 2, axis=-1)        # (BT,H) each
+
+    q = q.reshape(B, T, Di)
+    conv_state = jnp.pad(q, ((0, 0), (ck - 1, 0), (0, 0)))[:, T:, :]
+    q = kref.short_conv_ref(q, p["conv_w"]).reshape(B, T, H, Dk)
+    k = k.reshape(B, T, H, Dk)
+    v = v.reshape(B, T, H, Dk)
+    q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+    k = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+    alpha = jax.nn.sigmoid(alpha_raw).reshape(B, T, H)
+    beta = jax.nn.sigmoid(beta_raw).reshape(B, T, H)
+
+    y, delta_state = _delta_scan_carry(q, k, v, alpha, beta)
+    y = y.reshape(B * T, Di)
+    y = y * jax.nn.silu(g)
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-5) * p["norm_g"]
+    out = bank_apply(y, p["w_out"], r)
+    if r is not None:
+        out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
+    return out.reshape(B, T, D), conv_state, delta_state, r
 
 
 def gdn_block_step(cfg: ModelConfig, p: Dict, x: jax.Array,

@@ -61,6 +61,13 @@ def init_mamba2_block(cfg: ModelConfig, key) -> Dict:
 
 def _ssd_scan(x, dt, a, B, C, chunk: int = 64):
     """x: (Bz,T,H,P), dt: (Bz,T,H), a: (H,), B/C: (Bz,T,N) -> y (Bz,T,H,P)."""
+    y, _h = _ssd_scan_carry(x, dt, a, B, C, chunk)
+    return y
+
+
+def _ssd_scan_carry(x, dt, a, B, C, chunk: int = 64):
+    """`_ssd_scan` that also returns the final state h_T (Bz,H,P,N) — the
+    lax.scan chunk carry, extracted by the chunk-parallel prefill."""
     Bz, T, H, P = x.shape
     N = B.shape[-1]
     if T % chunk != 0:
@@ -88,8 +95,8 @@ def _ssd_scan(x, dt, a, B, C, chunk: int = 64):
 
     h0 = jnp.zeros((Bz, H, P, N), dtype=x.dtype)
     xs = (jnp.moveaxis(dc, 1, 0), jnp.moveaxis(ic, 1, 0), jnp.moveaxis(Cc, 1, 0))
-    _, ys = jax.lax.scan(chunk_step, h0, xs)
-    return jnp.moveaxis(ys, 0, 1).reshape(Bz, T, H, P)
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(Bz, T, H, P), h_final
 
 
 def mamba2_block(cfg: ModelConfig, p: Dict, x: jax.Array,
@@ -125,6 +132,52 @@ def mamba2_block(cfg: ModelConfig, p: Dict, x: jax.Array,
     if r is not None:
         out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
     return out.reshape(B, T, D), r, stats
+
+
+def mamba2_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array):
+    """Parallel-in-T forward of `mamba2_block` that also extracts decode state.
+
+    Same math as the training forward (chunked SSD scan, no jitter) plus the
+    rolling conv window (last k-1 pre-conv inputs, zero left-padded) and the
+    final SSD state — the scan's chunk carry.
+
+    Args:
+      x: (B, T, D) token representations, positions 0..T-1.
+    Returns:
+      (out (B, T, D), conv_state (B, k-1, Di), ssd_state (B, H, P, N),
+       Routing or None).
+    """
+    B, T, D = x.shape
+    Di, H, P, N = _dims(cfg)
+    k = cfg.conv_kernel
+    flat = x.reshape(B * T, D)
+
+    r: Optional[Routing] = None
+    if cfg.rom.enabled:
+        r = route_tokens(flat, p["router"], cfg.rom.top_k)
+
+    zxbcdt = bank_apply(flat, p["w_in"], r)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+
+    xs = xs.reshape(B, T, Di)
+    conv_state = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))[:, T:, :]
+    xs = kref.short_conv_ref(xs, p["conv_w"])
+    dt = jax.nn.softplus(dt + p["dt_bias"]).reshape(B, T, H)
+    a = -jnp.exp(p["A_log"])
+
+    y, ssd_state = _ssd_scan_carry(xs.reshape(B, T, H, P), dt, a,
+                                   Bm.reshape(B, T, N), Cm.reshape(B, T, N))
+    y = y + xs.reshape(B, T, H, P) * p["D"][None, None, :, None]
+    y = y.reshape(B * T, Di)
+
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-5) * p["norm_g"]
+    out = bank_apply(y, p["w_out"], r)
+    if r is not None:
+        out = out * jnp.sum(r.gates, axis=-1, keepdims=True)
+    return out.reshape(B, T, D), conv_state, ssd_state, r
 
 
 def mamba2_block_step(cfg: ModelConfig, p: Dict, x: jax.Array,

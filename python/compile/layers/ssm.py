@@ -167,6 +167,65 @@ def _weight_topk(inp, w, r: Routing, cfg: ModelConfig):
 # Stateful single-token decoding (autoregressive generation)
 # --------------------------------------------------------------------------
 
+def mamba_block_prefill(cfg: ModelConfig, p: Dict, x: jax.Array):
+    """Parallel-in-T forward of `mamba_block` that also extracts decode state.
+
+    This is the chunk-parallel prefill body: the same math as the training
+    forward (chunked associative scan, no jitter), plus the two state tensors
+    a subsequent `mamba_block_step` needs — the last k-1 conv-path inputs and
+    the final selective-scan state, which the associative scan already carries.
+
+    Args:
+      x: (B, T, D) token representations, positions 0..T-1.
+    Returns:
+      (out (B, T, D), conv_state (B, k-1, Di), ssm_state (B, Di, N),
+       shared Routing or None).
+    """
+    B, T, D = x.shape
+    Di, N, R = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    k = cfg.conv_kernel
+    flat = x.reshape(B * T, D)
+
+    routings: Dict[str, Routing] = {}
+
+    def routing(target: str) -> Optional[Routing]:
+        if not (cfg.rom.enabled and target in cfg.rom_targets):
+            return None
+        cache_key = "shared" if cfg.routing == "shared" else target
+        if cache_key not in routings:
+            routings[cache_key] = _routing_for(cfg, p, flat, target, None)
+        return routings[cache_key]
+
+    def project(target: str, w, inp):
+        r = routing(target)
+        if r is not None and cfg.routing == "independent":
+            return _weight_topk_step(inp, w, r)
+        return bank_apply(inp, w, r)
+
+    # Conv path; the rolling window state is the last k-1 pre-conv inputs
+    # (zero left-pad when the prompt is shorter than the kernel).
+    h = project("conv", p["w_in"], flat).reshape(B, T, Di)
+    conv_state = jnp.pad(h, ((0, 0), (k - 1, 0), (0, 0)))[:, T:, :]
+    u = kref.short_conv_ref(h, p["conv_w"])
+
+    flat_u = u.reshape(B * T, Di)
+    xdbc = project("x", p["w_x"], flat_u)                 # (BT, R+2N)
+    dt_raw, Bm, Cm = jnp.split(xdbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(project("dt", p["w_dt"], dt_raw) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    Y, ssm_state = kref.selective_scan_assoc_carry(
+        u, dt.reshape(B, T, Di), A,
+        Bm.reshape(B, T, N), Cm.reshape(B, T, N), p["D"])
+
+    G = jax.nn.silu(project("gate", p["w_gate"], flat))   # (BT, Di)
+    out = project("out", p["w_out"], Y.reshape(B * T, Di) * G)
+    shared_r = routings.get("shared")
+    if shared_r is not None:
+        out = out * jnp.sum(shared_r.gates, axis=-1, keepdims=True)
+    return out.reshape(B, T, D), conv_state, ssm_state, shared_r
+
+
 def conv_step(window: jax.Array, w: jax.Array) -> jax.Array:
     """One step of the depthwise causal SC operator on a (B, k, Di) window
     (oldest tap first) — the stateful analogue of `short_conv_ref`."""

@@ -17,7 +17,7 @@ from compile.model import forward, init_params
 def _cfg(**kw) -> ModelConfig:
     base = dict(
         name="decode-test", arch="mamba", n_layers=2, d_model=32,
-        vocab_size=64, batch_size=2, seq_len=16, eval_lens=[16],
+        vocab_size=64, batch_size=2, seq_len=16, eval_lens=[8, 16],
         window=8, decode_batch=2)
     base.update(kw)
     return ModelConfig(**base)
@@ -88,15 +88,16 @@ def test_sliding_window_parity_beyond_window():
                                rtol=2e-4, atol=2e-4)
 
 
-def test_prefill_equals_stepwise():
-    """The fused lax.scan prefill returns exactly the state and last logits
-    of T explicit decode steps (same computation by construction; this pins
-    the jit/scan plumbing)."""
+def test_stepwise_prefill_equals_explicit_steps():
+    """The sequential reference prefill (lax.scan over the step body) returns
+    exactly the state and last logits of T explicit decode steps (same
+    computation by construction; this pins the jit/scan plumbing that makes
+    it a trustworthy oracle for the chunk-parallel prefill)."""
     cfg = CFGS["mamba-rom"]
     T = 8
     params = init_params(cfg, jax.random.PRNGKey(2))
     tokens = _tokens(cfg, T, seed=5)
-    logits, state = jax.jit(decode.make_prefill_fn(cfg))(params, tokens)
+    logits, state = jax.jit(decode.make_stepwise_prefill_fn(cfg))(params, tokens)
     stepped, sstate = _stepwise_logits(cfg, params, tokens)
     np.testing.assert_allclose(np.asarray(logits), np.asarray(stepped[:, -1]),
                                rtol=1e-5, atol=1e-5)
@@ -104,6 +105,52 @@ def test_prefill_equals_stepwise():
     for a, b in zip(state, sstate):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(CFGS))
+def test_parallel_prefill_matches_stepwise(name):
+    """The chunk-parallel prefill (what `aot` lowers as prefill_L{L}) must
+    reproduce the sequential step-scan prefill — final packed state AND last
+    logits — at every artifact length, for every layout and routing mode.
+    Tolerance 2e-4 covers scan-reassociation fp drift only; a routing flip or
+    state-layout bug blows straight past it."""
+    cfg = CFGS[name]
+    params = init_params(cfg, jax.random.PRNGKey(4))
+    parallel = jax.jit(decode.make_prefill_fn(cfg))
+    stepwise = jax.jit(decode.make_stepwise_prefill_fn(cfg))
+    spec = decode.state_spec(cfg)
+    for L in cfg.eval_lens:
+        tokens = _tokens(cfg, L, seed=L)
+        lg_p, st_p = parallel(params, tokens)
+        lg_s, st_s = stepwise(params, tokens)
+        np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_s),
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"{name} L={L} logits")
+        assert len(st_p) == len(st_s) == len(spec)
+        for a, b, s in zip(st_p, st_s, spec):
+            assert a.shape == b.shape and a.dtype == b.dtype, (name, s["name"])
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4,
+                                       err_msg=f"{name} L={L} {s['name']}")
+
+
+def test_parallel_prefill_short_prompt_state_padding():
+    """Prompts shorter than the conv kernel and the SWA window exercise the
+    zero left-padding of the extracted conv windows and KV caches; decode must
+    continue seamlessly from that padded state."""
+    cfg = CFGS["samba-rom-hybrid"]
+    T, P = 12, 2                       # P < conv_kernel-1 and P < window
+    params = init_params(cfg, jax.random.PRNGKey(5))
+    tokens = _tokens(cfg, T, seed=11)
+    full, _ = forward(cfg, params, tokens, None)
+    logits, state = jax.jit(decode.make_prefill_fn(cfg))(params, tokens[:, :P])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, P - 1]),
+                               rtol=2e-4, atol=2e-4)
+    step = jax.jit(decode.make_decode_step_fn(cfg))
+    for t in range(P, T):
+        logits, state = step(params, tokens[:, t], state)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, t]),
+                                   rtol=2e-4, atol=2e-4)
 
 
 def test_prefill_then_decode_continues():

@@ -1,4 +1,6 @@
-//! Generation micro-benchmarks (§Perf): prefill-artifact latency, one-time
+//! Generation micro-benchmarks (§Perf): prefill-artifact latency at every
+//! compiled length (`gen_prefill_L{L}_ms` — the chunk-parallel prefill
+//! should cost far less per prompt token than a decode_step), one-time
 //! compile cost of the generation programs, per-token decode_step latency
 //! and decode throughput through the real `coordinator::generate` sampling
 //! loop.
@@ -49,15 +51,28 @@ fn main() {
         .map(|r| corpus.generate(0xBE9C_0000 + r, ctx))
         .collect();
 
-    // Prompt consumption through the fused prefill artifact.
-    let mut flat = Vec::with_capacity(spec.batch * ctx);
-    for p in &prompts {
-        flat.extend_from_slice(p);
+    // Prompt consumption through every fused prefill artifact: one device
+    // call each, parallel in L, so per-prompt-token cost should FALL as L
+    // grows. (L, median ms, prompt tokens/s) per artifact length.
+    let mut lens = spec.prefill_lens.clone();
+    lens.sort_unstable();
+    let mut prefill_rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &l in &lens {
+        let mut flat = Vec::with_capacity(spec.batch * l);
+        for r in 0..spec.batch as u64 {
+            flat.extend_from_slice(&corpus.generate(0xBE9C_0000 + r, l));
+        }
+        let prompt_batch = Tensor::i32(&[spec.batch, l], flat);
+        let stats = bench(&format!("prefill_L{l} (one device call)"), 1, 8, || {
+            std::hint::black_box(sess.prefill(&prompt_batch).unwrap());
+        });
+        let ms = stats.median_secs() * 1e3;
+        let tps = (spec.batch * l) as f64 / stats.median_secs();
+        println!("prefill_L{l}: {ms:.2} ms median, {tps:.0} prompt tokens/s");
+        prefill_rows.push((l, ms, tps));
     }
-    let prompt_batch = Tensor::i32(&[spec.batch, ctx], flat);
-    let prefill_stats = bench("prefill (one device call)", 1, 8, || {
-        std::hint::black_box(sess.prefill(&prompt_batch).unwrap());
-    });
+    let &(_, prefill_ms_shortest, _) = prefill_rows.first().unwrap();
+    let &(longest, longest_ms, prefill_tps) = prefill_rows.last().unwrap();
 
     // Per-token decode latency and throughput through the real sampling
     // loop (the numbers `rom generate` prints).
@@ -75,25 +90,39 @@ fn main() {
         max_new - 1
     );
 
+    // Per-token cost of prompt consumption vs decoding, at the longest
+    // artifact: the ratio the chunk-parallel prefill exists to shrink.
+    let prefill_per_token_ms = longest_ms / longest as f64;
+    let ratio = prefill_per_token_ms / decode_ms;
+    println!(
+        "prefill_L{longest} per prompt token: {prefill_per_token_ms:.4} ms \
+         ({ratio:.3}x a decode_step)"
+    );
+
     // Merge the gen_* fields into the shared trajectory record — through the
     // atomic helper, so a concurrent bench_runtime (or a crash mid-write)
     // can never cost us the other bench's fields.
     let path = bench_json_path();
-    let fields = [
-        ("gen_variant", Json::str(variant.as_str())),
-        ("gen_batch", Json::num(spec.batch as f64)),
-        ("gen_prompt_len", Json::num(ctx as f64)),
-        ("gen_max_new", Json::num(max_new as f64)),
-        ("gen_compile_prefill_s", Json::num(t_prefill)),
-        ("gen_compile_decode_s", Json::num(t_decode)),
-        ("gen_prefill_ms", Json::num(prefill_stats.median_secs() * 1e3)),
-        ("gen_decode_step_ms", Json::num(decode_ms)),
-        ("gen_decode_tokens_per_sec", Json::num(decode_tps)),
-        ("gen_decode_device_rows_per_sec", Json::num(device_rps)),
+    let mut fields: Vec<(String, Json)> = vec![
+        ("gen_variant".into(), Json::str(variant.as_str())),
+        ("gen_batch".into(), Json::num(spec.batch as f64)),
+        ("gen_prompt_len".into(), Json::num(ctx as f64)),
+        ("gen_max_new".into(), Json::num(max_new as f64)),
+        ("gen_compile_prefill_s".into(), Json::num(t_prefill)),
+        ("gen_compile_decode_s".into(), Json::num(t_decode)),
+        ("gen_prefill_ms".into(), Json::num(prefill_ms_shortest)),
+        ("gen_prefill_tokens_per_sec".into(), Json::num(prefill_tps)),
+        ("gen_prefill_per_token_vs_decode".into(), Json::num(ratio)),
+        ("gen_decode_step_ms".into(), Json::num(decode_ms)),
+        ("gen_decode_tokens_per_sec".into(), Json::num(decode_tps)),
+        ("gen_decode_device_rows_per_sec".into(), Json::num(device_rps)),
     ];
+    for &(l, ms, _) in &prefill_rows {
+        fields.push((format!("gen_prefill_L{l}_ms"), Json::num(ms)));
+    }
     merge_bench_json(&path, |map| {
         for (k, v) in fields {
-            map.insert(k.to_string(), v);
+            map.insert(k, v);
         }
     })
     .unwrap();

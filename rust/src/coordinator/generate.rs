@@ -13,11 +13,13 @@
 //! independent of how prompts are chunked into device batches and of any
 //! `--jobs`-style session parallelism around this call.
 //!
-//! Prompt handling: prompts whose length matches a `prefill_L{L}` artifact
-//! are consumed in one device call; any other length falls back to feeding
-//! the prompt through `decode_step` one token at a time (exact, just slower).
-//! Prompts must share one length — batched decoding has no padding
-//! convention (padding would corrupt the recurrent state).
+//! Prompt handling is HYBRID: the longest `prefill_L{L}` artifact with
+//! L <= prompt_len consumes the first L tokens in one chunk-parallel device
+//! call, and only the remaining tail (if any) feeds through `decode_step`
+//! one token at a time. Prompts shorter than every artifact length fall back
+//! to the pure stepwise path (exact, just slower). Prompts must share one
+//! length — batched decoding has no padding convention (padding would
+//! corrupt the recurrent state).
 
 use std::time::Instant;
 
@@ -54,9 +56,12 @@ pub struct GenerateReport {
     pub completions: Vec<Vec<i32>>,
     /// Shared prompt length.
     pub prompt_len: usize,
-    /// Whether the prompt length matched a `prefill_L{L}` artifact (false =
-    /// the decode_step fallback consumed the prompt token by token).
-    pub prefill_used_artifact: bool,
+    /// Prompt tokens consumed through a `prefill_L{L}` artifact (per prompt):
+    /// the longest L <= prompt_len, or 0 when every artifact is longer than
+    /// the prompt and the stepwise fallback consumed it token by token. The
+    /// remaining `prompt_len - prefill_artifact_tokens` tokens went through
+    /// `decode_step`.
+    pub prefill_artifact_tokens: usize,
     /// Total prompt-consumption wall time, summed over device batches.
     pub prefill_s: f64,
     /// Wall time of each decode_step device call during generation (each
@@ -252,7 +257,8 @@ pub fn generate(
 
     let bd = spec.batch;
     let vocab = man.vocab_size;
-    let use_prefill = spec.prefill_lens.contains(&prompt_len);
+    // Hybrid consumption: the longest artifact prefix that fits the prompt.
+    let artifact_len = spec.prefill_lens.iter().copied().filter(|&l| l <= prompt_len).max();
     let mut completions: Vec<Vec<i32>> = Vec::with_capacity(prompts.len());
     let mut prefill_s = 0.0f64;
     let mut decode_step_s: Vec<f64> = Vec::new();
@@ -275,23 +281,30 @@ pub fn generate(
             })
             .collect();
 
-        // Consume the prompt: one prefill call, or the stepwise fallback.
+        // Consume the prompt: the longest-matching artifact prefix in one
+        // chunk-parallel device call, then stepwise for the tail (the whole
+        // prompt when no artifact fits).
         let t0 = Instant::now();
-        let (mut logits, mut state) = if use_prefill {
-            let mut flat = Vec::with_capacity(bd * prompt_len);
-            for row in &rows {
-                flat.extend_from_slice(row);
+        let (mut logits, mut state) = match artifact_len {
+            Some(l) => {
+                let mut flat = Vec::with_capacity(bd * l);
+                for row in &rows {
+                    flat.extend_from_slice(&row[..l]);
+                }
+                sess.prefill(&Tensor::i32(&[bd, l], flat))?
             }
-            sess.prefill(&Tensor::i32(&[bd, prompt_len], flat))?
-        } else {
-            let mut state = sess.init_decode_state()?;
-            let mut logits = None;
-            for t in 0..prompt_len {
-                let toks: Vec<i32> = rows.iter().map(|r| r[t]).collect();
-                logits = Some(sess.decode_step(&Tensor::i32(&[bd], toks), &mut state)?);
+            None => {
+                let state = sess.init_decode_state()?;
+                let toks: Vec<i32> = rows.iter().map(|r| r[0]).collect();
+                let mut state = state;
+                let logits = sess.decode_step(&Tensor::i32(&[bd], toks), &mut state)?;
+                (logits, state)
             }
-            (logits.expect("prompt_len >= 1"), state)
         };
+        for t in artifact_len.unwrap_or(1)..prompt_len {
+            let toks: Vec<i32> = rows.iter().map(|r| r[t]).collect();
+            logits = sess.decode_step(&Tensor::i32(&[bd], toks), &mut state)?;
+        }
         prefill_s += t0.elapsed().as_secs_f64();
 
         // Sampling loop: draw from the current logits, then advance the
@@ -324,7 +337,7 @@ pub fn generate(
     Ok(GenerateReport {
         completions,
         prompt_len,
-        prefill_used_artifact: use_prefill,
+        prefill_artifact_tokens: artifact_len.unwrap_or(0),
         prefill_s,
         decode_step_s,
         batch: bd,
@@ -364,7 +377,7 @@ mod tests {
         GenerateReport {
             completions: Vec::new(),
             prompt_len: 4,
-            prefill_used_artifact: true,
+            prefill_artifact_tokens: 4,
             prefill_s: 0.0,
             decode_step_s,
             batch,

@@ -7,12 +7,13 @@
 //! each batch row as a slot, and when a sequence finishes (max_new reached
 //! or stop token sampled) it swaps the next queued prompt into the freed
 //! slot's state lanes (`Session::inject_state_row`) without disturbing the
-//! other rows. Prompts whose length matches a `prefill_L{L}` artifact are
-//! consumed in one device call; any other length goes through the stepwise
-//! decode_step fallback — and because admission is per-slot, requests of
-//! DIFFERENT prompt lengths coexist in one batch (the equal-length
-//! restriction of `generate` holds only within one device call, not across
-//! the request stream).
+//! other rows. Prompt consumption is HYBRID, exactly as in `generate`: the
+//! longest `prefill_L{L}` artifact with L <= prompt_len consumes the prefix
+//! in one chunk-parallel device call and only the tail goes through stepwise
+//! decode_step (the whole prompt when no artifact fits) — and because
+//! admission is per-slot, requests of DIFFERENT prompt lengths coexist in
+//! one batch (the equal-length restriction of `generate` holds only within
+//! one device call, not across the request stream).
 //!
 //! Determinism contract: a request samples from `Rng::new(seed).fold_in(0)`
 //! and its row's logits depend only on its own tokens (all artifact ops are
@@ -108,9 +109,11 @@ pub struct Response {
     /// Sampled continuation (stop token included when `finish == Stop`).
     pub tokens: Vec<i32>,
     pub finish: FinishReason,
-    /// Whether the prompt matched a `prefill_L{L}` artifact (false = the
-    /// stepwise decode_step fallback consumed it).
-    pub prefill_used_artifact: bool,
+    /// Prompt tokens consumed through a `prefill_L{L}` artifact: the longest
+    /// L <= prompt length (0 = the stepwise fallback consumed everything).
+    /// The remaining prompt tokens went through decode_step — per-request,
+    /// so serve stats stay honest under hybrid consumption.
+    pub prefill_artifact_tokens: usize,
     /// Submission -> slot admission (time spent queued behind other work).
     pub queue_wait_s: f64,
     /// Submission -> first token sampled (queue wait + prompt consumption).
@@ -182,7 +185,7 @@ struct Slot {
     sampler: RowSampler,
     /// Last sampled token — the slot's input to the next batched step.
     next_token: i32,
-    prefill_used_artifact: bool,
+    prefill_artifact_tokens: usize,
     queue_wait_s: f64,
     ttft_s: f64,
     token_s: Vec<f64>,
@@ -338,7 +341,7 @@ impl Engine {
             let q = self.queue.pop_front().expect("checked non-empty");
             let queue_wait_s = q.submit_t.elapsed().as_secs_f64();
             let rows: Vec<&Vec<i32>> = vec![&q.req.prompt; self.batch];
-            let (logits, scratch, used_artifact) = self.consume_prompt(sess, &rows)?;
+            let (logits, scratch, artifact_tokens) = self.consume_prompt(sess, &rows)?;
             let lv = logits.as_f32()?;
             let mut sampler = sampler_for(&q.req);
             let first = sampler.sample(&lv[..self.vocab]);
@@ -348,7 +351,7 @@ impl Engine {
                 prompt: q.req.prompt,
                 sampler,
                 next_token: first,
-                prefill_used_artifact: used_artifact,
+                prefill_artifact_tokens: artifact_tokens,
                 queue_wait_s,
                 ttft_s,
                 token_s: Vec::new(),
@@ -392,7 +395,7 @@ impl Engine {
         let rows: Vec<&Vec<i32>> =
             (0..self.batch).map(|r| &gang.get(r).unwrap_or(&gang[0]).req.prompt).collect();
         self.state = None; // fresh sequence positions for the new gang
-        let (logits, state, used_artifact) = self.consume_prompt(sess, &rows)?;
+        let (logits, state, artifact_tokens) = self.consume_prompt(sess, &rows)?;
         let lv = logits.as_f32()?;
         self.state = Some(state);
 
@@ -405,7 +408,7 @@ impl Engine {
                 prompt: q.req.prompt,
                 sampler,
                 next_token: first,
-                prefill_used_artifact: used_artifact,
+                prefill_artifact_tokens: artifact_tokens,
                 queue_wait_s,
                 ttft_s,
                 token_s: Vec::new(),
@@ -419,32 +422,39 @@ impl Engine {
         Ok(())
     }
 
-    /// Consume one prompt batch exactly as `generate` does: a single fused
-    /// prefill call when the length matches an artifact, the stepwise
-    /// decode_step fallback otherwise. Returns the last-position logits,
-    /// the resulting state and whether the artifact path ran.
+    /// Consume one prompt batch exactly as `generate` does — hybrid: the
+    /// longest `prefill_L{L}` artifact with L <= len takes the prefix in one
+    /// chunk-parallel device call, stepwise decode_step takes the tail (the
+    /// whole prompt when no artifact fits). Returns the last-position
+    /// logits, the resulting state and the artifact-consumed token count.
     fn consume_prompt(
         &mut self,
         sess: &Session,
         rows: &[&Vec<i32>],
-    ) -> Result<(Tensor, DecodeState, bool)> {
+    ) -> Result<(Tensor, DecodeState, usize)> {
         let len = rows[0].len();
         self.prefills += 1;
-        if self.prefill_lens.contains(&len) {
-            let mut flat = Vec::with_capacity(self.batch * len);
-            for row in rows {
-                flat.extend_from_slice(row);
+        let artifact_len = self.prefill_lens.iter().copied().filter(|&l| l <= len).max();
+        let (mut logits, mut state) = match artifact_len {
+            Some(l) => {
+                let mut flat = Vec::with_capacity(self.batch * l);
+                for row in rows {
+                    flat.extend_from_slice(&row[..l]);
+                }
+                sess.prefill(&Tensor::i32(&[self.batch, l], flat))?
             }
-            let (logits, state) = sess.prefill(&Tensor::i32(&[self.batch, len], flat))?;
-            return Ok((logits, state, true));
-        }
-        let mut state = sess.init_decode_state()?;
-        let mut logits = None;
-        for t in 0..len {
+            None => {
+                let mut state = sess.init_decode_state()?;
+                let toks: Vec<i32> = rows.iter().map(|r| r[0]).collect();
+                let logits = sess.decode_step(&Tensor::i32(&[self.batch], toks), &mut state)?;
+                (logits, state)
+            }
+        };
+        for t in artifact_len.unwrap_or(1)..len {
             let toks: Vec<i32> = rows.iter().map(|r| r[t]).collect();
-            logits = Some(sess.decode_step(&Tensor::i32(&[self.batch], toks), &mut state)?);
+            logits = sess.decode_step(&Tensor::i32(&[self.batch], toks), &mut state)?;
         }
-        Ok((logits.expect("prompt len >= 1"), state, false))
+        Ok((logits, state, artifact_len.unwrap_or(0)))
     }
 
     // ---- decoding ----------------------------------------------------------
@@ -507,7 +517,7 @@ impl Engine {
             prompt: slot.prompt,
             tokens: slot.sampler.emitted,
             finish,
-            prefill_used_artifact: slot.prefill_used_artifact,
+            prefill_artifact_tokens: slot.prefill_artifact_tokens,
             queue_wait_s: slot.queue_wait_s,
             ttft_s: slot.ttft_s,
             token_s: slot.token_s,

@@ -254,10 +254,13 @@ fn generate_cmd(args: &Args) -> Result<()> {
         };
         println!("prompt {i}: {} => {}", fmt(prompt), fmt(completion));
     }
-    let how = if report.prefill_used_artifact {
-        format!("prefill_L{} artifact", report.prompt_len)
-    } else {
-        "decode_step fallback".to_string()
+    let how = match report.prefill_artifact_tokens {
+        0 => "decode_step fallback".to_string(),
+        l if l == report.prompt_len => format!("prefill_L{l} artifact"),
+        l => format!(
+            "prefill_L{l} artifact + {} stepwise tail tokens",
+            report.prompt_len - l
+        ),
     };
     println!(
         "prefill:  {:.1} ms for {} prompt tokens ({how})",

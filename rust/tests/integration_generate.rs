@@ -1,7 +1,8 @@
 //! Generation integration: prefill + stepwise decode must reproduce the
-//! full-window eval artifacts' NLL (the decode parity contract), generation
-//! must be deterministic across reruns and across parallel sessions, and
-//! the generate coordinator's error paths must fail cleanly.
+//! full-window eval artifacts' NLL (the decode parity contract), hybrid
+//! prefix+tail prompt consumption must match pure stepwise decoding,
+//! generation must be deterministic across reruns and across parallel
+//! sessions, and the generate coordinator's error paths must fail cleanly.
 //!
 //! Requires `make artifacts` (tests skip politely when artifacts are absent
 //! or predate the decoding subsystem).
@@ -10,7 +11,7 @@ use std::sync::Arc;
 
 use rom::config::TrainCfg;
 use rom::coordinator::checkpoint::Checkpoint;
-use rom::coordinator::generate::{generate, GenerateCfg};
+use rom::coordinator::generate::{argmax, generate, GenerateCfg};
 use rom::coordinator::trainer::Trainer;
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::experiments::scheduler::run_jobs;
@@ -126,6 +127,109 @@ fn checkpoint_for_generation(bundle: &Arc<Bundle>) -> std::path::PathBuf {
     let path = dir.join(format!("{}.ckpt", bundle.manifest.name));
     Checkpoint { step: sess.step_count(), params, m, v }.save(&path).unwrap();
     path
+}
+
+#[test]
+fn hybrid_prompt_consumption_matches_pure_stepwise() {
+    // A prompt longer than an artifact length is consumed hybrid: the longest
+    // `prefill_L{L} <= prompt_len` prefix in one fused call, the tail via
+    // decode_step. The greedy continuation must reproduce the pure stepwise
+    // path token for token, and the coordinator must do exactly what the
+    // session-level prefix+tail recipe does.
+    let Some(bundle) = open_decodable("mamba-tiny") else { return };
+    let spec = bundle.manifest.decode.clone().unwrap();
+    let ckpt = checkpoint_for_generation(&bundle);
+    let ck = Checkpoint::load(&ckpt).unwrap();
+    let sess =
+        Session::restore(Arc::clone(&bundle), &ck.params, &ck.m, &ck.v, ck.step).unwrap();
+
+    let ctx = bundle.manifest.eval_lens[0];
+    let tail = 3;
+    let prompt_len = ctx + tail;
+    assert!(
+        !spec.prefill_lens.contains(&prompt_len),
+        "tail length must force the hybrid path"
+    );
+    let (bd, vocab) = (spec.batch, bundle.manifest.vocab_size);
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let prompts: Vec<Vec<i32>> =
+        (0..bd as u64).map(|r| corpus.generate(600 + r, prompt_len)).collect();
+    let max_new = 5;
+    let cfg = GenerateCfg { max_new, temperature: 0.0, top_k: 0, seed: 0 };
+
+    // Coordinator hybrid run (greedy, so sampling is RNG-free).
+    let report = generate(&sess, &prompts, &cfg).unwrap();
+    assert_eq!(
+        report.prefill_artifact_tokens, ctx,
+        "longest artifact <= {prompt_len} is prefill_L{ctx}"
+    );
+
+    // Session-level replica of the hybrid recipe: prefill the ctx-token
+    // prefix, decode_step the tail, then greedy-decode. Same ops in the same
+    // order on the same device — the coordinator must match bit for bit.
+    let step_toks = |ps: &[Vec<i32>], t: usize| -> Tensor {
+        Tensor::i32(&[bd], ps.iter().map(|p| p[t]).collect())
+    };
+    let mut flat = Vec::with_capacity(bd * ctx);
+    for p in &prompts {
+        flat.extend_from_slice(&p[..ctx]);
+    }
+    let (mut logits, mut state) = sess.prefill(&Tensor::i32(&[bd, ctx], flat)).unwrap();
+    for t in ctx..prompt_len {
+        logits = sess.decode_step(&step_toks(&prompts, t), &mut state).unwrap();
+    }
+    assert_eq!(state.pos, prompt_len as u64);
+
+    // Pure stepwise consumption of the same prompts from a zero state.
+    let mut s_state = sess.init_decode_state().unwrap();
+    let mut s_logits = sess.decode_step(&step_toks(&prompts, 0), &mut s_state).unwrap();
+    for t in 1..prompt_len {
+        s_logits = sess.decode_step(&step_toks(&prompts, t), &mut s_state).unwrap();
+    }
+    let (lv, sv) = (logits.as_f32().unwrap(), s_logits.as_f32().unwrap());
+    for (i, (a, b)) in lv.iter().zip(sv.iter()).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3,
+            "post-prompt logit[{i}]: hybrid {a} vs stepwise {b}"
+        );
+    }
+
+    // Greedy-continue both states; the coordinator's completions must equal
+    // the hybrid replica exactly AND the pure stepwise reference token for
+    // token (fp drift between the parallel and sequential prefix is far
+    // below the argmax margins of a trained checkpoint).
+    let mut hybrid_tokens: Vec<Vec<i32>> = vec![Vec::new(); bd];
+    let mut stepwise_tokens: Vec<Vec<i32>> = vec![Vec::new(); bd];
+    for _ in 0..max_new {
+        let (lv, sv) = (logits.as_f32().unwrap(), s_logits.as_f32().unwrap());
+        let mut h_next = Vec::with_capacity(bd);
+        let mut s_next = Vec::with_capacity(bd);
+        for r in 0..bd {
+            let h = argmax(&lv[r * vocab..(r + 1) * vocab]) as i32;
+            let s = argmax(&sv[r * vocab..(r + 1) * vocab]) as i32;
+            hybrid_tokens[r].push(h);
+            stepwise_tokens[r].push(s);
+            h_next.push(h);
+            s_next.push(s);
+        }
+        logits = sess.decode_step(&Tensor::i32(&[bd], h_next), &mut state).unwrap();
+        s_logits = sess.decode_step(&Tensor::i32(&[bd], s_next), &mut s_state).unwrap();
+    }
+    assert_eq!(
+        report.completions, hybrid_tokens,
+        "coordinator diverged from the session-level hybrid recipe"
+    );
+    assert_eq!(
+        report.completions, stepwise_tokens,
+        "hybrid consumption diverged from pure stepwise decoding"
+    );
+
+    // Exact-length prompt: the whole prompt rides the artifact.
+    let exact: Vec<Vec<i32>> = prompts.iter().map(|p| p[..ctx].to_vec()).collect();
+    let report = generate(&sess, &exact, &cfg).unwrap();
+    assert_eq!(report.prefill_artifact_tokens, ctx);
+    assert_eq!(report.prompt_len, ctx);
+    let _ = std::fs::remove_file(&ckpt);
 }
 
 #[test]

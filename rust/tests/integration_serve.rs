@@ -132,8 +132,14 @@ fn staggered_admissions_match_standalone_generate() {
         assert!(resp.queue_wait_s <= resp.ttft_s);
         assert_eq!(resp.token_s.len(), resp.tokens.len() - 1);
     }
-    assert!(responses[0].prefill_used_artifact, "length {ctx} has an artifact");
-    assert!(!responses[1].prefill_used_artifact, "length 9 is stepwise");
+    assert_eq!(
+        responses[0].prefill_artifact_tokens, ctx,
+        "length {ctx} is consumed entirely by its artifact"
+    );
+    assert_eq!(
+        responses[1].prefill_artifact_tokens, 0,
+        "length 9 is shorter than every artifact: pure stepwise"
+    );
 
     let rep = engine.report();
     assert_eq!(rep.completed, 3);
