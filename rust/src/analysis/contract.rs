@@ -1,0 +1,1048 @@
+//! Manifest contract checker: statically verifies that a python-emitted
+//! `manifest.json` satisfies everything the rust runtime assumes when it
+//! consumes the bundle blind (`runtime::artifact::Manifest::parse`,
+//! `runtime::session`, `config::ModelCfg`).
+//!
+//! Checked invariants:
+//!
+//! * every field the rust side reads exists with the right type — counts
+//!   must be *integer-valued* numbers, because `Json::as_usize` goes
+//!   through `as f64 as usize` and would silently truncate `2.7` to `2`;
+//! * flat param leaves are self-consistent: unique non-empty names, sane
+//!   shapes, known dtypes, `num_param_leaves == len(params)`, and
+//!   `analysis.total_params` equal to the exact sum of leaf elements
+//!   (python/compile/analysis.py counts leaf-by-leaf, no rounding);
+//! * the `model` section parses as `ModelCfg` and agrees with the
+//!   top-level `name`/`batch_size`/`seq_len`/`eval_lens` duplicates;
+//! * decode invariants: `decode` XOR `decode_unsupported` (non-null),
+//!   `prefill_lens == eval_lens` and strictly increasing, state leaf 0 is
+//!   the scalar i32 `pos`, every other leaf carries the decode batch as
+//!   dim 0, KV-cache leaves appear iff the block layout has SWA blocks —
+//!   and the whole flat state list must equal, leaf for leaf, the
+//!   rust-side mirror of `python/compile/decode.py::state_spec`;
+//!
+//! Findings are anchored to the manifest's real file/line via a JSON-path
+//! index built from the source text, so a mutated field is reported where
+//! it sits, not as "somewhere in the file".
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::analysis::Finding;
+use crate::config::ModelCfg;
+use crate::substrate::json::{Json, JsonError};
+
+/// One flat leaf as the checker sees it (shapes in u64 so a corrupt
+/// manifest can't wrap a usize on 32-bit hosts).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Leaf {
+    name: String,
+    shape: Vec<u64>,
+    dtype: String,
+}
+
+impl Leaf {
+    fn numel(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    fn describe(&self) -> String {
+        format!("{} {:?} {}", self.name, self.shape, self.dtype)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON-path → line index
+// ---------------------------------------------------------------------------
+
+/// Walk already-validated JSON text and record the 1-based line of every
+/// key/element, addressed as `decode.state[3].shape`. Lenient by design —
+/// it only runs after `Json::parse_bytes` accepted the document.
+fn key_lines(text: &str) -> BTreeMap<String, usize> {
+    struct W<'a> {
+        b: &'a [u8],
+        i: usize,
+        line: usize,
+        out: BTreeMap<String, usize>,
+    }
+    impl W<'_> {
+        fn ws(&mut self) {
+            while self.i < self.b.len() {
+                match self.b[self.i] {
+                    b'\n' => {
+                        self.line += 1;
+                        self.i += 1;
+                    }
+                    b' ' | b'\t' | b'\r' => self.i += 1,
+                    _ => break,
+                }
+            }
+        }
+
+        fn string(&mut self) -> String {
+            let mut out = String::new();
+            self.i += 1; // opening quote
+            while self.i < self.b.len() {
+                match self.b[self.i] {
+                    b'"' => {
+                        self.i += 1;
+                        break;
+                    }
+                    b'\\' => {
+                        // Escapes never occur in the key/name grammar this
+                        // index serves; skip the pair without decoding.
+                        self.i = (self.i + 2).min(self.b.len());
+                        out.push('?');
+                    }
+                    c => {
+                        if c == b'\n' {
+                            self.line += 1;
+                        }
+                        out.push(c as char);
+                        self.i += 1;
+                    }
+                }
+            }
+            out
+        }
+
+        fn value(&mut self, path: &str) {
+            self.ws();
+            if self.i >= self.b.len() {
+                return;
+            }
+            self.out.entry(path.to_string()).or_insert(self.line);
+            match self.b[self.i] {
+                b'{' => {
+                    self.i += 1;
+                    loop {
+                        self.ws();
+                        if self.i >= self.b.len() {
+                            return;
+                        }
+                        if self.b[self.i] == b'}' {
+                            self.i += 1;
+                            return;
+                        }
+                        if self.b[self.i] == b',' {
+                            self.i += 1;
+                            continue;
+                        }
+                        let key_line = self.line;
+                        let key = self.string();
+                        let child = if path.is_empty() {
+                            key
+                        } else {
+                            format!("{path}.{key}")
+                        };
+                        self.out.entry(child.clone()).or_insert(key_line);
+                        self.ws();
+                        if self.i < self.b.len() && self.b[self.i] == b':' {
+                            self.i += 1;
+                        }
+                        self.value(&child);
+                    }
+                }
+                b'[' => {
+                    self.i += 1;
+                    let mut idx = 0usize;
+                    loop {
+                        self.ws();
+                        if self.i >= self.b.len() {
+                            return;
+                        }
+                        if self.b[self.i] == b']' {
+                            self.i += 1;
+                            return;
+                        }
+                        if self.b[self.i] == b',' {
+                            self.i += 1;
+                            continue;
+                        }
+                        self.value(&format!("{path}[{idx}]"));
+                        idx += 1;
+                    }
+                }
+                b'"' => {
+                    self.string();
+                }
+                _ => {
+                    // Scalar: consume until a delimiter.
+                    while self.i < self.b.len()
+                        && !matches!(self.b[self.i], b',' | b'}' | b']' | b'\n')
+                    {
+                        self.i += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    let mut w = W { b: text.as_bytes(), i: 0, line: 1, out: BTreeMap::new() };
+    w.value("");
+    w.out
+}
+
+/// Line of `path`, falling back to the nearest recorded ancestor (a missing
+/// key has no line of its own — anchor at its parent object).
+fn line_of(lines: &BTreeMap<String, usize>, path: &str) -> usize {
+    let mut p = path.to_string();
+    loop {
+        if let Some(&l) = lines.get(&p) {
+            return l;
+        }
+        let cut = match (p.rfind('.'), p.rfind('[')) {
+            (None, None) => return 1,
+            (a, b) => a.max(b).expect("one side is Some"),
+        };
+        p.truncate(cut);
+        if p.is_empty() {
+            return 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checker plumbing
+// ---------------------------------------------------------------------------
+
+struct Checker<'a> {
+    file: &'a str,
+    lines: BTreeMap<String, usize>,
+    out: Vec<Finding>,
+}
+
+impl Checker<'_> {
+    fn fail(&mut self, rule: &'static str, path: &str, msg: impl std::fmt::Display) {
+        let line = line_of(&self.lines, path);
+        let at = if path.is_empty() { String::new() } else { format!("`{path}`: ") };
+        self.out.push(Finding::new(self.file, line, rule, format!("{at}{msg}")));
+    }
+}
+
+fn join_path(base: &str, key: &str) -> String {
+    if base.is_empty() {
+        key.to_string()
+    } else {
+        format!("{base}.{key}")
+    }
+}
+
+/// Integer-valued JSON number (what `as_usize` can read without silent
+/// truncation or sign wrap).
+fn as_uint(j: &Json) -> Option<u64> {
+    match j {
+        Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9.0e15 => Some(*n as u64),
+        _ => None,
+    }
+}
+
+fn field<'j>(c: &mut Checker, j: &'j Json, base: &str, key: &str) -> Option<&'j Json> {
+    match j.as_obj().ok().and_then(|o| o.get(key)) {
+        Some(v) => Some(v),
+        None => {
+            c.fail(
+                "contract/field",
+                &join_path(base, key),
+                "required field missing (the rust loader reads it)",
+            );
+            None
+        }
+    }
+}
+
+fn uint_field(c: &mut Checker, j: &Json, base: &str, key: &str, min: u64) -> Option<u64> {
+    let v = field(c, j, base, key)?;
+    let path = join_path(base, key);
+    match as_uint(v) {
+        Some(n) if n >= min => Some(n),
+        Some(n) => {
+            c.fail("contract/field", &path, format!("must be >= {min}, got {n}"));
+            None
+        }
+        None => {
+            c.fail(
+                "contract/field",
+                &path,
+                format!(
+                    "must be an integer-valued number ({} found; Json::as_usize \
+                     would silently truncate)",
+                    v.kind()
+                ),
+            );
+            None
+        }
+    }
+}
+
+fn str_field(c: &mut Checker, j: &Json, base: &str, key: &str) -> Option<String> {
+    let v = field(c, j, base, key)?;
+    let path = join_path(base, key);
+    match v.as_str() {
+        Ok(s) if !s.is_empty() => Some(s.to_string()),
+        Ok(_) => {
+            c.fail("contract/field", &path, "must be a non-empty string");
+            None
+        }
+        Err(_) => {
+            c.fail("contract/field", &path, format!("must be a string, got {}", v.kind()));
+            None
+        }
+    }
+}
+
+/// Array of integer-valued numbers, each >= `min`; per-element findings.
+fn uint_list(c: &mut Checker, j: &Json, path: &str, min: u64) -> Option<Vec<u64>> {
+    let arr = match j.as_arr() {
+        Ok(a) => a,
+        Err(_) => {
+            c.fail("contract/field", path, format!("must be an array, got {}", j.kind()));
+            return None;
+        }
+    };
+    let mut out = Vec::with_capacity(arr.len());
+    let mut ok = true;
+    for (i, v) in arr.iter().enumerate() {
+        match as_uint(v) {
+            Some(n) if n >= min => out.push(n),
+            _ => {
+                c.fail(
+                    "contract/field",
+                    &format!("{path}[{i}]"),
+                    format!("must be an integer >= {min}"),
+                );
+                ok = false;
+            }
+        }
+    }
+    ok.then_some(out)
+}
+
+/// Parse a `[{name, shape, dtype}, ...]` leaf array (params or decode
+/// state), mirroring `runtime::artifact::parse_specs` but collecting
+/// findings instead of bailing on the first defect.
+fn leaf_list(c: &mut Checker, j: &Json, path: &str, rule: &'static str) -> Option<Vec<Leaf>> {
+    let arr = match j.as_arr() {
+        Ok(a) => a,
+        Err(_) => {
+            c.fail(rule, path, format!("must be an array, got {}", j.kind()));
+            return None;
+        }
+    };
+    let mut out = Vec::with_capacity(arr.len());
+    let mut ok = true;
+    for (i, p) in arr.iter().enumerate() {
+        let base = format!("{path}[{i}]");
+        let name = str_field(c, p, &base, "name");
+        let shape = field(c, p, &base, "shape")
+            .and_then(|s| uint_list(c, s, &format!("{base}.shape"), 1));
+        let dtype = str_field(c, p, &base, "dtype");
+        if let Some(d) = &dtype {
+            if d != "float32" && d != "int32" {
+                c.fail(
+                    rule,
+                    &format!("{base}.dtype"),
+                    format!("unknown dtype {d:?} (rust DType::from_str knows float32/int32)"),
+                );
+                ok = false;
+            }
+        }
+        match (name, shape, dtype) {
+            (Some(name), Some(shape), Some(dtype)) => out.push(Leaf { name, shape, dtype }),
+            _ => ok = false,
+        }
+    }
+    if !ok {
+        return None;
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for (i, l) in out.iter().enumerate() {
+        if !seen.insert(l.name.clone()) {
+            c.fail(
+                rule,
+                &format!("{path}[{i}].name"),
+                format!("duplicate leaf name {:?} (flat order is the calling convention)", l.name),
+            );
+        }
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// The state-spec mirror
+// ---------------------------------------------------------------------------
+
+/// Rust mirror of `python/compile/decode.py::state_spec`: the exact flat
+/// recurrent-state layout the emitter bakes into `prefill_L{L}` /
+/// `decode_step` for a model config, with batch dim `b`.
+fn expected_state(cfg: &ModelCfg, b: u64) -> Result<Vec<Leaf>, String> {
+    let layout = cfg.block_layout().map_err(|e| e.to_string())?;
+    let d = cfg.d_model as u64;
+    let di = cfg.d_inner() as u64;
+    let n = cfg.d_state as u64;
+    let k = cfg.conv_kernel as u64;
+    let h = cfg.n_heads as u64;
+    let w = cfg.window as u64;
+    if k == 0 {
+        return Err("conv_kernel must be >= 1".into());
+    }
+    if h == 0 || di % h != 0 {
+        return Err(format!("n_heads {h} must divide d_inner {di}"));
+    }
+    let mut out =
+        vec![Leaf { name: "pos".into(), shape: vec![], dtype: "int32".into() }];
+    let mut add = |i: usize, suffix: &str, shape: Vec<u64>| {
+        out.push(Leaf {
+            name: format!("blocks.{i}.{suffix}"),
+            shape,
+            dtype: "float32".into(),
+        });
+    };
+    for (i, kind) in layout.iter().enumerate() {
+        match *kind {
+            "mamba" => {
+                add(i, "conv", vec![b, k - 1, di]);
+                add(i, "ssm", vec![b, di, n]);
+            }
+            "mamba2" => {
+                add(i, "conv", vec![b, k - 1, di]);
+                add(i, "ssd", vec![b, h, di / h, n]);
+            }
+            "gdn" => {
+                add(i, "conv", vec![b, k - 1, di]);
+                add(i, "delta", vec![b, h, di / h, di / h]);
+            }
+            "swa" => {
+                add(i, "k_cache", vec![b, w, d]);
+                add(i, "v_cache", vec![b, w, d]);
+            }
+            "mlp" => {} // stateless
+            other => return Err(format!("unknown block kind {other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// The checks
+// ---------------------------------------------------------------------------
+
+fn check_root(c: &mut Checker, j: &Json) {
+    if j.as_obj().is_err() {
+        c.fail("contract/parse", "", format!("top level must be an object, got {}", j.kind()));
+        return;
+    }
+
+    let name = str_field(c, j, "", "name");
+    let batch_size = uint_field(c, j, "", "batch_size", 1);
+    let seq_len = uint_field(c, j, "", "seq_len", 1);
+    uint_field(c, j, "", "micro_batch", 0);
+    uint_field(c, j, "", "num_routers", 0);
+    uint_field(c, j, "", "num_experts", 1);
+
+    let eval_lens = field(c, j, "", "eval_lens")
+        .and_then(|v| uint_list(c, v, "eval_lens", 1))
+        .and_then(|lens| {
+            if lens.is_empty() {
+                c.fail("contract/field", "eval_lens", "must be non-empty");
+                return None;
+            }
+            if !lens.windows(2).all(|p| p[0] < p[1]) {
+                c.fail(
+                    "contract/field",
+                    "eval_lens",
+                    format!("must be strictly increasing, got {lens:?}"),
+                );
+                return None;
+            }
+            Some(lens)
+        });
+
+    // Param leaves + the exact-count invariant.
+    let params = field(c, j, "", "params")
+        .and_then(|v| leaf_list(c, v, "params", "contract/params"));
+    if let Some(params) = &params {
+        if params.is_empty() {
+            c.fail("contract/params", "params", "must list at least one leaf");
+        }
+        if let Some(n) = uint_field(c, j, "", "num_param_leaves", 0) {
+            if n != params.len() as u64 {
+                c.fail(
+                    "contract/params",
+                    "num_param_leaves",
+                    format!("says {n} leaves but params lists {}", params.len()),
+                );
+            }
+        }
+    }
+
+    // Analytic accounting.
+    if let Some(a) = field(c, j, "", "analysis") {
+        let total = uint_field(c, a, "analysis", "total_params", 1);
+        let active = uint_field(c, a, "analysis", "active_params", 1);
+        if let (Some(t), Some(act)) = (total, active) {
+            if act > t {
+                c.fail(
+                    "contract/analysis",
+                    "analysis.active_params",
+                    format!("active {act} exceeds total {t}"),
+                );
+            }
+        }
+        match field(c, a, "analysis", "fwd_flops_per_token").map(Json::as_f64) {
+            Some(Ok(f)) if f.is_finite() && f > 0.0 => {}
+            Some(Ok(f)) => c.fail(
+                "contract/analysis",
+                "analysis.fwd_flops_per_token",
+                format!("must be a positive finite number, got {f}"),
+            ),
+            Some(Err(_)) => c.fail(
+                "contract/analysis",
+                "analysis.fwd_flops_per_token",
+                "must be a number",
+            ),
+            None => {}
+        }
+        if let (Some(t), Some(params)) = (total, &params) {
+            let sum: u64 = params.iter().map(Leaf::numel).sum();
+            if sum != t {
+                c.fail(
+                    "contract/analysis",
+                    "analysis.total_params",
+                    format!(
+                        "claims {t} but the param leaves sum to {sum} \
+                         (python counts leaf elements exactly — any gap means \
+                         the manifest and the lowered params disagree)"
+                    ),
+                );
+            }
+        }
+    }
+
+    // Model section: must parse as ModelCfg and agree with the top-level
+    // duplicates the rust loader reads directly.
+    let cfg = match field(c, j, "", "model") {
+        Some(m) => match ModelCfg::parse(m) {
+            Ok(cfg) => Some(cfg),
+            Err(e) => {
+                c.fail(
+                    "contract/field",
+                    "model",
+                    format!("does not parse as ModelCfg: {e:#}"),
+                );
+                None
+            }
+        },
+        None => None,
+    };
+    if let Some(cfg) = &cfg {
+        if cfg.vocab_size < 2 {
+            c.fail("contract/field", "model.vocab_size", "must be >= 2");
+        }
+        if let Some(n) = &name {
+            if &cfg.name != n {
+                c.fail(
+                    "contract/field",
+                    "model.name",
+                    format!("{:?} disagrees with top-level name {n:?}", cfg.name),
+                );
+            }
+        }
+        if let Some(b) = batch_size {
+            if cfg.batch_size as u64 != b {
+                c.fail(
+                    "contract/field",
+                    "model.batch_size",
+                    format!("{} disagrees with top-level batch_size {b}", cfg.batch_size),
+                );
+            }
+        }
+        if let Some(l) = seq_len {
+            if cfg.seq_len as u64 != l {
+                c.fail(
+                    "contract/field",
+                    "model.seq_len",
+                    format!("{} disagrees with top-level seq_len {l}", cfg.seq_len),
+                );
+            }
+        }
+        if let Some(lens) = &eval_lens {
+            let cfg_lens: Vec<u64> = cfg.eval_lens.iter().map(|&x| x as u64).collect();
+            if &cfg_lens != lens {
+                c.fail(
+                    "contract/field",
+                    "model.eval_lens",
+                    format!("{cfg_lens:?} disagrees with top-level eval_lens {lens:?}"),
+                );
+            }
+        }
+    }
+
+    check_decode(c, j, cfg.as_ref(), eval_lens.as_deref());
+}
+
+fn check_decode(c: &mut Checker, j: &Json, cfg: Option<&ModelCfg>, eval_lens: Option<&[u64]>) {
+    let obj = match j.as_obj() {
+        Ok(o) => o,
+        Err(_) => return,
+    };
+    // Both keys must exist (null is fine); exactly one may be non-null.
+    let decode = obj.get("decode");
+    let reason = obj.get("decode_unsupported");
+    if decode.is_none() || reason.is_none() {
+        c.fail(
+            "contract/decode",
+            "decode",
+            "decode support status missing (`decode` and `decode_unsupported` \
+             must both be present, one of them null) — re-run `make artifacts`",
+        );
+        return;
+    }
+    let decode = match decode {
+        Some(Json::Null) => None,
+        d => d,
+    };
+    let reason = match reason {
+        Some(Json::Null) => None,
+        r => r,
+    };
+    match (decode, reason) {
+        (Some(_), Some(_)) => {
+            c.fail(
+                "contract/decode",
+                "decode_unsupported",
+                "both a decode state spec and an unsupported reason are set — \
+                 they are mutually exclusive",
+            );
+            return;
+        }
+        (None, Some(r)) => {
+            match r.as_str() {
+                Ok(s) if !s.is_empty() => {}
+                _ => c.fail(
+                    "contract/decode",
+                    "decode_unsupported",
+                    "must be a non-empty reason string when decode is null",
+                ),
+            }
+            // The only layout the emitter refuses is SWA with window <= 0
+            // (full-context attention has no fixed-shape KV state).
+            if let Some(cfg) = cfg {
+                let layout = cfg.block_layout().unwrap_or_default();
+                if !(layout.contains(&"swa") && cfg.window == 0) {
+                    c.fail(
+                        "contract/decode",
+                        "decode_unsupported",
+                        format!(
+                            "set for arch {:?} window {} — python only refuses \
+                             swa layouts with window <= 0, so this manifest \
+                             disagrees with the emitter",
+                            cfg.arch, cfg.window
+                        ),
+                    );
+                }
+            }
+            return;
+        }
+        (None, None) => {
+            c.fail(
+                "contract/decode",
+                "decode",
+                "decode and decode_unsupported are both null — the support \
+                 status is unknowable",
+            );
+            return;
+        }
+        (Some(_), None) => {}
+    }
+    let d = decode.expect("checked above");
+    if let Some(cfg) = cfg {
+        let layout = cfg.block_layout().unwrap_or_default();
+        if layout.contains(&"swa") && cfg.window == 0 {
+            c.fail(
+                "contract/decode",
+                "decode",
+                "state spec present for an swa layout with window 0 — python \
+                 records decode_unsupported for these",
+            );
+        }
+    }
+
+    let batch = uint_field(c, d, "decode", "batch", 1);
+    if let Some(lens) = field(c, d, "decode", "prefill_lens")
+        .and_then(|v| uint_list(c, v, "decode.prefill_lens", 1))
+    {
+        if lens.is_empty() {
+            c.fail("contract/decode", "decode.prefill_lens", "must be non-empty");
+        } else if !lens.windows(2).all(|p| p[0] < p[1]) {
+            c.fail(
+                "contract/decode",
+                "decode.prefill_lens",
+                format!("must be strictly increasing (sorted, no repeats), got {lens:?}"),
+            );
+        } else if let Some(el) = eval_lens {
+            if lens != el {
+                c.fail(
+                    "contract/decode",
+                    "decode.prefill_lens",
+                    format!(
+                        "{lens:?} != eval_lens {el:?} — the emitter lowers one \
+                         prefill artifact per eval length"
+                    ),
+                );
+            }
+        }
+    }
+
+    let state = match field(c, d, "decode", "state")
+        .and_then(|v| leaf_list(c, v, "decode.state", "contract/decode"))
+    {
+        Some(s) => s,
+        None => return,
+    };
+
+    // Leaf 0 is always the scalar i32 `pos`; nothing else may claim it.
+    match state.first() {
+        Some(l) if l.name == "pos" && l.shape.is_empty() && l.dtype == "int32" => {}
+        Some(l) => c.fail(
+            "contract/decode",
+            "decode.state[0]",
+            format!("leaf 0 must be pos [] int32, got {}", l.describe()),
+        ),
+        None => c.fail("contract/decode", "decode.state", "must list at least the pos leaf"),
+    }
+    for (i, l) in state.iter().enumerate().skip(1) {
+        if l.name == "pos" {
+            c.fail(
+                "contract/decode",
+                &format!("decode.state[{i}]"),
+                "second `pos` leaf — the scalar position is leaf 0, once",
+            );
+        }
+        if let (Some(b), Some(&dim0)) = (batch, l.shape.first()) {
+            if dim0 != b {
+                c.fail(
+                    "contract/decode",
+                    &format!("decode.state[{i}].shape"),
+                    format!("dim 0 is {dim0} but decode.batch is {b}"),
+                );
+            }
+        }
+    }
+
+    // KV caches appear iff the layout has SWA blocks (this is what flips
+    // `DecodeSpec::position_dependent` and forces gang admission in serve).
+    let has_kv = state
+        .iter()
+        .any(|l| l.name.ends_with(".k_cache") || l.name.ends_with(".v_cache"));
+    if let Some(cfg) = cfg {
+        let layout = cfg.block_layout().unwrap_or_default();
+        let has_swa = layout.contains(&"swa");
+        if has_kv && !has_swa {
+            c.fail(
+                "contract/decode",
+                "decode.state",
+                format!(
+                    "KV-cache leaves present but the {:?} layout has no swa \
+                     blocks — position_dependent would gang-admit for nothing",
+                    cfg.arch
+                ),
+            );
+        }
+        if has_swa && !has_kv {
+            c.fail(
+                "contract/decode",
+                "decode.state",
+                format!(
+                    "{:?} layout has swa blocks but no KV-cache leaves — \
+                     position_dependent would miss the gang-admission requirement",
+                    cfg.arch
+                ),
+            );
+        }
+
+        // The full mirror: the emitted flat state must equal state_spec.
+        if let Some(b) = batch {
+            match expected_state(cfg, b) {
+                Ok(expected) => {
+                    if expected.len() != state.len() {
+                        c.fail(
+                            "contract/state-mirror",
+                            "decode.state",
+                            format!(
+                                "{} leaves emitted but state_spec({}, batch {b}) \
+                                 yields {}",
+                                state.len(),
+                                cfg.name,
+                                expected.len()
+                            ),
+                        );
+                    }
+                    for (i, (got, want)) in state.iter().zip(&expected).enumerate() {
+                        if got != want {
+                            c.fail(
+                                "contract/state-mirror",
+                                &format!("decode.state[{i}]"),
+                                format!(
+                                    "leaf {i} is `{}` but state_spec says `{}`",
+                                    got.describe(),
+                                    want.describe()
+                                ),
+                            );
+                        }
+                    }
+                }
+                Err(e) => c.fail(
+                    "contract/state-mirror",
+                    "decode.state",
+                    format!("cannot derive state_spec from the model section: {e}"),
+                ),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// Check one manifest given its raw bytes; `file` labels the findings.
+pub fn check_manifest_bytes(file: &str, bytes: &[u8]) -> Vec<Finding> {
+    let mut c = Checker { file, lines: BTreeMap::new(), out: Vec::new() };
+    let j = match Json::parse_bytes(bytes) {
+        Ok(j) => j,
+        Err(e) => {
+            let line = match &e {
+                JsonError::Parse(off, _) => {
+                    1 + bytes[..(*off).min(bytes.len())]
+                        .iter()
+                        .filter(|&&b| b == b'\n')
+                        .count()
+                }
+                _ => 1,
+            };
+            c.out.push(Finding::new(
+                file,
+                line,
+                "contract/parse",
+                format!("manifest does not parse: {e}"),
+            ));
+            return c.out;
+        }
+    };
+    // Parse succeeded, so the bytes are valid UTF-8.
+    c.lines = key_lines(std::str::from_utf8(bytes).unwrap_or(""));
+    check_root(&mut c, &j);
+    c.out
+}
+
+/// Check one manifest file on disk.
+pub fn check_manifest_file(path: &Path) -> Vec<Finding> {
+    let label = path.display().to_string();
+    match std::fs::read(path) {
+        Ok(bytes) => check_manifest_bytes(&label, &bytes),
+        Err(e) => vec![Finding::new(label, 1, "contract/parse", format!("cannot read: {e}"))],
+    }
+}
+
+/// The committed golden manifest fixtures (`rust/tests/golden/*.manifest.json`
+/// under the repo root) — real emitter output pinned in-tree so the contract
+/// pass always has input, even where no artifacts/ exists.
+pub fn golden_manifests(root: &Path) -> Vec<PathBuf> {
+    let dir = root.join("rust").join("tests").join("golden");
+    let mut out: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .into_iter()
+        .flatten()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.file_name().is_some_and(|n| {
+            n.to_string_lossy().ends_with(".manifest.json")
+        }))
+        .collect();
+    out.sort();
+    out
+}
+
+/// Freshly emitted manifests under an artifacts root (absent dir => empty).
+pub fn artifact_manifests(artifacts_root: &Path) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(artifacts_root)
+        .into_iter()
+        .flatten()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path().join("manifest.json"))
+        .filter(|p| p.exists())
+        .collect();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal fully-valid manifest: mamba, 1 layer, d_model 4, expand 2
+    /// (d_inner 8), conv_kernel 2, d_state 2, decode batch 1. Params sum:
+    /// embed 16*4 + w 4*4 = 80.
+    fn valid() -> String {
+        r#"{
+ "analysis": {"active_params": 80, "fwd_flops_per_token": 96.0, "total_params": 80},
+ "batch_size": 2,
+ "decode": {
+  "batch": 1,
+  "prefill_lens": [8],
+  "state": [
+   {"dtype": "int32", "name": "pos", "shape": []},
+   {"dtype": "float32", "name": "blocks.0.conv", "shape": [1, 1, 8]},
+   {"dtype": "float32", "name": "blocks.0.ssm", "shape": [1, 8, 2]}
+  ]
+ },
+ "decode_unsupported": null,
+ "eval_lens": [8],
+ "micro_batch": 1,
+ "model": {
+  "arch": "mamba", "attn_moe": "none", "attn_moe_experts": 8,
+  "batch_size": 2, "conv_kernel": 2, "d_model": 4, "d_state": 2,
+  "decode_batch": 1, "dt_rank": 1, "eval_lens": [8], "expand": 2,
+  "ffn_moe": {"balance_loss": 0.0, "jitter": 0.0, "num_experts": 1, "top_k": 1},
+  "ffn_moe_share_router": false, "micro_batch": 0, "mlp_mult": 2,
+  "n_heads": 2, "n_layers": 1, "name": "t",
+  "rom": {"balance_loss": 0.0, "jitter": 0.0, "num_experts": 8, "top_k": 1},
+  "rom_targets": ["conv"], "routing": "shared", "seq_len": 8,
+  "vocab_size": 16, "window": 4
+ },
+ "name": "t",
+ "num_experts": 8,
+ "num_param_leaves": 2,
+ "num_routers": 1,
+ "params": [
+  {"dtype": "float32", "name": "embed", "shape": [16, 4]},
+  {"dtype": "float32", "name": "w", "shape": [4, 4]}
+ ],
+ "seq_len": 8
+}"#
+        .to_string()
+    }
+
+    fn check(text: &str) -> Vec<Finding> {
+        check_manifest_bytes("m.json", text.as_bytes())
+    }
+
+    #[test]
+    fn valid_manifest_is_clean() {
+        let f = check(&valid());
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    #[test]
+    fn key_lines_index_points_into_the_file() {
+        let text = valid();
+        let lines = key_lines(&text);
+        // "decode" opens on line 4; state leaf 1's shape sits on line 9.
+        assert_eq!(lines["decode"], 4);
+        assert_eq!(lines["decode.state[1]"], 9);
+        assert_eq!(line_of(&lines, "decode.state[1].shape"), 9);
+        // Missing keys anchor at the nearest ancestor.
+        assert_eq!(line_of(&lines, "decode.nope"), 4);
+    }
+
+    #[test]
+    fn mutated_state_shape_is_flagged_with_line() {
+        let bad = valid().replace("\"shape\": [1, 8, 2]", "\"shape\": [1, 8, 3]");
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.rule == "contract/state-mirror"
+                && f.message.contains("decode.state[2]")
+                && f.line == 10),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn missing_required_field_is_flagged() {
+        let bad = valid().replace(" \"batch_size\": 2,\n", "");
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.rule == "contract/field" && f.message.contains("batch_size")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn fractional_count_is_flagged_not_truncated() {
+        let bad = valid().replace("\"batch_size\": 2,\n \"decode\"", "\"batch_size\": 2.5,\n \"decode\"");
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.message.contains("integer-valued")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn param_sum_mismatch_is_flagged() {
+        let bad = valid().replace("\"total_params\": 80", "\"total_params\": 81");
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.rule == "contract/analysis"
+                && f.message.contains("sum to 80")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn decode_xor_unsupported_is_enforced() {
+        // Null out decode while leaving decode_unsupported null: unknowable.
+        let start = valid().find("\"decode\": {").unwrap();
+        let end = valid().find("\n \"decode_unsupported\"").unwrap();
+        let mut bad = valid();
+        bad.replace_range(start..end, "\"decode\": null,");
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.rule == "contract/decode" && f.message.contains("both null")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn unjustified_unsupported_reason_is_flagged() {
+        // A mamba layout claiming decode is unsupported contradicts the
+        // emitter (only swa with window <= 0 refuses).
+        let start = valid().find("\"decode\": {").unwrap();
+        let end = valid().find("\n \"decode_unsupported\"").unwrap();
+        let mut bad = valid();
+        bad.replace_range(start..end, "\"decode\": null,");
+        let bad = bad.replace(
+            "\"decode_unsupported\": null",
+            "\"decode_unsupported\": \"because\"",
+        );
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.rule == "contract/decode"
+                && f.message.contains("python only refuses")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn swa_mirror_expects_kv_leaves() {
+        let cfg = ModelCfg::parse(
+            &Json::parse(&valid()).unwrap().get("model").unwrap().clone(),
+        )
+        .unwrap();
+        let mut swa_cfg = cfg.clone();
+        swa_cfg.arch = "samba".into();
+        let spec = expected_state(&swa_cfg, 2).unwrap();
+        let names: Vec<&str> = spec.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["pos", "blocks.0.conv", "blocks.0.ssm", "blocks.1.k_cache", "blocks.1.v_cache"]
+        );
+        assert_eq!(spec[3].shape, vec![2, 4, 4]); // [B, window, d_model]
+    }
+
+    #[test]
+    fn unparseable_bytes_report_parse_rule() {
+        let f = check_manifest_bytes("m.json", b"{\"a\": \xFF}");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "contract/parse");
+    }
+}

@@ -1,0 +1,429 @@
+//! Source lint for project invariants the compiler cannot see.
+//!
+//! Four rules, all scoped to `rust/{src,benches,tests,examples}`:
+//!
+//! * [`RULE_BENCH_WRITE`] — `BENCH_runtime.json` is only ever written by
+//!   `substrate::bench::merge_bench_json` (lock + tmp-rename). A raw
+//!   `fs::write`/`File::create`/`OpenOptions` aimed at the record anywhere
+//!   else can silently drop concurrent benches' fields.
+//! * [`RULE_SPAWN`] — free-running threads live in `substrate::pool`
+//!   (and behind its loom-checked `substrate::sync` shim); a stray
+//!   `thread::spawn` elsewhere escapes the model-checked surface. Scoped
+//!   `std::thread::scope` is allowed anywhere — its joins are structural.
+//! * [`RULE_UNWRAP`] — no `.unwrap()` in `coordinator/` non-test code:
+//!   the coordinator is the long-running control plane, and a panic there
+//!   takes down training/serving with no context. Tests are exempt.
+//! * [`RULE_SAFETY`] — every `unsafe` must have a `// SAFETY:` comment on
+//!   the same line or within the 8 lines above it (tests included — an
+//!   unjustified `unsafe` is no safer for being in a test).
+//!
+//! Matching happens on *stripped* source — string literals, char literals
+//! and comments are blanked first — so a pattern named in a string (this
+//! file is full of them) never trips a rule. The escape hatch for a
+//! reviewed exception is a `rom-lint: allow(<rule-short-name>)` comment on
+//! the same or the preceding line.
+
+use std::path::Path;
+
+use crate::analysis::Finding;
+
+pub const RULE_BENCH_WRITE: &str = "lint/bench-write";
+pub const RULE_SPAWN: &str = "lint/thread-spawn";
+pub const RULE_UNWRAP: &str = "lint/coordinator-unwrap";
+pub const RULE_SAFETY: &str = "lint/safety-comment";
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank out string literals (normal, raw, byte), char literals and
+/// comments (line + nested block), preserving newlines and column
+/// positions so findings land on real lines.
+pub fn strip_code(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let blank = |out: &mut Vec<u8>, range: std::ops::Range<usize>| {
+        for k in range {
+            if out[k] != b'\n' {
+                out[k] = b' ';
+            }
+        }
+    };
+    let mut i = 0;
+    while i < b.len() {
+        let prev_ident = i > 0 && is_ident(b[i - 1]);
+        // Line comment.
+        if b[i] == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            blank(&mut out, start..i);
+            continue;
+        }
+        // Nested block comment.
+        if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+            let start = i;
+            let mut depth = 1;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start..i);
+            continue;
+        }
+        // Raw (and raw byte) string: r"..", r#".."#, br#".."# ...
+        if !prev_ident && (b[i] == b'r' || (b[i] == b'b' && b.get(i + 1) == Some(&b'r'))) {
+            let mut j = i + if b[i] == b'b' { 2 } else { 1 };
+            let mut hashes = 0;
+            while b.get(j) == Some(&b'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&b'"') {
+                // Scan for the closing quote followed by `hashes` hashes.
+                let start = i;
+                j += 1;
+                loop {
+                    match b.get(j) {
+                        None => break,
+                        Some(&b'"') if b[j + 1..].iter().take(hashes).filter(|&&h| h == b'#').count() == hashes => {
+                            j += 1 + hashes;
+                            break;
+                        }
+                        _ => j += 1,
+                    }
+                }
+                blank(&mut out, start..j);
+                i = j;
+                continue;
+            }
+        }
+        // Byte string b"..".
+        if !prev_ident && b[i] == b'b' && b.get(i + 1) == Some(&b'"') {
+            let start = i;
+            i += 2;
+            while i < b.len() && b[i] != b'"' {
+                if b[i] == b'\\' {
+                    i += 1;
+                }
+                i += 1;
+            }
+            i = (i + 1).min(b.len());
+            blank(&mut out, start..i);
+            continue;
+        }
+        // Normal string.
+        if b[i] == b'"' {
+            let start = i;
+            i += 1;
+            while i < b.len() && b[i] != b'"' {
+                if b[i] == b'\\' {
+                    i += 1;
+                }
+                i += 1;
+            }
+            i = (i + 1).min(b.len());
+            blank(&mut out, start..i);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if b[i] == b'\'' {
+            if b.get(i + 1) == Some(&b'\\') {
+                let start = i;
+                i += 2; // quote + backslash
+                if i < b.len() {
+                    i += 1; // the escaped char
+                }
+                while i < b.len() && b[i] != b'\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(b.len());
+                blank(&mut out, start..i);
+                continue;
+            }
+            if b.get(i + 2) == Some(&b'\'') && b.get(i + 1) != Some(&b'\'') {
+                blank(&mut out, i..i + 3);
+                i += 3;
+                continue;
+            }
+            // Lifetime: leave as-is.
+        }
+        i += 1;
+    }
+    // `out` only ever had multi-byte UTF-8 sequences inside literals and
+    // comments, which were blanked byte-by-byte to ASCII spaces... except
+    // they weren't: blanking replaces each byte with ' ', so any multi-byte
+    // char in a literal becomes several spaces — still valid UTF-8. Bytes
+    // outside literals are copied verbatim.
+    String::from_utf8(out).unwrap_or_default()
+}
+
+fn has_word(line: &str, word: &str) -> bool {
+    let b = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident(b[p - 1]);
+        let after = p + word.len();
+        let after_ok = after >= b.len() || !is_ident(b[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+fn norm_label(label: &str) -> String {
+    label.replace('\\', "/")
+}
+
+/// Lint a single source file. `label` should be a repo-relative path —
+/// rule scoping (coordinator/, substrate/pool.rs, ...) keys off it.
+pub fn lint_source(label: &str, src: &str) -> Vec<Finding> {
+    let label_n = norm_label(label);
+    let stripped = strip_code(src);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    let stripped_lines: Vec<&str> = stripped.lines().collect();
+
+    // Everything from the first `#[cfg(test)]` / `#[cfg(all(test` to EOF is
+    // treated as test code (the tree keeps test mods last in every file).
+    let test_start = stripped_lines
+        .iter()
+        .position(|l| l.contains("#[cfg(test)]") || l.contains("#[cfg(all(test"))
+        .unwrap_or(usize::MAX);
+    let path_is_test =
+        label_n.contains("/tests/") || label_n.contains("/examples/") || label_n.starts_with("tests/");
+
+    let is_pool = label_n.ends_with("substrate/pool.rs");
+    let is_bench_home = label_n.ends_with("substrate/bench.rs");
+    let in_coordinator = label_n.contains("coordinator/");
+
+    let allowed = |idx: usize, rule: &str| {
+        let short = rule.rsplit('/').next().unwrap_or(rule);
+        let tag = format!("rom-lint: allow({short})");
+        orig_lines[idx].contains(&tag)
+            || (idx > 0 && orig_lines[idx - 1].contains(&tag))
+    };
+
+    let mut out = Vec::new();
+    for (idx, stripped_line) in stripped_lines.iter().enumerate() {
+        let orig_line = orig_lines.get(idx).copied().unwrap_or("");
+        let ln = idx + 1;
+        let in_test = path_is_test || idx >= test_start;
+
+        if !is_bench_home
+            && (stripped_line.contains("fs::write")
+                || stripped_line.contains("File::create")
+                || stripped_line.contains("OpenOptions"))
+            && (orig_line.contains("BENCH_runtime") || stripped_line.contains("bench_json_path"))
+            && !allowed(idx, RULE_BENCH_WRITE)
+        {
+            out.push(Finding::new(
+                label,
+                ln,
+                RULE_BENCH_WRITE,
+                "writes the bench record directly — all BENCH_runtime.json \
+                 writes go through substrate::bench::merge_bench_json \
+                 (lock-guarded read-modify-write + atomic rename)",
+            ));
+        }
+
+        if !in_test
+            && !is_pool
+            && stripped_line.contains("thread::spawn")
+            && !allowed(idx, RULE_SPAWN)
+        {
+            out.push(Finding::new(
+                label,
+                ln,
+                RULE_SPAWN,
+                "free-running thread outside substrate::pool — spawn via the \
+                 pool (or a scoped std::thread::scope) so shutdown and the \
+                 loom model cover it",
+            ));
+        }
+
+        if in_coordinator
+            && !in_test
+            && stripped_line.contains(".unwrap()")
+            && !allowed(idx, RULE_UNWRAP)
+        {
+            out.push(Finding::new(
+                label,
+                ln,
+                RULE_UNWRAP,
+                "`.unwrap()` in coordinator non-test code — the control plane \
+                 must surface contextful errors, not panic",
+            ));
+        }
+
+        if has_word(stripped_line, "unsafe") && !allowed(idx, RULE_SAFETY) {
+            let lo = idx.saturating_sub(8);
+            let justified = (lo..=idx).any(|k| {
+                orig_lines.get(k).is_some_and(|l| l.contains("SAFETY:"))
+            });
+            if !justified {
+                out.push(Finding::new(
+                    label,
+                    ln,
+                    RULE_SAFETY,
+                    "`unsafe` without a `// SAFETY:` comment on the same line \
+                     or within the 8 lines above",
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Lint a set of `(label, source)` pairs.
+pub fn lint_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (label, src) in files {
+        out.extend(lint_source(label, src));
+    }
+    out
+}
+
+/// Lint every `.rs` file under `rust/{src,benches,tests,examples}` of the
+/// repo root. Labels are root-relative with forward slashes.
+pub fn lint_tree(root: &Path) -> Vec<Finding> {
+    fn collect(dir: &Path, out: &mut Vec<std::path::PathBuf>) {
+        let mut entries: Vec<_> = std::fs::read_dir(dir)
+            .into_iter()
+            .flatten()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                collect(&p, out);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    let mut files = Vec::new();
+    for sub in ["src", "benches", "tests", "examples"] {
+        collect(&root.join("rust").join(sub), &mut files);
+    }
+    let mut pairs = Vec::new();
+    for p in files {
+        if let Ok(src) = std::fs::read_to_string(&p) {
+            let label = p
+                .strip_prefix(root)
+                .map(|r| r.to_string_lossy().replace('\\', "/"))
+                .unwrap_or_else(|_| p.display().to_string());
+            pairs.push((label, src));
+        }
+    }
+    lint_sources(&pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_blanks_strings_comments_and_chars() {
+        let src = r##"
+let a = "thread::spawn"; // thread::spawn
+let b = r#"fs::write"#;
+let c = '"'; let lt: &'static str = "x";
+/* outer /* nested .unwrap() */ still comment */
+let d = real_code();
+"##;
+        let s = strip_code(src);
+        assert!(!s.contains("thread::spawn"));
+        assert!(!s.contains("fs::write"));
+        assert!(!s.contains(".unwrap()"));
+        assert!(s.contains("real_code()"));
+        assert!(s.contains("&'static str"));
+        assert_eq!(s.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn coordinator_unwrap_flagged_outside_tests_only() {
+        let src = "fn f() { x.unwrap(); }\n#[cfg(test)]\nmod t { fn g() { y.unwrap(); } }\n";
+        let f = lint_source("rust/src/coordinator/fake.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_UNWRAP);
+        assert_eq!(f[0].line, 1);
+        // Same source outside coordinator/ is fine.
+        assert!(lint_source("rust/src/runtime/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn spawn_confined_to_pool() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        let f = lint_source("rust/src/data/fake.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_SPAWN);
+        assert!(lint_source("rust/src/substrate/pool.rs", src).is_empty());
+        // thread::scope is structural and allowed anywhere.
+        let scoped = "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n";
+        assert!(lint_source("rust/src/data/fake.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_nearby_safety_comment() {
+        let bad = "fn f() { unsafe { g() } }\n";
+        let f = lint_source("rust/src/runtime/fake.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_SAFETY);
+
+        let good = "// SAFETY: g has no preconditions here.\nfn f() { unsafe { g() } }\n";
+        assert!(lint_source("rust/src/runtime/fake.rs", good).is_empty());
+
+        // A SAFETY comment 9+ lines up does not count.
+        let far = format!("// SAFETY: too far.\n{}unsafe impl Send for X {{}}\n", "\n".repeat(9));
+        let f = lint_source("rust/src/runtime/fake.rs", &far);
+        assert_eq!(f.len(), 1, "{f:?}");
+
+        // `unsafe` applies in test code too.
+        let in_test = "#[cfg(test)]\nmod t { fn f() { unsafe { g() } } }\n";
+        assert_eq!(lint_source("rust/src/runtime/fake.rs", in_test).len(), 1);
+
+        // ...but not as a substring of an identifier.
+        let ident = "fn f() { let not_unsafe_at_all = 1; }\n";
+        assert!(lint_source("rust/src/runtime/fake.rs", ident).is_empty());
+    }
+
+    #[test]
+    fn bench_record_writes_confined_to_merge_helper() {
+        let bad = "fn f(p: &Path) { std::fs::write(p.join(\"BENCH_runtime.json\"), b\"{}\").ok(); }\n";
+        let f = lint_source("rust/benches/bench_fake.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_BENCH_WRITE);
+        // Inside the sanctioned home it is fine.
+        assert!(lint_source("rust/src/substrate/bench.rs", bad).is_empty());
+        // A write that never names the record is not this rule's business.
+        let other = "fn f(p: &Path) { std::fs::write(p, b\"x\").ok(); }\n";
+        assert!(lint_source("rust/benches/bench_fake.rs", other).is_empty());
+    }
+
+    #[test]
+    fn allow_comment_suppresses_a_reviewed_exception() {
+        let src = "// rom-lint: allow(thread-spawn)\nfn f() { std::thread::spawn(|| {}); }\n";
+        assert!(lint_source("rust/src/data/fake.rs", src).is_empty());
+        let same_line = "fn f() { x.unwrap(); } // rom-lint: allow(coordinator-unwrap)\n";
+        assert!(lint_source("rust/src/coordinator/fake.rs", same_line).is_empty());
+    }
+
+    #[test]
+    fn patterns_inside_strings_do_not_trip_rules() {
+        let src = "fn f() { let s = \"thread::spawn .unwrap() fs::write BENCH_runtime\"; }\n";
+        assert!(lint_source("rust/src/coordinator/fake.rs", src).is_empty());
+    }
+}

@@ -1,5 +1,73 @@
-//! Analytic params/FLOPS accounting — the rust mirror of
-//! python/compile/analysis.py (same formulas; the cross-check against the
-//! manifest values emitted by python is an integration test).
+//! Offline static analysis: the `rom analyze` subsystem plus the analytic
+//! params/FLOPS accounting mirror.
+//!
+//! Three passes, none of which touch PJRT or a device:
+//!
+//! * [`contract`] — machine-checks the python→rust `manifest.json` calling
+//!   convention (field/type universe, flat param/state leaf consistency,
+//!   decode invariants, a full rust-side mirror of
+//!   `python/compile/decode.py::state_spec`).
+//! * [`schema`] — diffs the `BENCH_runtime.json` field universe emitted by
+//!   `benches/bench_*.rs` against the schema tables in EXPERIMENTS.md, both
+//!   directions, so doc drift fails CI.
+//! * [`lint`] — a source scanner for project invariants the compiler cannot
+//!   see (bench-write confinement, thread-spawn confinement, no `.unwrap()`
+//!   in `coordinator/` non-test code, `// SAFETY:` before every `unsafe`).
+//!
+//! [`flops`] is the analytic accounting mirror of
+//! python/compile/analysis.py (pre-dates `rom analyze`; the manifest
+//! cross-check against its formulas is an integration test).
 
+pub mod contract;
 pub mod flops;
+pub mod lint;
+pub mod schema;
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// One analyzer finding, anchored to a file and 1-based line so editors and
+/// CI logs can jump straight to it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    /// Stable rule identifier, e.g. `contract/state-mirror` or
+    /// `lint/thread-spawn`.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(
+        file: impl Into<String>,
+        line: usize,
+        rule: &'static str,
+        message: impl Into<String>,
+    ) -> Finding {
+        Finding { file: file.into(), line: line.max(1), rule, message: message.into() }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Repo root for tree-wide passes: `ROM_REPO_ROOT` when set, else probe the
+/// compile-time manifest dir and its parent for the directory that holds
+/// EXPERIMENTS.md (the workspace manifest may sit at the repo root or in
+/// `rust/`).
+pub fn repo_root() -> PathBuf {
+    if let Ok(p) = std::env::var("ROM_REPO_ROOT") {
+        return PathBuf::from(p);
+    }
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for cand in [manifest_dir.clone(), manifest_dir.join("..")] {
+        if cand.join("EXPERIMENTS.md").exists() {
+            return cand;
+        }
+    }
+    manifest_dir
+}

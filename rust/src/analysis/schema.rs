@@ -1,0 +1,466 @@
+//! BENCH_runtime.json schema drift checker.
+//!
+//! EXPERIMENTS.md carries a "§BENCH_runtime.json schema" section with one
+//! table per emitting bench. The benches emit fields as
+//! `("name", Json::num(..))` tuples (plus `format!("gen_prefill_L{l}_ms")`
+//! for the per-length pattern). This pass parses both sides and diffs them
+//! **in both directions**, per bench:
+//!
+//! * a field emitted by a bench but absent from its table → the docs are
+//!   stale ([`RULE_UNDOCUMENTED`], anchored at the emission site);
+//! * a field documented but no longer emitted → the docs promise data the
+//!   trajectory record will never carry ([`RULE_STALE`], anchored at the
+//!   doc row).
+//!
+//! Pattern fields use `{}`-normalised matching: the doc row
+//! `gen_prefill_L{L}_ms` and the emission `format!("gen_prefill_L{l}_ms")`
+//! both normalise to `gen_prefill_L{}_ms`. A committed BENCH_runtime.json,
+//! when present, is checked as a third witness: every key must match a
+//! documented field or pattern.
+
+use std::path::Path;
+
+use crate::analysis::Finding;
+use crate::substrate::json::Json;
+
+pub const RULE_DOC: &str = "schema/doc";
+pub const RULE_UNDOCUMENTED: &str = "schema/undocumented";
+pub const RULE_STALE: &str = "schema/stale";
+pub const RULE_RECORD: &str = "schema/record";
+
+const SECTION: &str = "BENCH_runtime.json schema";
+
+/// Collapse every `{...}` placeholder to `{}` so doc-side `{L}` and
+/// rust-side `{l}` compare equal.
+fn normalize(field: &str) -> String {
+    let mut out = String::new();
+    let mut it = field.chars();
+    while let Some(c) = it.next() {
+        if c == '{' {
+            for c2 in it.by_ref() {
+                if c2 == '}' {
+                    break;
+                }
+            }
+            out.push_str("{}");
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Does a concrete record key match a (normalised) field pattern?
+/// `gen_prefill_L256_ms` matches `gen_prefill_L{}_ms`; patterns without
+/// `{}` require equality.
+fn matches_pattern(key: &str, pattern: &str) -> bool {
+    if !pattern.contains("{}") {
+        return key == pattern;
+    }
+    let parts: Vec<&str> = pattern.split("{}").collect();
+    let mut rest = match key.strip_prefix(parts[0]) {
+        Some(r) => r,
+        None => return false,
+    };
+    for (i, part) in parts.iter().enumerate().skip(1) {
+        if i == parts.len() - 1 {
+            // Final segment must terminate the key, with a non-empty fill.
+            return !rest.is_empty() && rest.len() > part.len() && rest.ends_with(part);
+        }
+        match rest.find(part) {
+            Some(pos) if pos > 0 || part.is_empty() => rest = &rest[pos + part.len()..],
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// One documented field row.
+struct DocField {
+    raw: String,
+    norm: String,
+    line: usize,
+    bench: String,
+}
+
+/// Parse the schema section out of EXPERIMENTS.md text. Returns the rows
+/// plus any structural findings (missing section, rows outside a bench
+/// table, duplicates).
+fn doc_fields(doc: &str, doc_name: &str) -> (Vec<DocField>, Vec<Finding>) {
+    let mut out = Vec::new();
+    let mut findings = Vec::new();
+    let mut in_section = false;
+    let mut section_seen = false;
+    let mut bench: Option<String> = None;
+    for (i, line) in doc.lines().enumerate() {
+        let ln = i + 1;
+        if line.starts_with("## ") {
+            in_section = line.contains(SECTION);
+            section_seen |= in_section;
+            bench = None;
+            continue;
+        }
+        if !in_section {
+            continue;
+        }
+        if line.contains("--bench ") {
+            // "Emitted by `cargo bench --bench bench_runtime`:" introduces
+            // the table that follows.
+            if let Some(rest) = line.split("--bench ").nth(1) {
+                let name: String = rest
+                    .chars()
+                    .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .collect();
+                bench = Some(name);
+            }
+            continue;
+        }
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        // First backticked token is the field name; header and separator
+        // rows have none.
+        let Some(start) = line.find('`') else { continue };
+        let Some(len) = line[start + 1..].find('`') else { continue };
+        let raw = line[start + 1..start + 1 + len].to_string();
+        let Some(bench) = bench.clone() else {
+            findings.push(Finding::new(
+                doc_name,
+                ln,
+                RULE_DOC,
+                format!(
+                    "schema row `{raw}` appears before any \"Emitted by \
+                     `cargo bench --bench ...`\" table introduction"
+                ),
+            ));
+            continue;
+        };
+        let norm = normalize(&raw);
+        if out.iter().any(|f: &DocField| f.norm == norm && f.bench == bench) {
+            findings.push(Finding::new(
+                doc_name,
+                ln,
+                RULE_DOC,
+                format!("duplicate schema row `{raw}` in the {bench} table"),
+            ));
+            continue;
+        }
+        out.push(DocField { raw, norm, line: ln, bench });
+    }
+    if !section_seen {
+        findings.push(Finding::new(
+            doc_name,
+            1,
+            RULE_DOC,
+            format!("no `## §{SECTION}` section found — the bench field universe is undocumented"),
+        ));
+    }
+    (out, findings)
+}
+
+/// One field emission site in a bench source.
+struct Emitted {
+    raw: String,
+    norm: String,
+    line: usize,
+}
+
+/// Scan one bench source for `("field", Json::...)` emission sites. The
+/// three idioms in tree:
+///
+/// ```text
+/// ("variant", Json::str(..))                       // &str key
+/// ("gen_variant".into(), Json::str(..))            // String key
+/// (format!("gen_prefill_L{l}_ms"), Json::num(..))  // pattern key
+/// ```
+fn emitted_fields(src: &str) -> Vec<Emitted> {
+    let mut out = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        let b = line.as_bytes();
+        let mut j = 0;
+        while j < b.len() {
+            if b[j] != b'"' {
+                j += 1;
+                continue;
+            }
+            let start = j + 1;
+            let mut end = start;
+            while end < b.len() && b[end] != b'"' {
+                if b[end] == b'\\' {
+                    end += 1;
+                }
+                end += 1;
+            }
+            if end >= b.len() {
+                break;
+            }
+            let lit = &line[start..end];
+            j = end + 1;
+            let rest = &line[j..];
+            let rest = rest.strip_prefix(".into()").unwrap_or(rest);
+            let rest = rest.strip_prefix(')').unwrap_or(rest);
+            let rest = rest.trim_start();
+            let Some(after_comma) = rest.strip_prefix(',') else { continue };
+            if after_comma.trim_start().starts_with("Json::") {
+                out.push(Emitted {
+                    raw: lit.to_string(),
+                    norm: normalize(lit),
+                    line: i + 1,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Diff the documented field universe against the emitting bench sources
+/// (and, optionally, a committed record's keys).
+///
+/// `bench_sources` is `[(file_label, source_text)]` — only sources whose
+/// stem matches a documented bench table participate; the label's file
+/// stem (e.g. `bench_generate` from `rust/benches/bench_generate.rs`) is
+/// the join key.
+pub fn check_schema(
+    doc: &str,
+    doc_name: &str,
+    bench_sources: &[(String, String)],
+    bench_record: Option<(&str, &Json)>,
+) -> Vec<Finding> {
+    let (docs, mut findings) = doc_fields(doc, doc_name);
+
+    for (label, src) in bench_sources {
+        let stem = Path::new(label)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| label.clone());
+        let documented: Vec<&DocField> = docs.iter().filter(|d| d.bench == stem).collect();
+        let emitted = emitted_fields(src);
+        for e in &emitted {
+            if !documented.iter().any(|d| d.norm == e.norm) {
+                findings.push(Finding::new(
+                    label.clone(),
+                    e.line,
+                    RULE_UNDOCUMENTED,
+                    format!(
+                        "bench emits `{}` but the {stem} table in {doc_name} \
+                         has no such row — document it or stop emitting it",
+                        e.raw
+                    ),
+                ));
+            }
+        }
+        for d in &documented {
+            if !emitted.iter().any(|e| e.norm == d.norm) {
+                findings.push(Finding::new(
+                    doc_name,
+                    d.line,
+                    RULE_STALE,
+                    format!(
+                        "documented field `{}` is not emitted anywhere in \
+                         {label} — drop the row or restore the emission",
+                        d.raw
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Third witness: a committed record's keys must all be documented.
+    if let Some((record_name, record)) = bench_record {
+        match record.as_obj() {
+            Ok(obj) => {
+                for key in obj.keys() {
+                    if !docs.iter().any(|d| matches_pattern(key, &d.norm)) {
+                        findings.push(Finding::new(
+                            record_name,
+                            1,
+                            RULE_RECORD,
+                            format!(
+                                "record carries key `{key}` that matches no \
+                                 documented field or pattern in {doc_name}"
+                            ),
+                        ));
+                    }
+                }
+            }
+            Err(_) => findings.push(Finding::new(
+                record_name,
+                1,
+                RULE_RECORD,
+                format!("record must be a JSON object, got {}", record.kind()),
+            )),
+        }
+    }
+
+    findings
+}
+
+/// Tree-wide entry point: EXPERIMENTS.md vs every bench source that calls
+/// `merge_bench_json` (local micro-benches that never touch the record are
+/// exempt), plus the committed BENCH_runtime.json when present.
+pub fn check_tree(root: &Path) -> Vec<Finding> {
+    let doc_path = root.join("EXPERIMENTS.md");
+    let doc = match std::fs::read_to_string(&doc_path) {
+        Ok(d) => d,
+        Err(e) => {
+            return vec![Finding::new(
+                doc_path.display().to_string(),
+                1,
+                RULE_DOC,
+                format!("cannot read: {e}"),
+            )]
+        }
+    };
+    let mut sources = Vec::new();
+    let bench_dir = root.join("rust").join("benches");
+    let mut entries: Vec<_> = std::fs::read_dir(&bench_dir)
+        .into_iter()
+        .flatten()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "rs"))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if let Ok(src) = std::fs::read_to_string(&p) {
+            if src.contains("merge_bench_json(") {
+                sources.push((p.display().to_string(), src));
+            }
+        }
+    }
+    let record_path = root.join("BENCH_runtime.json");
+    let record = std::fs::read_to_string(&record_path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    let record_name = record_path.display().to_string();
+    check_schema(
+        &doc,
+        &doc_path.display().to_string(),
+        &sources,
+        record.as_ref().map(|r| (record_name.as_str(), r)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = "\
+# Experiments
+
+## §BENCH_runtime.json schema
+
+Emitted by `cargo bench --bench bench_runtime`:
+
+| field | units | meaning |
+|-------|-------|---------|
+| `variant` | — | bundle |
+| `fused_step_ms` | ms | step |
+
+Emitted by `cargo bench --bench bench_generate` (merged in):
+
+| field | units | meaning |
+|-------|-------|---------|
+| `gen_variant` | — | bundle |
+| `gen_prefill_L{L}_ms` | ms | per length |
+
+## next section
+";
+
+    const RUNTIME_SRC: &str = r#"
+    let fields = vec![
+        ("variant", Json::str(v)),
+        ("fused_step_ms", Json::num(ms)),
+    ];
+    merge_bench_json(&p, |m| {});
+"#;
+
+    const GEN_SRC: &str = r#"
+    let mut fields = vec![("gen_variant".into(), Json::str(v))];
+    fields.push((format!("gen_prefill_L{l}_ms"), Json::num(ms)));
+    merge_bench_json(&p, |m| {});
+"#;
+
+    fn sources() -> Vec<(String, String)> {
+        vec![
+            ("rust/benches/bench_runtime.rs".into(), RUNTIME_SRC.into()),
+            ("rust/benches/bench_generate.rs".into(), GEN_SRC.into()),
+        ]
+    }
+
+    #[test]
+    fn in_sync_doc_and_sources_are_clean() {
+        let f = check_schema(DOC, "EXPERIMENTS.md", &sources(), None);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn removed_doc_row_flags_the_emission_site() {
+        let doc = DOC.replace("| `fused_step_ms` | ms | step |\n", "");
+        let f = check_schema(&doc, "EXPERIMENTS.md", &sources(), None);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_UNDOCUMENTED);
+        assert!(f[0].file.ends_with("bench_runtime.rs"));
+        assert_eq!(f[0].line, 4); // the fused_step_ms tuple in RUNTIME_SRC
+    }
+
+    #[test]
+    fn bogus_doc_row_is_reported_stale_at_its_line() {
+        let doc = DOC.replace(
+            "| `variant` | — | bundle |",
+            "| `variant` | — | bundle |\n| `made_up_field` | ms | nothing emits this |",
+        );
+        let f = check_schema(&doc, "EXPERIMENTS.md", &sources(), None);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_STALE);
+        assert_eq!(f[0].file, "EXPERIMENTS.md");
+        assert!(f[0].message.contains("made_up_field"));
+        assert_eq!(f[0].line, 10);
+    }
+
+    #[test]
+    fn fields_are_matched_per_bench_table() {
+        // gen_variant documented under bench_generate but emitted from
+        // bench_runtime.rs would be drift in both directions.
+        let swapped = vec![("rust/benches/bench_runtime.rs".into(), GEN_SRC.to_string())];
+        let f = check_schema(DOC, "EXPERIMENTS.md", &swapped, None);
+        assert!(f.iter().any(|f| f.rule == RULE_UNDOCUMENTED), "{f:?}");
+        assert!(f.iter().any(|f| f.rule == RULE_STALE), "{f:?}");
+    }
+
+    #[test]
+    fn record_keys_match_patterns() {
+        let record = Json::parse(
+            r#"{"variant": "t", "gen_prefill_L256_ms": 1.0, "gen_prefill_L_ms": 1.0, "mystery": 2}"#,
+        )
+        .unwrap();
+        let f = check_schema(
+            DOC,
+            "EXPERIMENTS.md",
+            &sources(),
+            Some(("BENCH_runtime.json", &record)),
+        );
+        // L256 matches the pattern; an empty fill and an unknown key do not.
+        let records: Vec<_> = f.iter().filter(|f| f.rule == RULE_RECORD).collect();
+        assert_eq!(records.len(), 2, "{f:?}");
+        assert!(records.iter().any(|f| f.message.contains("gen_prefill_L_ms")));
+        assert!(records.iter().any(|f| f.message.contains("mystery")));
+    }
+
+    #[test]
+    fn missing_section_is_a_finding() {
+        let f = check_schema("# nothing here\n", "EXPERIMENTS.md", &sources(), None);
+        assert!(f.iter().any(|f| f.rule == RULE_DOC), "{f:?}");
+    }
+
+    #[test]
+    fn normalize_and_match() {
+        assert_eq!(normalize("gen_prefill_L{L}_ms"), "gen_prefill_L{}_ms");
+        assert_eq!(normalize("gen_prefill_L{l}_ms"), "gen_prefill_L{}_ms");
+        assert!(matches_pattern("gen_prefill_L512_ms", "gen_prefill_L{}_ms"));
+        assert!(!matches_pattern("gen_prefill_L_ms", "gen_prefill_L{}_ms"));
+        assert!(!matches_pattern("gen_prefill_L9", "gen_prefill_L{}_ms"));
+        assert!(matches_pattern("variant", "variant"));
+        assert!(!matches_pattern("variant2", "variant"));
+    }
+}

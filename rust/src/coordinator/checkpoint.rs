@@ -86,12 +86,14 @@ impl Checkpoint {
         let file_len = f.metadata()?.len();
         let mut r = BufReader::new(f);
         let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
+        r.read_exact(&mut magic)
+            .with_context(|| format!("{}: truncated inside the 16-byte preamble", path.display()))?;
         if &magic != MAGIC {
             bail!("{} is not a ROM checkpoint", path.display());
         }
         let mut len8 = [0u8; 8];
-        r.read_exact(&mut len8)?;
+        r.read_exact(&mut len8)
+            .with_context(|| format!("{}: truncated inside the 16-byte preamble", path.display()))?;
         let hlen = u64::from_le_bytes(len8);
         // Reject a corrupt length prefix before trusting it as an allocation
         // size: the header cannot extend past the file.
@@ -102,7 +104,10 @@ impl Checkpoint {
             );
         }
         let mut hbuf = vec![0u8; hlen as usize];
-        r.read_exact(&mut hbuf)?;
+        r.read_exact(&mut hbuf)
+            .with_context(|| {
+                format!("{}: truncated inside the {hlen}-byte header", path.display())
+            })?;
         let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
         let payload_base = PREAMBLE_LEN + hlen;
         let payload_len = (file_len - payload_base) as usize;
@@ -114,7 +119,8 @@ impl Checkpoint {
                 .get(name)?
                 .as_arr()?
                 .iter()
-                .map(|spec| {
+                .enumerate()
+                .map(|(i, spec)| {
                     let shape: Vec<usize> = spec
                         .get("shape")?
                         .as_arr()?
@@ -130,15 +136,27 @@ impl Checkpoint {
                         .try_fold(4usize, |acc, &d| acc.checked_mul(d))
                         .filter(|&b| b <= payload_len)
                         .ok_or_else(|| {
-                            anyhow::anyhow!("corrupt header: shape {shape:?} overflows payload")
+                            anyhow::anyhow!(
+                                "{}: corrupt header: {name}[{i}] shape {shape:?} overflows payload",
+                                path.display()
+                            )
                         })?;
                     if offset.checked_add(nbytes).map_or(true, |end| end > payload_len) {
-                        bail!("checkpoint payload truncated");
+                        bail!(
+                            "{}: truncated: {name}[{i}] needs {nbytes} bytes at payload \
+                             offset {offset}, but only {payload_len} payload bytes exist",
+                            path.display()
+                        );
                     }
                     r.seek(SeekFrom::Start(payload_base + offset as u64))?;
                     scratch.resize(nbytes, 0);
-                    r.read_exact(&mut scratch)
-                        .context("checkpoint payload truncated")?;
+                    r.read_exact(&mut scratch).with_context(|| {
+                        format!(
+                            "{}: truncated mid-read: {name}[{i}] ({nbytes} bytes at \
+                             payload offset {offset})",
+                            path.display()
+                        )
+                    })?;
                     Tensor::from_le_bytes(&shape, dtype, &scratch)
                 })
                 .collect()
@@ -306,7 +324,13 @@ mod tests {
         // not return short tensors.
         std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
         let err = Checkpoint::load(&path).unwrap_err();
-        assert!(err.to_string().contains("truncated"), "got: {err:#}");
+        let msg = err.to_string();
+        assert!(msg.contains("truncated"), "got: {err:#}");
+        // The error must say WHICH file, WHICH leaf, and WHERE — an operator
+        // staring at a failed restore needs more than "truncated".
+        assert!(msg.contains("trunc.ckpt"), "no path in: {err:#}");
+        assert!(msg.contains("params[2]"), "no leaf in: {err:#}");
+        assert!(msg.contains("offset"), "no offset in: {err:#}");
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -4,6 +4,12 @@
 //! and AOT-lower it to HLO-text artifacts; this crate loads them via PJRT and
 //! owns everything else — config, data pipeline, train loop, schedules,
 //! telemetry, eval, checkpoints, experiments. Python never runs at runtime.
+// `--cfg loom` (set via RUSTFLAGS, not a Cargo feature, so rustc's
+// check-cfg tables don't know it) swaps `substrate::sync` to loom's
+// model-checked primitives; `unknown_lints` covers toolchains predating
+// the `unexpected_cfgs` lint.
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
 pub mod analysis;
 pub mod config;
 pub mod coordinator;

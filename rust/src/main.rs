@@ -11,11 +11,12 @@
 //! serve <variant>        continuous-batching generation service
 //! probes <variant>       downstream probe scores (Table 2 stand-in)
 //! experiment <id>        regenerate a paper table/figure
+//! analyze                offline static checks: manifest contract, bench
+//!                        schema drift, source lint
 //! ```
 
 use std::collections::VecDeque;
 use std::io::BufRead;
-use std::sync::mpsc::TryRecvError;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -38,6 +39,8 @@ use rom::info;
 use rom::runtime::artifact::Bundle;
 use rom::runtime::session::Session;
 use rom::substrate::cli::Args;
+use rom::substrate::pool::line_pump;
+use rom::substrate::sync::mpsc::TryRecvError;
 
 const USAGE: &str = "\
 rom — Routing Mamba training coordinator
@@ -76,10 +79,20 @@ usage: rom <subcommand> [options]
                                     --jobs N trains N variants in parallel
                                     (default from ROM_JOBS, else 1; rows are
                                     byte-identical to a serial run)
+  analyze [--manifest FILE] [--golden]
+                                    offline static checks, no device needed:
+                                    manifest contract (golden fixtures +
+                                    artifacts/ when present), BENCH schema
+                                    vs EXPERIMENTS.md drift, source lint.
+                                    --golden checks only the committed
+                                    fixtures; --manifest FILE checks one
+                                    manifest. Findings print as
+                                    file:line: [rule] message; exits
+                                    non-zero if any
 ";
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["accum", "quiet", "help"]);
+    let args = Args::from_env(&["accum", "quiet", "help", "golden"]);
     if args.has_flag("help") {
         print!("{USAGE}");
         return Ok(());
@@ -93,6 +106,7 @@ fn main() -> Result<()> {
         Some("serve") => serve_cmd(&args),
         Some("probes") => probes(&args),
         Some("experiment") => experiment(&args),
+        Some("analyze") => analyze_cmd(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -117,6 +131,59 @@ fn variant_arg(args: &Args) -> Result<String> {
 /// A required `--key value` option, with a USAGE-pointing error when absent.
 fn required_opt<'a>(args: &'a Args, key: &str) -> Result<&'a str> {
     args.get(key).ok_or_else(|| usage_err(format!("--{key} is required")))
+}
+
+/// `rom analyze` — the offline static-analysis gate. Default run covers the
+/// committed golden manifests, any freshly emitted `artifacts/*/manifest.json`,
+/// the BENCH schema/doc diff, and the source lint; `--golden` narrows to the
+/// fixtures, `--manifest FILE` to a single file.
+fn analyze_cmd(args: &Args) -> Result<()> {
+    use rom::analysis::{contract, lint, repo_root, schema, Finding};
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut checked = 0usize;
+
+    if let Some(path) = args.get("manifest") {
+        findings.extend(contract::check_manifest_file(std::path::Path::new(path)));
+        checked += 1;
+    } else {
+        let root = repo_root();
+        let goldens = contract::golden_manifests(&root);
+        if goldens.is_empty() {
+            bail!(
+                "no golden manifests under {} — the contract pass has nothing \
+                 to check",
+                root.join("rust/tests/golden").display()
+            );
+        }
+        for p in &goldens {
+            findings.extend(contract::check_manifest_file(p));
+            checked += 1;
+        }
+        if !args.has_flag("golden") {
+            for p in contract::artifact_manifests(&artifacts_root()) {
+                findings.extend(contract::check_manifest_file(&p));
+                checked += 1;
+            }
+            findings.extend(schema::check_tree(&root));
+            findings.extend(lint::lint_tree(&root));
+        }
+    }
+
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    if !findings.is_empty() {
+        bail!("analyze: {} finding(s)", findings.len());
+    }
+    let scope = if args.get("manifest").is_some() || args.has_flag("golden") {
+        "contract only"
+    } else {
+        "contract + schema + lint"
+    };
+    println!("analyze: clean ({checked} manifest(s), {scope})");
+    Ok(())
 }
 
 fn list() -> Result<()> {
@@ -309,15 +376,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         )),
         None => Box::new(std::io::BufReader::new(std::io::stdin())),
     };
-    let (tx, rx) = std::sync::mpsc::sync_channel::<String>(cfg.queue_cap);
-    let reader = std::thread::spawn(move || -> std::io::Result<()> {
-        for line in source.lines() {
-            if tx.send(line?).is_err() {
-                break; // pump gone — stop reading
-            }
-        }
-        Ok(())
-    });
+    let (rx, reader) = line_pump(source, cfg.queue_cap);
 
     let mut pending: VecDeque<ServeRequest> = VecDeque::new();
     let mut eof = false;

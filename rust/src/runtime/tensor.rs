@@ -337,6 +337,29 @@ mod tests {
     }
 
     #[test]
+    fn le_bytes_reinterpretation_is_alignment_safe() {
+        // Miri target for the two `unsafe` blocks above: the little-endian
+        // fast path views scalar memory as bytes (write) and writes bytes
+        // into freshly allocated scalar memory (read). Drive the read from
+        // a source window at an odd offset inside a larger buffer, and both
+        // directions with a zero-length payload, so `cargo miri test`
+        // checks the raw-pointer arithmetic at the awkward edges.
+        let t = Tensor::f32(&[3], vec![1.0, -2.0, 3.5]);
+        let mut buf = vec![0xAAu8; 1]; // 1-byte prefix: payload starts unaligned
+        t.write_le_bytes(&mut buf).unwrap();
+        assert_eq!(buf.len(), 1 + t.byte_len());
+        let back = Tensor::from_le_bytes(&[3], DType::F32, &buf[1..]).unwrap();
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+
+        let empty = Tensor::i32(&[0], vec![]);
+        let mut ebuf = Vec::new();
+        empty.write_le_bytes(&mut ebuf).unwrap();
+        assert!(ebuf.is_empty());
+        let eback = Tensor::from_le_bytes(&[0], DType::I32, &ebuf).unwrap();
+        assert_eq!(eback.len(), 0);
+    }
+
+    #[test]
     fn literal_from_slice_matches_tensor_path() {
         let data = vec![7i32, 8, 9, 10, 11, 12];
         let lit = literal_from_i32(&[2, 3], &data).unwrap();

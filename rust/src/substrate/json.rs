@@ -9,6 +9,12 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// Maximum container nesting accepted by the parser. Every document this
+/// repo exchanges (manifests, configs, checkpoint headers, bench records)
+/// nests single digits deep; the cap turns adversarially deep input into a
+/// parse error instead of a recursion-driven stack overflow.
+const MAX_DEPTH: usize = 128;
+
 /// A parsed JSON value. Objects use BTreeMap so serialization is
 /// deterministic (stable key order) — the checkpoint format relies on this.
 #[derive(Debug, Clone, PartialEq)]
@@ -113,7 +119,7 @@ impl Json {
     // ---- parse -------------------------------------------------------------
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let b = s.as_bytes();
-        let mut p = Parser { b, i: 0 };
+        let mut p = Parser { b, i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -121,6 +127,16 @@ impl Json {
             return Err(JsonError::Parse(p.i, "trailing content".into()));
         }
         Ok(v)
+    }
+
+    /// Parse raw bytes, reporting invalid UTF-8 as a positioned parse error.
+    /// Use this for files that may be corrupt (manifests, bench records) —
+    /// `parse(&str)` can never see bad UTF-8 because the type rules it out,
+    /// so readers going through `read_to_string` lose the byte offset.
+    pub fn parse_bytes(b: &[u8]) -> Result<Json, JsonError> {
+        let s = std::str::from_utf8(b)
+            .map_err(|e| JsonError::Parse(e.valid_up_to(), "invalid utf-8".into()))?;
+        Json::parse(s)
     }
 
     // ---- serialize ---------------------------------------------------------
@@ -194,9 +210,18 @@ fn write_escaped(s: &str, out: &mut String) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return self.err(&format!("nesting deeper than {MAX_DEPTH}"));
+        }
+        Ok(())
+    }
+
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -319,6 +344,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let v = self.array_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn array_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut out = Vec::new();
         self.ws();
@@ -345,6 +377,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let v = self.object_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn object_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut out = BTreeMap::new();
         self.ws();
@@ -359,6 +398,12 @@ impl<'a> Parser<'a> {
             self.expect(b':')?;
             self.ws();
             let v = self.value()?;
+            if out.contains_key(&k) {
+                // Last-wins would silently drop data; every writer in this
+                // repo (python json.dump, our BTreeMap serializer) emits
+                // unique keys, so a duplicate always means corruption.
+                return self.err(&format!("duplicate key {k:?}"));
+            }
             out.insert(k, v);
             self.ws();
             if self.i >= self.b.len() {
@@ -422,6 +467,45 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn parse_bytes_matches_parse_on_valid_input() {
+        let src = r#"{"a": [1, 2], "b": "x"}"#;
+        assert_eq!(Json::parse_bytes(src.as_bytes()).unwrap(), Json::parse(src).unwrap());
+    }
+
+    #[test]
+    fn rejects_invalid_utf8_with_byte_offset() {
+        // 0xFF can never appear in well-formed UTF-8; it sits at byte 8.
+        let bytes = b"{\"k\": \"a\xFFb\"}";
+        let err = Json::parse_bytes(bytes).unwrap_err().to_string();
+        assert!(err.contains("invalid utf-8"), "{err}");
+        assert!(err.contains("byte 8"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        let err = Json::parse(r#"{"a": 1, "a": 2}"#).unwrap_err().to_string();
+        assert!(err.contains("duplicate key \"a\""), "{err}");
+        // Nested objects are checked too.
+        assert!(Json::parse(r#"{"o": {"x": 1, "x": 1}}"#).is_err());
+        // Same key at different depths is fine.
+        assert!(Json::parse(r#"{"a": {"a": 1}}"#).is_ok());
+    }
+
+    #[test]
+    fn rejects_deep_nesting_instead_of_overflowing() {
+        let deep = "[".repeat(500) + &"]".repeat(500);
+        let err = Json::parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nesting deeper than"), "{err}");
+
+        let mixed = "{\"a\":".repeat(300) + "1" + &"}".repeat(300);
+        assert!(Json::parse(&mixed).is_err());
+
+        // Well inside the cap still parses.
+        let ok = "[".repeat(64) + "1" + &"]".repeat(64);
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

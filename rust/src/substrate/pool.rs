@@ -1,11 +1,21 @@
 //! Fixed-size thread pool + bounded prefetch channels (tokio is not in the
 //! offline crate set; threads + std::sync::mpsc satisfy the coordinator's
-//! needs: data prefetch, device encode, and telemetry I/O off the training
-//! hot path).
+//! needs: data prefetch, device encode, request-line pumping, and telemetry
+//! I/O off the training hot path).
+//!
+//! This module is the repo's single home for spawned threads (the lint pass
+//! of `rom analyze` enforces it; `std::thread::scope` elsewhere is fine —
+//! scoped threads cannot leak). Every primitive here comes from
+//! `substrate::sync`, the shim that swaps in loom's model-checked
+//! `Mutex`/`Condvar`/`thread` under `RUSTFLAGS="--cfg loom"`; see
+//! `tests/loom_pool.rs` for the exhaustive submit/join/drop interleaving
+//! models of `ThreadPool`, `Prefetcher` and `Pipeline`.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::io::BufRead;
+
+use crate::substrate::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use crate::substrate::sync::thread::JoinHandle;
+use crate::substrate::sync::{thread, Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -56,7 +66,7 @@ impl ThreadPool {
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let in_flight = Arc::clone(&in_flight);
-                std::thread::spawn(move || loop {
+                thread::spawn(move || loop {
                     let job = {
                         let guard = rx.lock().unwrap();
                         guard.recv()
@@ -103,7 +113,7 @@ impl Drop for ThreadPool {
 /// host-side batch assembly with device execution.
 pub struct Prefetcher<T: Send + 'static> {
     rx: Receiver<T>,
-    _worker: JoinHandle<()>,
+    worker: Option<JoinHandle<()>>,
 }
 
 impl<T: Send + 'static> Prefetcher<T> {
@@ -112,19 +122,32 @@ impl<T: Send + 'static> Prefetcher<T> {
         F: FnMut() -> Option<T> + Send + 'static,
     {
         let (tx, rx) = sync_channel(depth.max(1));
-        let worker = std::thread::spawn(move || {
+        let worker = thread::spawn(move || {
             while let Some(item) = make() {
                 if tx.send(item).is_err() {
                     break; // consumer dropped
                 }
             }
         });
-        Prefetcher { rx, _worker: worker }
+        Prefetcher { rx, worker: Some(worker) }
     }
 
     /// Next prefetched item; None when the producer is exhausted.
     pub fn next(&self) -> Option<T> {
         self.rx.recv().ok()
+    }
+}
+
+impl<T: Send + 'static> Drop for Prefetcher<T> {
+    fn drop(&mut self) {
+        // A producer blocked in `send` wakes with Err the moment `rx` above
+        // goes away, so joining here cannot hang; it bounds the wait to at
+        // most one in-progress `make()` and leaves no detached thread.
+        let worker = self.worker.take();
+        drop(std::mem::replace(&mut self.rx, sync_channel(1).1));
+        if let Some(w) = worker {
+            let _ = w.join();
+        }
     }
 }
 
@@ -137,8 +160,8 @@ impl<T: Send + 'static> Prefetcher<T> {
 /// per stage, FIFO channels).
 pub struct Pipeline<T: Send + 'static> {
     rx: Receiver<T>,
-    _stage1: JoinHandle<()>,
-    _stage2: JoinHandle<()>,
+    stage1: Option<JoinHandle<()>>,
+    stage2: Option<JoinHandle<()>>,
 }
 
 impl<T: Send + 'static> Pipeline<T> {
@@ -151,21 +174,21 @@ impl<T: Send + 'static> Pipeline<T> {
         let depth = depth.max(1);
         let (tx1, rx1) = sync_channel::<U>(depth);
         let (tx2, rx2) = sync_channel::<T>(depth);
-        let stage1 = std::thread::spawn(move || {
+        let stage1 = thread::spawn(move || {
             while let Some(item) = make() {
                 if tx1.send(item).is_err() {
                     break; // stage 2 gone: consumer dropped
                 }
             }
         });
-        let stage2 = std::thread::spawn(move || {
+        let stage2 = thread::spawn(move || {
             while let Ok(item) = rx1.recv() {
                 if tx2.send(convert(item)).is_err() {
                     break; // consumer dropped
                 }
             }
         });
-        Pipeline { rx: rx2, _stage1: stage1, _stage2: stage2 }
+        Pipeline { rx: rx2, stage1: Some(stage1), stage2: Some(stage2) }
     }
 
     /// Next device-ready item; None when stage 1 is exhausted and the
@@ -175,7 +198,50 @@ impl<T: Send + 'static> Pipeline<T> {
     }
 }
 
-#[cfg(test)]
+impl<T: Send + 'static> Drop for Pipeline<T> {
+    fn drop(&mut self) {
+        // Shutdown ordering: dropping the consumer end unblocks stage 2
+        // (send Err), whose exit drops rx1 and unblocks stage 1 in turn —
+        // so joining 2 then 1 always terminates, with no detached threads.
+        let (s1, s2) = (self.stage1.take(), self.stage2.take());
+        drop(std::mem::replace(&mut self.rx, sync_channel(1).1));
+        if let Some(s) = s2 {
+            let _ = s.join();
+        }
+        if let Some(s) = s1 {
+            let _ = s.join();
+        }
+    }
+}
+
+/// Reader-thread line pump: stream lines from a reader over a bounded
+/// channel, so a slow consumer backpressures the producer instead of
+/// buffering unboundedly. This is the stdin/file request pump `rom serve`
+/// uses; it lives here so every spawned thread in the crate stays inside
+/// this module (the `rom analyze` lint enforces that confinement).
+///
+/// The pump stops at EOF or on the first I/O error (returned through the
+/// handle); dropping the receiver stops it at the next line.
+pub fn line_pump(
+    source: Box<dyn BufRead + Send>,
+    depth: usize,
+) -> (Receiver<String>, JoinHandle<std::io::Result<()>>) {
+    let (tx, rx) = sync_channel::<String>(depth.max(1));
+    let handle = thread::spawn(move || -> std::io::Result<()> {
+        for line in source.lines() {
+            if tx.send(line?).is_err() {
+                break; // pump gone — stop reading
+            }
+        }
+        Ok(())
+    });
+    (rx, handle)
+}
+
+// Unit tests run real std threads, so they are meaningless (and would
+// panic outside `loom::model`) in a `--cfg loom` build; the loom models
+// live in tests/loom_pool.rs.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, Ordering};
@@ -300,6 +366,27 @@ mod tests {
             "stage 1 never ran ahead of the consumer"
         );
         while pl.next().is_some() {}
+    }
+
+    #[test]
+    fn line_pump_streams_lines_then_eofs() {
+        let (rx, h) = line_pump(Box::new(std::io::Cursor::new(b"a\nbb\nccc\n".to_vec())), 2);
+        assert_eq!(rx.recv().unwrap(), "a");
+        assert_eq!(rx.recv().unwrap(), "bb");
+        assert_eq!(rx.recv().unwrap(), "ccc");
+        assert!(rx.recv().is_err()); // EOF: pump exits, channel disconnects
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn line_pump_stops_when_consumer_drops() {
+        // 10k lines through a depth-1 channel: the pump must exit on send
+        // Err after the receiver is dropped, not write into the void.
+        let big: String = (0..10_000).map(|i| format!("{i}\n")).collect();
+        let (rx, h) = line_pump(Box::new(std::io::Cursor::new(big.into_bytes())), 1);
+        assert_eq!(rx.recv().unwrap(), "0");
+        drop(rx);
+        h.join().unwrap().unwrap();
     }
 
     #[test]

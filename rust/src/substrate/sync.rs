@@ -1,0 +1,169 @@
+//! Sync-primitive shim: `std::sync`/`std::thread` by default, loom's
+//! model-checked replacements under `--cfg loom`.
+//!
+//! `substrate::pool` (and anything else whose interleavings we want to
+//! model-check) imports its primitives from here instead of `std`. A normal
+//! build re-exports the std types verbatim — zero behavior change, zero
+//! cost. A build with `RUSTFLAGS="--cfg loom"` swaps in `loom::sync` /
+//! `loom::thread`, and `tests/loom_pool.rs` then explores every
+//! interleaving of the pool's submit/join/drop protocols under
+//! `loom::model`.
+//!
+//! loom has no `mpsc::sync_channel`, so under `cfg(loom)` the `mpsc`
+//! submodule provides a hand-rolled bounded channel built on the loom
+//! `Mutex`/`Condvar` with the same interface and disconnect semantics as
+//! `std::sync::mpsc`: `send` blocks when full and errors once the receiver
+//! is gone, `recv` drains buffered items before reporting disconnection,
+//! dropping the receiver wakes blocked senders. The pool *logic* (channel
+//! close ordering, `InFlight` counting, worker shutdown) is what the models
+//! check; the production channel itself stays `std::sync::mpsc`.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex};
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+pub use loom::thread;
+
+pub mod mpsc {
+    #[cfg(not(loom))]
+    pub use std::sync::mpsc::{
+        sync_channel, Receiver, RecvError, SendError, SyncSender, TryRecvError,
+    };
+
+    #[cfg(loom)]
+    pub use loom_chan::{
+        sync_channel, Receiver, RecvError, SendError, SyncSender, TryRecvError,
+    };
+
+    /// Bounded mpsc over loom primitives (see module docs). Interface and
+    /// disconnect behavior mirror `std::sync::mpsc::sync_channel`.
+    #[cfg(loom)]
+    mod loom_chan {
+        use super::super::{Arc, Condvar, Mutex};
+        use std::collections::VecDeque;
+
+        #[derive(Debug)]
+        pub struct SendError<T>(pub T);
+
+        #[derive(Debug, PartialEq, Eq)]
+        pub struct RecvError;
+
+        #[derive(Debug, PartialEq, Eq)]
+        pub enum TryRecvError {
+            Empty,
+            Disconnected,
+        }
+
+        struct State<T> {
+            q: VecDeque<T>,
+            cap: usize,
+            senders: usize,
+            receiver_alive: bool,
+        }
+
+        struct Chan<T> {
+            state: Mutex<State<T>>,
+            not_empty: Condvar,
+            not_full: Condvar,
+        }
+
+        pub struct SyncSender<T>(Arc<Chan<T>>);
+
+        pub struct Receiver<T>(Arc<Chan<T>>);
+
+        pub fn sync_channel<T>(cap: usize) -> (SyncSender<T>, Receiver<T>) {
+            let chan = Arc::new(Chan {
+                state: Mutex::new(State {
+                    q: VecDeque::new(),
+                    cap: cap.max(1),
+                    senders: 1,
+                    receiver_alive: true,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+            });
+            (SyncSender(Arc::clone(&chan)), Receiver(chan))
+        }
+
+        impl<T> SyncSender<T> {
+            pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+                let mut s = self.0.state.lock().unwrap();
+                while s.receiver_alive && s.q.len() >= s.cap {
+                    s = self.0.not_full.wait(s).unwrap();
+                }
+                if !s.receiver_alive {
+                    return Err(SendError(value));
+                }
+                s.q.push_back(value);
+                drop(s);
+                self.0.not_empty.notify_one();
+                Ok(())
+            }
+        }
+
+        impl<T> Clone for SyncSender<T> {
+            fn clone(&self) -> Self {
+                self.0.state.lock().unwrap().senders += 1;
+                SyncSender(Arc::clone(&self.0))
+            }
+        }
+
+        impl<T> Drop for SyncSender<T> {
+            fn drop(&mut self) {
+                let mut s = self.0.state.lock().unwrap();
+                s.senders -= 1;
+                let last = s.senders == 0;
+                drop(s);
+                if last {
+                    // Blocked receivers must observe the disconnect.
+                    self.0.not_empty.notify_all();
+                }
+            }
+        }
+
+        impl<T> Receiver<T> {
+            pub fn recv(&self) -> Result<T, RecvError> {
+                let mut s = self.0.state.lock().unwrap();
+                loop {
+                    if let Some(v) = s.q.pop_front() {
+                        drop(s);
+                        self.0.not_full.notify_one();
+                        return Ok(v);
+                    }
+                    if s.senders == 0 {
+                        return Err(RecvError);
+                    }
+                    s = self.0.not_empty.wait(s).unwrap();
+                }
+            }
+
+            pub fn try_recv(&self) -> Result<T, TryRecvError> {
+                let mut s = self.0.state.lock().unwrap();
+                if let Some(v) = s.q.pop_front() {
+                    drop(s);
+                    self.0.not_full.notify_one();
+                    return Ok(v);
+                }
+                if s.senders == 0 {
+                    Err(TryRecvError::Disconnected)
+                } else {
+                    Err(TryRecvError::Empty)
+                }
+            }
+        }
+
+        impl<T> Drop for Receiver<T> {
+            fn drop(&mut self) {
+                let mut s = self.0.state.lock().unwrap();
+                s.receiver_alive = false;
+                drop(s);
+                // Blocked senders must observe the disconnect.
+                self.0.not_full.notify_all();
+            }
+        }
+    }
+}

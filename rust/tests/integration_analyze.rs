@@ -1,0 +1,224 @@
+//! Self-test of the `rom analyze` passes against the real tree.
+//!
+//! Two halves:
+//!
+//! * the tree as committed must be CLEAN — golden manifests satisfy the
+//!   contract, the bench field universe matches EXPERIMENTS.md, the lint
+//!   finds nothing;
+//! * seeded corruption must be DETECTED with a useful file/line — a
+//!   mutated state shape, a dropped/fractional field, an unknowable decode
+//!   status, a params/total mismatch, a drifted schema row, a smuggled
+//!   `.unwrap()` / bare spawn / uncommented `unsafe` / direct bench write.
+//!
+//! The corruption fixtures live in string literals, which the lint strips
+//! before matching — so this file itself stays clean under `lint_tree`.
+
+use rom::analysis::{contract, lint, repo_root, schema};
+
+fn golden_text(name: &str) -> (String, String) {
+    let path = repo_root()
+        .join("rust/tests/golden")
+        .join(format!("{name}.manifest.json"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden fixture {}: {e}", path.display()));
+    (path.display().to_string(), text)
+}
+
+// ---------------------------------------------------------------------------
+// Clean tree
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_manifests_satisfy_the_contract() {
+    let goldens = contract::golden_manifests(&repo_root());
+    assert!(
+        goldens.len() >= 3,
+        "expected the committed mamba/samba/llama fixtures, found {goldens:?}"
+    );
+    for p in &goldens {
+        let f = contract::check_manifest_file(p);
+        assert!(f.is_empty(), "{} has findings: {f:#?}", p.display());
+    }
+}
+
+#[test]
+fn bench_schema_matches_experiments_doc() {
+    let f = schema::check_tree(&repo_root());
+    assert!(f.is_empty(), "schema drift: {f:#?}");
+}
+
+#[test]
+fn source_lint_is_clean_on_the_tree() {
+    let f = lint::lint_tree(&repo_root());
+    assert!(f.is_empty(), "lint findings: {f:#?}");
+}
+
+// ---------------------------------------------------------------------------
+// Seeded corruption: manifest contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutated_state_shape_is_detected_with_line() {
+    let (label, text) = golden_text("rom-tiny");
+    // decode.state[1] (blocks.0.conv) shape [2, 3, 128] -> [2, 4, 128]; the
+    // 5-space indent is unique to state shapes, so this hits the first leaf.
+    let bad = text.replacen("\n     3,\n     128", "\n     4,\n     128", 1);
+    assert_ne!(bad, text, "mutation anchor not found");
+    let f = contract::check_manifest_bytes(&label, bad.as_bytes());
+    let hit = f
+        .iter()
+        .find(|f| f.rule == "contract/state-mirror")
+        .unwrap_or_else(|| panic!("no state-mirror finding in {f:#?}"));
+    assert!(hit.message.contains("decode.state[1]"), "{hit}");
+    assert!(
+        (30..=50).contains(&hit.line),
+        "finding should point into the decode.state block, got {hit}"
+    );
+}
+
+#[test]
+fn dropped_required_field_is_detected() {
+    let (label, text) = golden_text("rom-tiny");
+    let bad = text.replacen(" \"batch_size\": 8,\n", "", 1);
+    assert_ne!(bad, text);
+    let f = contract::check_manifest_bytes(&label, bad.as_bytes());
+    assert!(
+        f.iter().any(|f| f.rule == "contract/field" && f.message.contains("batch_size")),
+        "{f:#?}"
+    );
+}
+
+#[test]
+fn fractional_count_is_detected_not_truncated() {
+    let (label, text) = golden_text("rom-tiny");
+    let bad = text.replacen(" \"batch_size\": 8,", " \"batch_size\": 8.5,", 1);
+    assert_ne!(bad, text);
+    let f = contract::check_manifest_bytes(&label, bad.as_bytes());
+    let hit = f
+        .iter()
+        .find(|f| f.message.contains("integer-valued"))
+        .unwrap_or_else(|| panic!("no truncation finding in {f:#?}"));
+    assert_eq!(hit.line, 22, "top-level batch_size sits on line 22: {hit}");
+}
+
+#[test]
+fn unknowable_decode_status_is_detected() {
+    let (label, text) = golden_text("llama");
+    let start = text.find("\"decode_unsupported\":").expect("anchor");
+    let end = start + text[start..].find('\n').expect("line end");
+    let mut bad = text.clone();
+    bad.replace_range(start..end, "\"decode_unsupported\": null,");
+    let f = contract::check_manifest_bytes(&label, bad.as_bytes());
+    assert!(
+        f.iter().any(|f| f.rule == "contract/decode" && f.message.contains("both null")),
+        "{f:#?}"
+    );
+}
+
+#[test]
+fn param_total_mismatch_is_detected() {
+    let (label, text) = golden_text("rom-tiny");
+    let bad = text.replacen("\"total_params\": 853312", "\"total_params\": 853313", 1);
+    assert_ne!(bad, text);
+    let f = contract::check_manifest_bytes(&label, bad.as_bytes());
+    let hit = f
+        .iter()
+        .find(|f| f.rule == "contract/analysis")
+        .unwrap_or_else(|| panic!("no analysis finding in {f:#?}"));
+    assert!(hit.message.contains("sum to 853312"), "{hit}");
+    assert_eq!(hit.line, 6, "total_params sits on line 6: {hit}");
+}
+
+// ---------------------------------------------------------------------------
+// Seeded corruption: schema drift (both directions)
+// ---------------------------------------------------------------------------
+
+fn real_doc_and_benches() -> (String, Vec<(String, String)>) {
+    let root = repo_root();
+    let doc = std::fs::read_to_string(root.join("EXPERIMENTS.md")).expect("EXPERIMENTS.md");
+    let benches = ["bench_runtime", "bench_generate"]
+        .iter()
+        .map(|b| {
+            let p = root.join("rust/benches").join(format!("{b}.rs"));
+            (p.display().to_string(), std::fs::read_to_string(&p).expect("bench source"))
+        })
+        .collect();
+    (doc, benches)
+}
+
+#[test]
+fn removed_schema_row_fails_toward_the_emitter() {
+    let (doc, benches) = real_doc_and_benches();
+    let row_start = doc.find("| `fused_step_ms`").expect("row anchor");
+    let row_end = row_start + doc[row_start..].find('\n').expect("row end") + 1;
+    let mut doctored = doc.clone();
+    doctored.replace_range(row_start..row_end, "");
+    let f = schema::check_schema(&doctored, "EXPERIMENTS.md", &benches, None);
+    let hit = f
+        .iter()
+        .find(|f| f.rule == schema::RULE_UNDOCUMENTED)
+        .unwrap_or_else(|| panic!("no undocumented finding in {f:#?}"));
+    assert!(hit.file.ends_with("bench_runtime.rs"), "{hit}");
+    assert!(hit.message.contains("fused_step_ms"), "{hit}");
+    assert!(hit.line > 1, "{hit}");
+}
+
+#[test]
+fn bogus_schema_row_fails_toward_the_doc() {
+    let (doc, benches) = real_doc_and_benches();
+    let doctored = doc.replacen(
+        "| `variant`",
+        "| `imaginary_metric_ms` | ms | never emitted |\n| `variant`",
+        1,
+    );
+    assert_ne!(doctored, doc);
+    let f = schema::check_schema(&doctored, "EXPERIMENTS.md", &benches, None);
+    let hit = f
+        .iter()
+        .find(|f| f.rule == schema::RULE_STALE)
+        .unwrap_or_else(|| panic!("no stale finding in {f:#?}"));
+    assert_eq!(hit.file, "EXPERIMENTS.md");
+    assert!(hit.message.contains("imaginary_metric_ms"), "{hit}");
+}
+
+// ---------------------------------------------------------------------------
+// Seeded corruption: lint
+// ---------------------------------------------------------------------------
+
+#[test]
+fn smuggled_violations_are_detected_with_file_and_line() {
+    let fixtures = vec![
+        (
+            "rust/src/coordinator/smuggled.rs".to_string(),
+            "fn f() {\n    let x = g().unwrap();\n}\n".to_string(),
+        ),
+        (
+            "rust/src/data/smuggled.rs".to_string(),
+            "fn f() {\n    std::thread::spawn(|| {});\n}\n".to_string(),
+        ),
+        (
+            "rust/src/runtime/smuggled.rs".to_string(),
+            "fn f(p: *const u8) {\n    let _ = unsafe { *p };\n}\n".to_string(),
+        ),
+        (
+            "rust/benches/smuggled.rs".to_string(),
+            "fn f(d: &std::path::Path) {\n    std::fs::write(d.join(\"BENCH_runtime.json\"), b\"{}\").ok();\n}\n"
+                .to_string(),
+        ),
+    ];
+    let f = lint::lint_sources(&fixtures);
+    for (rule, file) in [
+        (lint::RULE_UNWRAP, "coordinator/smuggled.rs"),
+        (lint::RULE_SPAWN, "data/smuggled.rs"),
+        (lint::RULE_SAFETY, "runtime/smuggled.rs"),
+        (lint::RULE_BENCH_WRITE, "benches/smuggled.rs"),
+    ] {
+        let hit = f
+            .iter()
+            .find(|f| f.rule == rule)
+            .unwrap_or_else(|| panic!("no {rule} finding in {f:#?}"));
+        assert!(hit.file.ends_with(file), "{hit}");
+        assert_eq!(hit.line, 2, "each fixture plants its violation on line 2: {hit}");
+    }
+    assert_eq!(f.len(), 4, "exactly one finding per fixture: {f:#?}");
+}

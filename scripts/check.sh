@@ -16,6 +16,12 @@ fi
 
 cargo build --release
 cargo test -q
+# Offline static-analysis gate: manifest contract on the committed golden
+# fixtures (+ any freshly emitted artifacts/), BENCH_runtime.json schema
+# drift against EXPERIMENTS.md (both directions), and the source lint
+# (bench-write/thread-spawn confinement, coordinator unwraps, SAFETY
+# comments). Exits non-zero on any finding.
+cargo run --release --quiet -- analyze
 # Lint gate covers every target (lib, bin, benches, tests, examples); any
 # warning is an error. Skips gracefully where the clippy component is absent.
 if cargo clippy --version >/dev/null 2>&1; then
