@@ -1,10 +1,11 @@
 //! Runtime micro-benchmarks (§Perf): artifact compile latency, fused-step
 //! latency, eval latency, host<->literal conversion cost, the grad-accum
 //! path vs the fused path, checkpoint save/load, the parallel variant
-//! sweep (serial vs scheduler workers), and the continuous-batching serve
-//! loop (admission-to-first-token and per-token service latency). These are
-//! the numbers the L3 optimization loop iterates against (EXPERIMENTS.md
-//! §Perf L3 log).
+//! sweep (serial vs scheduler workers), data-parallel training (dp=1
+//! baseline vs dp=K replicas with host-side gradient reduction), and the
+//! continuous-batching serve loop (admission-to-first-token and per-token
+//! service latency). These are the numbers the L3 optimization loop
+//! iterates against (EXPERIMENTS.md §Perf L3 log).
 //!
 //! Besides the human-readable report, this bench emits machine-readable
 //! `BENCH_runtime.json` at the repo root (override the path with
@@ -15,8 +16,10 @@
 
 use std::sync::Arc;
 
+use rom::config::TrainCfg;
 use rom::coordinator::checkpoint::Checkpoint;
 use rom::coordinator::serve::{Engine, Request as ServeRequest, ServeCfg, Submit};
+use rom::coordinator::trainer::{TrainReport, Trainer};
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::loader::Loader;
 use rom::experiments::harness::{artifacts_root, have_variant, RunSpec};
@@ -243,6 +246,74 @@ fn main() {
         }
     }
 
+    // Data-parallel training: the dp driver's scaling win. dp=1 baseline
+    // vs dp=ROM_DP_WORLD replicas at the SAME global batch — the reduced
+    // per-replica shard plus host-side rank-ordered gradient reduction must
+    // produce bit-identical losses, so the comparison below is pure
+    // throughput. A mismatch or a failed run reports loudly and omits only
+    // the dp_* fields (same isolation as the sweep section above).
+    let mut dp_fields: Vec<(&str, Json)> = Vec::new();
+    {
+        let dp_world = env_u64("ROM_DP_WORLD", 2).max(2) as usize;
+        let dp_steps = env_u64("ROM_DP_STEPS", 12).max(1);
+        if man.batch_size % dp_world != 0 {
+            eprintln!(
+                "dp section skipped: batch {} not divisible by dp world {dp_world}",
+                man.batch_size
+            );
+        } else {
+            println!("== data-parallel: dp=1 vs dp={dp_world}, {dp_steps} steps ==");
+            let run_dp = |world: usize| -> anyhow::Result<TrainReport> {
+                let cfg = TrainCfg {
+                    steps: dp_steps,
+                    max_lr: 3e-3,
+                    log_every: 0,
+                    ..TrainCfg::default()
+                };
+                let mut t = Trainer::new(Arc::clone(&bundle), cfg);
+                t.quiet = true;
+                t.final_eval = false;
+                t.dp = Some(world);
+                t.run()
+            };
+            match (run_dp(1), run_dp(dp_world)) {
+                (Ok(base), Ok(par)) => {
+                    if base.final_loss.to_bits() != par.final_loss.to_bits() {
+                        eprintln!(
+                            "dp section omitted from BENCH json: determinism mismatch \
+                             (dp=1 loss {} vs dp={dp_world} loss {})",
+                            base.final_loss, par.final_loss
+                        );
+                    } else {
+                        let speedup = par.tokens_per_sec / base.tokens_per_sec.max(1e-9);
+                        println!(
+                            "dp=1 {:.0} tok/s, dp={dp_world} {:.0} tok/s -> {speedup:.2}x \
+                             (losses bit-identical)",
+                            base.tokens_per_sec, par.tokens_per_sec
+                        );
+                        dp_fields.push(("dp_world", Json::num(dp_world as f64)));
+                        dp_fields
+                            .push(("dp_baseline_tokens_per_sec", Json::num(base.tokens_per_sec)));
+                        dp_fields.push(("dp_tokens_per_sec", Json::num(par.tokens_per_sec)));
+                        dp_fields.push(("dp_speedup", Json::num(speedup)));
+                        if let Some(st) = &par.dp_stats {
+                            dp_fields.push(("dp_shard_step_ms", Json::num(st.shard_step_ms)));
+                            dp_fields.push(("dp_reduce_ms", Json::num(st.reduce_ms)));
+                        }
+                    }
+                }
+                (base, par) => {
+                    eprintln!("dp section omitted from BENCH json: dp run(s) failed");
+                    for (tag, res) in [("dp=1".to_string(), base), (format!("dp={dp_world}"), par)] {
+                        if let Err(e) = res {
+                            eprintln!("  {tag}: {e:#}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     // Continuous-batching serve loop: queue wait, TTFT and per-token
     // service latency through the real `coordinator::serve` engine
     // (skipped when the variant ships no decode artifacts). More requests
@@ -315,6 +386,7 @@ fn main() {
         fields.push(("grad_accum_step_ms", Json::num(s_ms(a))));
     }
     fields.extend(sweep_fields);
+    fields.extend(dp_fields);
     fields.extend(serve_fields);
     if let Some(rss) = single_session_rss {
         fields.push(("peak_rss_bytes", Json::num(rss as f64)));

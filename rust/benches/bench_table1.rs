@@ -3,7 +3,7 @@
 //! ROM_STEPS for the full run recorded in EXPERIMENTS.md; set ROM_JOBS>1 to
 //! fan variants out across scheduler workers (rows stay byte-identical).
 fn main() {
-    let jobs = rom::experiments::scheduler::default_jobs();
+    let jobs = rom::experiments::scheduler::default_jobs(rom::experiments::harness::dp_budget());
     let rep = rom::experiments::tables::run_experiment("table1", 60, jobs)
         .expect("experiment table1 failed (run `make artifacts` first)");
     rep.print();

@@ -4,7 +4,7 @@
 //! fan variants out across scheduler workers (table11 measures throughput
 //! and therefore always runs serially, whatever ROM_JOBS says).
 fn main() {
-    let jobs = rom::experiments::scheduler::default_jobs();
+    let jobs = rom::experiments::scheduler::default_jobs(rom::experiments::harness::dp_budget());
     let rep = rom::experiments::tables::run_experiment("table11", 25, jobs)
         .expect("experiment table11 failed (run `make artifacts` first)");
     rep.print();

@@ -12,10 +12,13 @@
 //! the synchronous in-loop path (the determinism guard in
 //! tests/integration_coordinator.rs pins the two paths to identical losses).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::TrainCfg;
 use crate::coordinator::checkpoint::{prune_checkpoints, Checkpoint};
@@ -27,9 +30,11 @@ use crate::data::corpus::{Corpus, CorpusSpec};
 use crate::data::loader::{Batch, Loader};
 use crate::{info, warnln};
 use crate::runtime::artifact::{Bundle, Manifest};
-use crate::runtime::session::Session;
-use crate::runtime::tensor::{literal_from_i32, SendLiteral};
-use crate::substrate::pool::Pipeline;
+use crate::runtime::session::{MicroGrad, Session};
+use crate::runtime::tensor::{literal_from_i32, SendLiteral, Tensor};
+use crate::substrate::pool::{
+    panic_message, reduce_group, Pipeline, ReduceError, ReduceMember, ThreadPool,
+};
 
 pub struct TrainReport {
     pub final_loss: f64,
@@ -38,6 +43,18 @@ pub struct TrainReport {
     pub metrics: Metrics,
     pub balance: crate::coordinator::monitor::BalanceReport,
     pub eval_ppl: Vec<(usize, f64)>,
+    /// Rank-0 timing of the data-parallel driver (`None` on the classic
+    /// single-session paths): mean per-shard gradient time and mean
+    /// reduce time (straggler wait + rank-ordered fold) per optimizer step.
+    pub dp_stats: Option<DpStats>,
+}
+
+/// Per-step wall-clock split of a `--dp` run, measured on rank 0.
+#[derive(Debug, Clone, Copy)]
+pub struct DpStats {
+    pub world: usize,
+    pub shard_step_ms: f64,
+    pub reduce_ms: f64,
 }
 
 /// One batch, already encoded for the device by the pipeline's second stage.
@@ -90,6 +107,18 @@ pub struct Trainer {
     /// runs and wall-clock benches turn it off; the ROM_SKIP_EVAL=1 env
     /// escape hatch still applies on top.
     pub final_eval: bool,
+    /// Data-parallel replica count (`rom train --dp K` / ROM_DP). `None`
+    /// runs the classic single-session loop above; `Some(k)` runs the
+    /// per-replica driver + host-side reduce/apply loop — including
+    /// `Some(1)`, which is the dp baseline: the bit-identity contract
+    /// (`--dp K` == `--dp 1` at the same global batch) holds *within* the
+    /// dp path, whose per-microbatch raw-gradient sum is a different (but
+    /// fixed) float association than the fused/accum device paths.
+    pub dp: Option<usize>,
+    /// Test seam: panic replica `.0` at step `.1` — exercises the per-rank
+    /// failure isolation path (run fails naming the rank, peers drain).
+    #[doc(hidden)]
+    pub dp_fault: Option<(usize, u64)>,
 }
 
 impl Trainer {
@@ -103,6 +132,8 @@ impl Trainer {
             quiet: false,
             pipelined: true,
             final_eval: true,
+            dp: None,
+            dp_fault: None,
         }
     }
 
@@ -123,6 +154,9 @@ impl Trainer {
     /// keep using the trained parameters (downstream probes, custom evals)
     /// without re-rolling their own training loop.
     pub fn run_session(&self) -> Result<(TrainReport, Session)> {
+        if let Some(world) = self.dp {
+            return self.run_session_dp(world);
+        }
         let man = self.bundle.manifest.clone();
         let cfg = self.train_cfg.clone();
         let sched = CosineSchedule::new(cfg.max_lr, cfg.steps, cfg.warmup_ratio);
@@ -228,6 +262,207 @@ impl Trainer {
             metrics,
             balance: monitor.report(),
             eval_ppl,
+            dp_stats: None,
+        };
+        Ok((report, sess))
+    }
+
+    /// Data-parallel driver: `world` replicas, each owning its own PJRT
+    /// client + session on an equal loader shard (batch B/world), exchange
+    /// gradients host-side every step through a rank-ordered rendezvous
+    /// reduce and all apply the same reduced update — parameters therefore
+    /// stay bit-identical across replicas for the whole run, and rank 0
+    /// (on the caller's thread, since sessions are thread-affine) alone
+    /// owns metrics, eval, checkpointing and the returned session.
+    fn run_session_dp(&self, world: usize) -> Result<(TrainReport, Session)> {
+        let man = &self.bundle.manifest;
+        if world == 0 {
+            bail!("--dp 0: need at least one replica");
+        }
+        if man.batch_size % world != 0 {
+            bail!(
+                "--dp {world} does not divide the batch size {} of '{}'",
+                man.batch_size,
+                man.name
+            );
+        }
+        let shard_batch = man.batch_size / world;
+        if shard_batch % man.micro_batch != 0 {
+            bail!(
+                "--dp {world}: shard batch {shard_batch} is not a multiple of \
+                 micro batch {} ('{}' exchanges whole microbatch gradients)",
+                man.micro_batch,
+                man.name
+            );
+        }
+        let mut members = reduce_group(world, fold_rank_steps);
+        if world == 1 {
+            let member = members.pop().expect("one member for world 1");
+            return self.dp_primary(1, member);
+        }
+
+        // Ranks 1..world run on pool threads; panics are caught inside the
+        // job (a panicking pool worker would wedge the in-flight accounting)
+        // and every worker reports exactly once, so the drain below always
+        // terminates. A dying worker drops its reduce member on the way out,
+        // which wakes every peer parked in the barrier with an error.
+        let pool = ThreadPool::new(world - 1);
+        let (tx, rx) = channel::<(usize, Result<()>)>();
+        for rank in (1..world).rev() {
+            let member = members.pop().expect("one member per rank");
+            let tx = tx.clone();
+            let dir = self.bundle.dir.clone();
+            let cfg = self.train_cfg.clone();
+            let corpus_seed = self.corpus_seed;
+            let stream_len = self.stream_len(self.train_cfg.steps);
+            let fault = self.dp_fault;
+            pool.submit(move || {
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    dp_worker(&dir, &cfg, corpus_seed, stream_len, member, rank, world, fault)
+                }))
+                .unwrap_or_else(|payload| {
+                    Err(anyhow!("replica panicked: {}", panic_message(payload.as_ref())))
+                });
+                let _ = tx.send((rank, res));
+            });
+        }
+        drop(tx);
+
+        let member0 = members.pop().expect("rank 0 member");
+        // On any rank-0 failure the member drops inside `dp_primary`, so
+        // blocked workers wake and the drain cannot hang.
+        let primary = self.dp_primary(world, member0);
+
+        let mut results: Vec<(usize, Result<()>)> = rx.into_iter().collect();
+        pool.join();
+        results.sort_by_key(|(rank, _)| *rank);
+        let mut secondary = 0usize;
+        let mut genuine: Option<(usize, anyhow::Error)> = None;
+        for (rank, res) in results {
+            if let Err(e) = res {
+                if e.downcast_ref::<ReduceError>().is_some() {
+                    // The replica aborted because a *peer* departed — a
+                    // consequence, not the root cause.
+                    secondary += 1;
+                } else if genuine.is_none() {
+                    genuine = Some((rank, e));
+                }
+            }
+        }
+        if let Some((rank, e)) = genuine {
+            return Err(e.context(format!(
+                "dp replica {rank} failed (remaining replicas drained cleanly)"
+            )));
+        }
+        let (report, sess) = primary?;
+        if secondary > 0 {
+            bail!("{secondary} dp replica(s) aborted mid-reduce with no root cause reported");
+        }
+        Ok((report, sess))
+    }
+
+    /// Rank 0 of the dp group: the only replica that logs, evals,
+    /// checkpoints and returns its session. Runs on the caller's thread
+    /// (sessions hold thread-affine PJRT handles, and `run_session` must
+    /// hand the trained session back).
+    fn dp_primary(
+        &self,
+        world: usize,
+        member: ReduceMember<RankStep, ReducedStep>,
+    ) -> Result<(TrainReport, Session)> {
+        let man = self.bundle.manifest.clone();
+        let cfg = self.train_cfg.clone();
+        let sched = CosineSchedule::new(cfg.max_lr, cfg.steps, cfg.warmup_ratio);
+        let corpus = Corpus::new(CorpusSpec::default(), self.corpus_seed);
+        let stream = corpus.generate(cfg.data_seed, self.stream_len(cfg.steps));
+        let mut loader = Loader::sharded(
+            stream,
+            man.batch_size / world,
+            man.seq_len,
+            cfg.data_seed,
+            world,
+            0,
+        );
+        let mut sess = Session::init(Arc::clone(&self.bundle), 0)?;
+        let mut metrics = Metrics::default();
+        let mut thp = Throughput::new();
+        let mut monitor = ExpertMonitor::new(man.num_routers, man.num_experts);
+        // Rank 0 accounts the GLOBAL batch: the step completes for all
+        // replicas at the reduce barrier, so its cadence is the run's.
+        let tokens_per_step = (man.batch_size * man.seq_len) as u64;
+        let (mut shard_secs, mut reduce_secs) = (0.0f64, 0.0f64);
+
+        for step in 1..=cfg.steps {
+            if self.dp_fault == Some((0, step)) {
+                panic!("dp fault injection: replica 0 at step {step}");
+            }
+            let lr = sched.lr(step) as f32;
+            let decode_load =
+                cfg.log_every > 0 && (step % cfg.log_every == 0 || step == cfg.steps);
+            let t_shard = Instant::now();
+            // Only the LAST rank decodes router telemetry: the fold keeps
+            // the final microbatch's sample (matching the accum path), so
+            // any other rank's decode would be a wasted transfer.
+            let contrib = dp_shard_grads(&sess, &man, &mut loader, decode_load && world == 1)?;
+            let t_reduce = Instant::now();
+            let reduced = member.reduce(contrib).map_err(|e| {
+                anyhow::Error::new(e).context("replica 0: a peer replica departed mid-reduce")
+            })?;
+            shard_secs += t_reduce.duration_since(t_shard).as_secs_f64();
+            reduce_secs += t_reduce.elapsed().as_secs_f64();
+            sess.apply_reduced(lr, &reduced.grads, reduced.num_micro)?;
+            if let Some(load) = &reduced.router_load {
+                monitor.observe(load);
+            }
+            let loss = reduced.loss;
+            thp.record(tokens_per_step);
+            metrics.log_loss(step, loss, lr as f64, thp.total_tokens());
+
+            if !self.quiet && cfg.log_every > 0 && step % cfg.log_every == 0 {
+                let rate = thp.rate().unwrap_or(0.0);
+                info!(
+                    "[{}] dp{world} step {step}/{} loss {loss:.4} lr {lr:.2e} {:.0} tok/s",
+                    man.name, cfg.steps, rate
+                );
+            }
+            if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+                for (ctx, ppl) in eval_ppl_sweep(&sess, &corpus, cfg.data_seed + 999, 4)? {
+                    metrics.log_eval(step, ctx, ppl);
+                    if !self.quiet {
+                        info!("[{}] eval ctx {ctx}: ppl {ppl:.3}", man.name);
+                    }
+                }
+            }
+            if let Some(dir) = &self.checkpoint_dir {
+                if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0 {
+                    self.save_checkpoint(&sess, dir, step)?;
+                }
+            }
+        }
+
+        if let Some(dir) = &self.checkpoint_dir {
+            self.save_checkpoint(&sess, dir, cfg.steps)?;
+        }
+        let eval_ppl = if !self.final_eval
+            || std::env::var("ROM_SKIP_EVAL").as_deref() == Ok("1")
+        {
+            Vec::new()
+        } else {
+            eval_ppl_sweep(&sess, &corpus, cfg.data_seed + 999, 8)?
+        };
+        let steps = cfg.steps.max(1) as f64;
+        let report = TrainReport {
+            final_loss: metrics.last_loss().unwrap_or(f64::NAN),
+            smoothed_loss: metrics.smoothed_loss(10).unwrap_or(f64::NAN),
+            tokens_per_sec: thp.rate().unwrap_or_else(|| thp.overall_rate()),
+            metrics,
+            balance: monitor.report(),
+            eval_ppl,
+            dp_stats: Some(DpStats {
+                world,
+                shard_step_ms: shard_secs * 1e3 / steps,
+                reduce_ms: reduce_secs * 1e3 / steps,
+            }),
         };
         Ok((report, sess))
     }
@@ -254,4 +489,128 @@ impl Trainer {
         }
         Ok(())
     }
+}
+
+/// One rank's contribution to a dp step: its shard's raw microbatch
+/// gradients, in microbatch order. `Tensor` payloads are plain host vecs,
+/// so the contribution crosses the reduce barrier without touching any
+/// thread-affine device handle.
+struct RankStep {
+    micro: Vec<MicroGrad>,
+}
+
+/// The rank-ordered fold of one dp step.
+struct ReducedStep {
+    grads: Vec<Tensor>,
+    loss: f64,
+    num_micro: usize,
+    router_load: Option<Vec<f32>>,
+}
+
+/// Flat, rank-major, left-to-right f32 fold over ALL microbatch gradients
+/// of one step. The association never mentions `world`: dp=K and dp=1 sum
+/// the same `B / micro_batch` raw gradients in the same global order, which
+/// is exactly why the reduced bits (and the f64 loss sum) are identical for
+/// every K. Contributions arrive rank-ordered by construction — the reduce
+/// group drains its slots in rank order regardless of thread scheduling.
+fn fold_rank_steps(contribs: Vec<RankStep>) -> ReducedStep {
+    let mut grads: Option<Vec<Tensor>> = None;
+    let mut loss_sum = 0.0f64;
+    let mut num_micro = 0usize;
+    let mut router_load: Option<Vec<f32>> = None;
+    for rank_step in contribs {
+        for mg in rank_step.micro {
+            num_micro += 1;
+            loss_sum += mg.loss;
+            if mg.router_load.is_some() {
+                // Keep the globally-last sample — matches the accum path's
+                // last-microbatch telemetry convention.
+                router_load = mg.router_load;
+            }
+            match &mut grads {
+                None => grads = Some(mg.grads),
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(mg.grads.iter()) {
+                        a.accumulate(g).expect("gradient leaves align across replicas");
+                    }
+                }
+            }
+        }
+    }
+    ReducedStep {
+        grads: grads.expect("reduce round without microbatches"),
+        loss: loss_sum / num_micro.max(1) as f64,
+        num_micro,
+        router_load,
+    }
+}
+
+/// One replica's half-step: pull its shard batch, run the grad program per
+/// microbatch, decode the raw gradients to host. Shared by rank 0 and the
+/// pool workers so every replica computes byte-identical contributions.
+fn dp_shard_grads(
+    sess: &Session,
+    man: &Manifest,
+    loader: &mut Loader,
+    decode_router_load: bool,
+) -> Result<RankStep> {
+    let batch = loader.next_batch();
+    let micro = Loader::split_micro(&batch, man.micro_batch);
+    let mut out = Vec::with_capacity(micro.len());
+    for m in &micro {
+        let tok = literal_from_i32(&m.shape(), m.tokens)?;
+        let tgt = literal_from_i32(&m.shape(), m.targets)?;
+        out.push(sess.grad_to_host(&tok, &tgt, decode_router_load)?);
+    }
+    Ok(RankStep { micro: out })
+}
+
+/// A non-zero rank of the dp group: own PJRT client + session (the
+/// one-client-per-worker ownership model of the sweep scheduler), identical
+/// init seed — so parameters start bit-identical to rank 0's and stay that
+/// way, since every replica applies the same reduced gradient each step.
+/// No logging, no eval, no checkpointing: rank 0 owns all side effects.
+#[allow(clippy::too_many_arguments)]
+fn dp_worker(
+    dir: &Path,
+    cfg: &TrainCfg,
+    corpus_seed: u64,
+    stream_len: usize,
+    member: ReduceMember<RankStep, ReducedStep>,
+    rank: usize,
+    world: usize,
+    fault: Option<(usize, u64)>,
+) -> Result<()> {
+    let bundle = Bundle::open(dir)?;
+    let man = bundle.manifest.clone();
+    let corpus = Corpus::new(CorpusSpec::default(), corpus_seed);
+    let stream = corpus.generate(cfg.data_seed, stream_len);
+    let mut loader = Loader::sharded(
+        stream,
+        man.batch_size / world,
+        man.seq_len,
+        cfg.data_seed,
+        world,
+        rank,
+    );
+    let mut sess = Session::init(bundle, 0)?;
+    let sched = CosineSchedule::new(cfg.max_lr, cfg.steps, cfg.warmup_ratio);
+    for step in 1..=cfg.steps {
+        if fault == Some((rank, step)) {
+            panic!("dp fault injection: replica {rank} at step {step}");
+        }
+        let lr = sched.lr(step) as f32;
+        // Same sampling cadence as rank 0 (purely step-derived, so every
+        // replica computes it identically); only the last rank decodes.
+        let decode_load =
+            cfg.log_every > 0 && (step % cfg.log_every == 0 || step == cfg.steps);
+        let contrib =
+            dp_shard_grads(&sess, &man, &mut loader, decode_load && rank + 1 == world)?;
+        let reduced = member.reduce(contrib).map_err(|e| {
+            anyhow::Error::new(e)
+                .context(format!("replica {rank}: a peer replica departed mid-reduce"))
+        })?;
+        sess.apply_reduced(lr, &reduced.grads, reduced.num_micro)?;
+    }
+    Ok(())
 }

@@ -2,12 +2,18 @@
 //!
 //! The stream is cut into (seq_len + 1)-token windows; window order is
 //! shuffled per epoch with a seeded RNG; shards partition windows disjointly
-//! (rank r of w takes windows w*i + r — the FSDP-style data split of §5.1,
-//! here exercised by tests even though the runtime is single-process).
-//! Targets are inputs shifted by one (next-token prediction).
+//! at batch-chunk granularity: the shuffled order is truncated to whole
+//! `world * batch` groups (equal per-rank share — uneven shards would wedge
+//! a barrier-style gradient reduction on the tail step) and batch-sized
+//! chunk `c` goes to rank `c % world`. Concatenating every rank's step-`s`
+//! chunk in rank order therefore reproduces exactly the step-`s` batch of a
+//! world-1 loader with batch `world * batch` — the invariant the `--dp K`
+//! bit-identity contract rests on. Targets are inputs shifted by one
+//! (next-token prediction).
 
 use crate::runtime::tensor::Tensor;
 use crate::substrate::rng::Rng;
+use crate::warnln;
 
 #[derive(Debug, Clone)]
 pub struct Batch {
@@ -68,14 +74,16 @@ impl Loader {
         assert!(rank < world);
         assert!(stream.len() > seq_len + 1, "stream shorter than one window");
         let num_windows = stream.len() / (seq_len + 1);
-        // Every rank must own at least one window per epoch; otherwise
-        // `next_batch` on the starved rank would reshuffle forever into an
-        // empty order and index out of bounds. Fail loudly at construction.
+        // Every rank must own at least one batch-sized chunk per epoch
+        // (`reshuffle` truncates the shuffled order to whole `world * batch`
+        // groups); otherwise `next_batch` on the starved rank would reshuffle
+        // forever into an empty order and index out of bounds. Fail loudly
+        // at construction.
         assert!(
-            num_windows >= world,
-            "world size {world} exceeds {num_windows} windows \
+            num_windows >= world * batch.max(1),
+            "world size {world} x batch {batch} exceeds {num_windows} windows \
              ({}-token stream, seq_len {seq_len}): rank {rank} would starve — \
-             shrink world or provide a longer stream",
+             shrink world/batch or provide a longer stream",
             stream.len()
         );
         let mut l = Loader {
@@ -102,12 +110,31 @@ impl Loader {
         let mut order: Vec<usize> = (0..n).collect();
         let mut rng = Rng::new(self.seed).fold_in(self.epoch);
         rng.shuffle(&mut order);
-        // Keep only this shard's windows.
+        // Equal-shard truncation: keep whole `world * batch` groups only, so
+        // every rank draws exactly `usable / world` windows per epoch and all
+        // ranks cross epoch boundaries on the same step. The remainder is
+        // dropped from this epoch's *shuffled* order — different windows
+        // fall off each epoch, so no window is permanently unreachable.
+        let chunk = self.batch.max(1);
+        let usable = n - n % (self.world * chunk);
+        if usable < n && self.epoch == 0 && self.rank == 0 {
+            warnln!(
+                "loader drops {} of {n} windows per epoch to keep {} rank(s) of \
+                 batch {chunk} in lockstep",
+                n - usable,
+                self.world
+            );
+        }
+        order.truncate(usable);
+        // Chunk round-robin: batch-sized chunk c of the shuffled order goes
+        // to rank c % world, so rank-ordered concatenation of the per-step
+        // chunks reproduces the world-1 (batch `world * chunk`) stream —
+        // pinned by prop_dp_shards_concat_to_global_stream.
         self.order = order
-            .into_iter()
+            .chunks(chunk)
             .enumerate()
-            .filter(|(i, _)| i % self.world == self.rank)
-            .map(|(_, w)| w)
+            .filter(|(c, _)| c % self.world == self.rank)
+            .flat_map(|(_, ws)| ws.iter().copied())
             .collect();
         debug_assert!(
             !self.order.is_empty(),
@@ -219,19 +246,53 @@ mod tests {
         check("shard-partition", Config { cases: 24, seed: 3 }, |rng| {
             let world = 1 + rng.below(4) as usize;
             let t = 4 + rng.below(12) as usize;
-            let n = (t + 1) * (world * (2 + rng.below(6) as usize));
-            let s = stream(n + rng.below(t as u64) as usize);
+            let whole = world * (2 + rng.below(6) as usize);
+            let extra = rng.below(world as u64) as usize; // uneven remainder
+            let s = stream((t + 1) * (whole + extra) + rng.below(t as u64) as usize);
+            let num_windows = s.len() / (t + 1);
+            let usable = num_windows - num_windows % world; // batch-1 chunks
             let mut seen = std::collections::HashSet::new();
             let mut total = 0usize;
             for rank in 0..world {
                 let l = Loader::sharded(s.clone(), 1, t, 42, world, rank);
+                // Equal per-rank share: a barrier-style reduction steps every
+                // rank in lockstep, so no shard may run out a step early.
+                crate::prop_assert_eq!(l.order.len(), usable / world);
                 for &w in &l.order {
                     crate::prop_assert!(seen.insert(w), "window {w} in two shards");
                     total += 1;
                 }
             }
-            let expected = s.len() / (t + 1);
-            crate::prop_assert_eq!(total, expected);
+            crate::prop_assert_eq!(total, usable);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dp_shards_concat_to_global_stream() {
+        // The --dp bit-identity contract at the data layer: at every step,
+        // concatenating the world-K shard batches (shard batch B/K) in rank
+        // order must equal the world-1 batch-B batch — same windows, same
+        // row positions — including across epoch rollovers.
+        check("dp-concat", Config { cases: 12, seed: 9 }, |rng| {
+            let world = 2 + rng.below(3) as usize; // 2..=4 replicas
+            let shard = 1 + rng.below(3) as usize; // rows per replica
+            let t = 4 + rng.below(8) as usize;
+            let b = world * shard;
+            let windows = b * (2 + rng.below(4) as usize) + rng.below(b as u64) as usize;
+            let s = stream((t + 1) * windows);
+            let mut global = Loader::new(s.clone(), b, t, 11);
+            let mut shards: Vec<Loader> = (0..world)
+                .map(|r| Loader::sharded(s.clone(), shard, t, 11, world, r))
+                .collect();
+            for _ in 0..12 {
+                let g = global.next_batch();
+                let mut cat: Vec<i32> = Vec::new();
+                for l in shards.iter_mut() {
+                    cat.extend_from_slice(l.next_batch().tokens.as_i32().unwrap());
+                }
+                crate::prop_assert_eq!(cat, g.tokens.as_i32().unwrap().to_vec());
+            }
             Ok(())
         });
     }

@@ -96,11 +96,16 @@ pub struct RunSpec {
     /// benches don't).
     pub final_eval: bool,
     pub quiet: bool,
+    /// Data-parallel replica count per variant (`--dp`/ROM_DP). `None`
+    /// keeps the classic single-client paths; `Some(k)` routes the run
+    /// through the dp driver, which shards each variant's loader across
+    /// `k` PJRT clients and reduces gradients host-side.
+    pub dp: Option<usize>,
 }
 
 impl RunSpec {
     pub fn new(steps: u64, max_lr: f64) -> RunSpec {
-        RunSpec { steps, max_lr, grad_accum: false, final_eval: true, quiet: false }
+        RunSpec { steps, max_lr, grad_accum: false, final_eval: true, quiet: false, dp: None }
     }
 }
 
@@ -123,6 +128,7 @@ pub fn run_variant_spec(name: &str, spec: &RunSpec) -> Result<VariantResult> {
     let mut trainer = Trainer::new(Arc::clone(&bundle), train_cfg);
     trainer.quiet = spec.quiet;
     trainer.final_eval = spec.final_eval;
+    trainer.dp = spec.dp;
     let report = trainer.run()?;
     let man = &bundle.manifest;
     Ok(VariantResult {
@@ -153,4 +159,13 @@ pub fn lr_budget() -> f64 {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(3e-3)
+}
+
+/// Data-parallel fan-out for experiment/bench runs: ROM_DP parsed to a
+/// replica count (`Some(k)` for k >= 1, `None` when unset or garbage).
+/// `Some(1)` is meaningful — it runs the dp driver's one-replica baseline
+/// rather than the classic fused path, which is what the dp bit-identity
+/// comparisons pin against.
+pub fn dp_budget() -> Option<usize> {
+    std::env::var("ROM_DP").ok().and_then(|s| s.parse::<usize>().ok()).filter(|&k| k >= 1)
 }

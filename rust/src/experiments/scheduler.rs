@@ -30,14 +30,23 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::experiments::harness::{run_variant_spec, RunSpec, VariantResult};
-use crate::substrate::pool::ThreadPool;
+use crate::substrate::pool::{panic_message, ThreadPool};
 use crate::warnln;
 
 /// Default worker count for sweeps: the ROM_JOBS env var, else 1 (serial —
 /// parallelism is opt-in because concurrent variants share the machine's
-/// cores with XLA's own intra-op threads).
-pub fn default_jobs() -> usize {
-    parse_jobs(std::env::var("ROM_JOBS").ok().as_deref())
+/// cores with XLA's own intra-op threads), divided by the run's
+/// data-parallel fan-out: every variant job spawns `dp` replicas of its
+/// own, so `--jobs J x --dp K` would oversubscribe the cores K-fold if the
+/// default ignored it. Pass the resolved `--dp`/ROM_DP value (`None` = 1).
+pub fn default_jobs(dp: Option<usize>) -> usize {
+    compose_jobs(parse_jobs(std::env::var("ROM_JOBS").ok().as_deref()), dp.unwrap_or(1))
+}
+
+/// The scheduler's share of the core budget once each job fans out into
+/// `dp` replicas: `jobs / dp`, floored to one worker.
+fn compose_jobs(jobs: usize, dp: usize) -> usize {
+    (jobs / dp.max(1)).max(1)
 }
 
 fn parse_jobs(v: Option<&str>) -> usize {
@@ -85,16 +94,6 @@ where
         .into_iter()
         .map(|s| s.expect("scheduler lost a job result"))
         .collect()
-}
-
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "opaque panic payload".to_string()
-    }
 }
 
 /// Pair each item name with its job result, warn-log every failure (error
@@ -221,6 +220,17 @@ mod tests {
         assert_eq!(parse_jobs(Some("4")), 4);
         assert_eq!(parse_jobs(Some("0")), 1);
         assert_eq!(parse_jobs(Some("not-a-number")), 1);
+    }
+
+    #[test]
+    fn jobs_divide_by_dp_factor() {
+        // --jobs x --dp must never oversubscribe: the default worker count
+        // hands each dp replica a core from the same budget.
+        assert_eq!(compose_jobs(8, 2), 4);
+        assert_eq!(compose_jobs(8, 3), 2);
+        assert_eq!(compose_jobs(4, 8), 1); // floored, never zero workers
+        assert_eq!(compose_jobs(5, 1), 5);
+        assert_eq!(compose_jobs(3, 0), 3); // dp 0 is treated as 1
     }
 
     #[test]

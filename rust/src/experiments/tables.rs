@@ -7,7 +7,9 @@
 //! bench targets run a reduced ROM_STEPS budget.
 //!
 //! Sweeps fan out across `jobs` scheduler workers (`--jobs N` / ROM_JOBS);
-//! rows are emitted in variant order regardless of completion order. A
+//! rows are emitted in variant order regardless of completion order. ROM_DP
+//! additionally runs every variant data-parallel (`dp_budget`), with the
+//! default worker count divided down so jobs x replicas never oversubscribe. A
 //! failing variant costs only its own row — every sibling still runs and its
 //! row still prints — but the experiment then exits nonzero (`seal_table`),
 //! so a sweep with broken variants can never read as a silent success.
@@ -25,7 +27,7 @@ use crate::coordinator::trainer::Trainer;
 use crate::data::corpus::{Corpus, CorpusSpec};
 use crate::data::probes::{make_cloze, make_continuation};
 use crate::experiments::harness::{
-    artifacts_root, lr_budget, runnable_variants, step_budget, RunSpec, VariantResult,
+    artifacts_root, dp_budget, lr_budget, runnable_variants, step_budget, RunSpec, VariantResult,
 };
 use crate::experiments::scheduler::{collect_ok, run_jobs, run_sweep};
 use crate::info;
@@ -58,7 +60,8 @@ pub fn run_rows(title: &str, variants: &[&str], steps: u64, jobs: usize) -> Resu
         &["variant", "active", "total", "GFLOPs/tok", "loss", "ppl@128", "ppl@256", "ppl@512"],
     );
     let names = runnable_variants(variants);
-    let spec = RunSpec::new(steps, lr_budget());
+    let mut spec = RunSpec::new(steps, lr_budget());
+    spec.dp = dp_budget();
     let (rows, failed) = collect_ok(&names, run_sweep(&names, &spec, jobs));
     for (_name, r) in rows {
         let mut row = vec![
@@ -175,7 +178,8 @@ pub fn table6(steps_default: u64, jobs: usize) -> Result<Reporter> {
         "samba-e4-rom-all",
         "samba-e4-rom-all-bal",
     ]);
-    let spec = RunSpec::new(step_budget(steps_default), lr_budget());
+    let mut spec = RunSpec::new(step_budget(steps_default), lr_budget());
+    spec.dp = dp_budget();
     let (rows, failed) = collect_ok(&names, run_sweep(&names, &spec, jobs));
     for (_name, r) in rows {
         rep.row(&[
@@ -226,6 +230,7 @@ fn table2_row(name: &str, steps: u64, max_lr: f64) -> Result<Vec<String>> {
     let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
     trainer.quiet = true;
     trainer.final_eval = false; // probes below, not the PPL sweep
+    trainer.dp = dp_budget();
     let (_report, sess) = trainer.run_session()?;
 
     let corpus = Corpus::new(CorpusSpec::default(), 17);
@@ -255,7 +260,8 @@ pub fn table11(steps_default: u64, _jobs: usize) -> Result<Reporter> {
         &["variant", "active", "total", "tok/s", "rel%"],
     );
     let names = runnable_variants(&["samba-e2", "samba-e2-rom", "samba-e4"]);
-    let spec = RunSpec::new(step_budget(steps_default), lr_budget());
+    let mut spec = RunSpec::new(step_budget(steps_default), lr_budget());
+    spec.dp = dp_budget();
     let (rows, failed) = collect_ok(&names, run_sweep(&names, &spec, 1));
     // rel% is pinned to the table's designated baseline — the FIRST runnable
     // variant. If that row failed there is no denominator, so rel% prints

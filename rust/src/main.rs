@@ -32,7 +32,7 @@ use rom::coordinator::serve::{
 use rom::coordinator::trainer::Trainer;
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::probes::{make_cloze, make_continuation};
-use rom::experiments::harness::{artifacts_root, lr_budget};
+use rom::experiments::harness::{artifacts_root, dp_budget, lr_budget};
 use rom::experiments::scheduler::default_jobs;
 use rom::experiments::tables::run_experiment;
 use rom::info;
@@ -48,9 +48,12 @@ usage: rom <subcommand> [options]
   list                              show variants with artifacts
   info <variant>                    manifest + analytic accounting
   train <variant> [--steps N] [--lr X] [--warmup R] [--seed N] [--accum]
-                  [--ckpt-dir D] [--ckpt-every N] [--ckpt-keep N]
+                  [--dp K] [--ckpt-dir D] [--ckpt-every N] [--ckpt-keep N]
                   [--eval-every N] [--log-every N] [--metrics FILE]
-                  (--ckpt-keep N retains only the newest N checkpoints)
+                  (--ckpt-keep N retains only the newest N checkpoints;
+                   --dp K, or ROM_DP, trains K data-parallel replicas with
+                   deterministic host-side gradient reduction — same global
+                   batch, bit-identical losses to --dp 1)
   eval <variant> --ckpt FILE        PPL sweep from a checkpoint
   generate <variant> --ckpt FILE --prompt-tokens '1,2,3[;4,5,6]'
                   [--max-new N] [--temperature X] [--top-k K] [--seed N]
@@ -78,7 +81,9 @@ usage: rom <subcommand> [options]
                                      table6 table10 table11)
                                     --jobs N trains N variants in parallel
                                     (default from ROM_JOBS, else 1; rows are
-                                    byte-identical to a serial run)
+                                    byte-identical to a serial run); ROM_DP=K
+                                    trains each variant data-parallel and
+                                    divides the default --jobs by K
   analyze [--manifest FILE] [--golden]
                                     offline static checks, no device needed:
                                     manifest contract (golden fixtures +
@@ -254,6 +259,10 @@ fn train(args: &Args) -> Result<()> {
     };
     let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
     trainer.quiet = args.has_flag("quiet");
+    trainer.dp = match args.get("dp") {
+        Some(v) => Some(v.parse().context("--dp expects a replica count")?),
+        None => dp_budget(),
+    };
     if let Some(dir) = args.get("ckpt-dir") {
         trainer.checkpoint_dir = Some(dir.into());
     }
@@ -265,6 +274,12 @@ fn train(args: &Args) -> Result<()> {
     println!("final loss:     {:.4}", report.final_loss);
     println!("smoothed loss:  {:.4}", report.smoothed_loss);
     println!("throughput:     {:.0} tokens/s", report.tokens_per_sec);
+    if let Some(dp) = &report.dp_stats {
+        println!(
+            "dp:             {} replica(s), shard step {:.1} ms, reduce {:.1} ms",
+            dp.world, dp.shard_step_ms, dp.reduce_ms
+        );
+    }
     for (ctx, ppl) in &report.eval_ppl {
         println!("ppl@{ctx}:        {ppl:.3}");
     }
@@ -490,7 +505,7 @@ fn probes(args: &Args) -> Result<()> {
 fn experiment(args: &Args) -> Result<()> {
     let id = variant_arg(args)?;
     let steps = args.get_u64("steps", 200);
-    let jobs = args.get_usize("jobs", default_jobs());
+    let jobs = args.get_usize("jobs", default_jobs(dp_budget()));
     let rep = run_experiment(&id, steps, jobs)?;
     rep.print();
     Ok(())

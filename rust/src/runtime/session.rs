@@ -36,6 +36,20 @@ pub struct StepOut {
     pub router_load: Option<Vec<f32>>,
 }
 
+/// One microbatch's RAW gradient decoded to host — the unit of the `--dp`
+/// host-side gradient exchange. Unlike the accum path (which chains the
+/// device-side accumulator), `grad_to_host` seeds every call from the
+/// persistent zero literals, so `grads` is exactly this microbatch's
+/// gradient; the dp reducer owns the summation order (flat, rank-major —
+/// the fixed association that makes the sum world-size invariant).
+#[derive(Debug, Clone)]
+pub struct MicroGrad {
+    pub grads: Vec<Tensor>,
+    pub loss: f64,
+    /// Router telemetry for this microbatch, when decoded (see `StepOut`).
+    pub router_load: Option<Vec<f32>>,
+}
+
 /// The carried recurrent state of an in-flight generation: one literal per
 /// leaf of the manifest's decode-state spec (leaf 0 is the i32 `pos`
 /// scalar). The state stays in `xla::Literal`s between steps — it is fed
@@ -304,6 +318,89 @@ impl Session {
             _ => None,
         };
         Ok(StepOut { loss: loss_sum / microbatches.len() as f64, router_load })
+    }
+
+    /// Run the grad program on one pre-encoded microbatch and decode the RAW
+    /// gradient — seeded from the persistent `grad_zero` literals, never a
+    /// carried accumulator — plus the loss to host. Takes `&self`: params are
+    /// untouched. This is the per-replica half of a data-parallel step; the
+    /// matching update half is `apply_reduced`.
+    pub fn grad_to_host(
+        &self,
+        tokens: &xla::Literal,
+        targets: &xla::Literal,
+        decode_router_load: bool,
+    ) -> Result<MicroGrad> {
+        let grad = self.bundle.grad()?;
+        let n = self.params.len();
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 * n + 2);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.grad_zero.iter());
+        inputs.push(tokens);
+        inputs.push(targets);
+        let mut outs = grad.run(&inputs)?;
+        // Same arity convention as the accum path: newer grad artifacts
+        // append the router load (n+2), legacy bundles emit n+1.
+        let mut load_lit: Option<xla::Literal> = None;
+        if outs.len() == n + 2 {
+            load_lit = Some(outs.pop().unwrap());
+        } else if outs.len() != n + 1 {
+            bail!(
+                "grad returned {} outputs, expected {} or {}",
+                outs.len(),
+                n + 1,
+                n + 2
+            );
+        }
+        let loss_lit = outs.pop().unwrap();
+        let grads = outs.iter().map(Tensor::from_literal).collect::<Result<Vec<_>>>()?;
+        let router_load = match (decode_router_load, load_lit) {
+            (true, Some(l)) => Some(Tensor::from_literal(&l)?.as_f32()?.to_vec()),
+            _ => None,
+        };
+        Ok(MicroGrad {
+            grads,
+            loss: Tensor::from_literal(&loss_lit)?.item_f32()? as f64,
+            router_load,
+        })
+    }
+
+    /// Apply one optimizer update from an externally reduced gradient sum —
+    /// the `--dp` update half. Uploads the summed gradients and runs the
+    /// apply program exactly as the accum path does with its device-side
+    /// accumulator; `num_micro` is the GLOBAL microbatch count the sum spans,
+    /// so the update matches a single-replica accum step over the same
+    /// global batch.
+    pub fn apply_reduced(&mut self, lr: f32, grads: &[Tensor], num_micro: usize) -> Result<()> {
+        let n = self.params.len();
+        if grads.len() != n {
+            bail!("reduced gradient has {} leaves, params have {n}", grads.len());
+        }
+        if num_micro == 0 {
+            bail!("reduced gradient spans zero microbatches");
+        }
+        let apply = self.bundle.apply()?;
+        let gacc = grads.iter().map(|g| self.upload(g)).collect::<Result<Vec<_>>>()?;
+        self.step_count += 1;
+        let stepnum = self.upload(&Tensor::scalar_f32(self.step_count as f32))?;
+        let lr_lit = self.upload(&Tensor::scalar_f32(lr))?;
+        let nmicro = self.upload(&Tensor::scalar_f32(num_micro as f32))?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(4 * n + 3);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        inputs.extend(gacc.iter());
+        inputs.push(&stepnum);
+        inputs.push(&lr_lit);
+        inputs.push(&nmicro);
+        let mut outs = apply.run(&inputs)?;
+        if outs.len() != 3 * n {
+            bail!("apply returned {} outputs, expected {}", outs.len(), 3 * n);
+        }
+        self.v = outs.split_off(2 * n);
+        self.m = outs.split_off(n);
+        self.params = outs;
+        Ok(())
     }
 
     /// Evaluate summed NLL + token count on one (1, L) sequence pair.

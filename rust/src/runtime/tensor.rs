@@ -112,6 +112,29 @@ impl Tensor {
         4 * self.len()
     }
 
+    /// Elementwise `self += other` for f32 tensors of identical shape — the
+    /// dp gradient reducer's inner loop. Plain left-to-right IEEE adds, so
+    /// the caller fully controls the summation order (and with it, bitwise
+    /// reproducibility of the reduced gradient).
+    pub fn accumulate(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!(
+                "accumulate: shape {:?} != {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        match (&mut self.data, &other.data) {
+            (TensorData::F32(a), TensorData::F32(b)) => {
+                for (x, y) in a.iter_mut().zip(b.iter()) {
+                    *x += y;
+                }
+                Ok(())
+            }
+            _ => Err(anyhow!("accumulate: both tensors must be f32")),
+        }
+    }
+
     // ---- Bulk little-endian transport --------------------------------------
     // Checkpoints and any future wire format move multi-MB parameter state;
     // these helpers work at slice granularity (one memcpy on little-endian

@@ -9,7 +9,8 @@
 //! `substrate::sync`, the shim that swaps in loom's model-checked
 //! `Mutex`/`Condvar`/`thread` under `RUSTFLAGS="--cfg loom"`; see
 //! `tests/loom_pool.rs` for the exhaustive submit/join/drop interleaving
-//! models of `ThreadPool`, `Prefetcher` and `Pipeline`.
+//! models of `ThreadPool`, `Prefetcher`, `Pipeline` and the
+//! rendezvous-reduce group (`reduce_group`) behind `rom train --dp`.
 
 use std::io::BufRead;
 
@@ -214,6 +215,172 @@ impl<T: Send + 'static> Drop for Pipeline<T> {
     }
 }
 
+/// Best-effort stringification of a caught panic payload (`&str` and
+/// `String` cover every `panic!` in this crate; anything else reports as
+/// opaque). Lives here because it pairs with every `catch_unwind` that
+/// guards the pool's in-flight accounting — a panicking pool job must be
+/// converted to an error, never allowed to unwind a worker thread.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Error surfaced by [`ReduceMember::reduce`] when the group can no longer
+/// complete a round: some member departed (was dropped, or its thread
+/// unwound) before contributing or collecting. Callers treat this as "a
+/// peer replica died" and bail out instead of blocking forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReduceError;
+
+impl std::fmt::Display for ReduceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "reduce group member departed before the round completed")
+    }
+}
+
+impl std::error::Error for ReduceError {}
+
+struct ReduceState<T, R> {
+    /// One slot per rank. Filled in arrival order, *drained in rank order*
+    /// by the member that completes the round — the fold therefore always
+    /// sees contributions rank-ordered, independent of thread scheduling.
+    slots: Vec<Option<T>>,
+    arrived: usize,
+    /// Folded result of the current round, shared until every member took it.
+    result: Option<Arc<R>>,
+    taken: usize,
+    /// Round counter; bumping it is the "round complete" broadcast.
+    round: u64,
+    /// Set by `ReduceMember::drop`: the group can never complete again.
+    departed: bool,
+}
+
+struct ReduceShared<T, R> {
+    state: Mutex<ReduceState<T, R>>,
+    cv: Condvar,
+    #[allow(clippy::type_complexity)]
+    fold: Box<dyn Fn(Vec<T>) -> R + Send + Sync>,
+    world: usize,
+}
+
+/// One rank's handle into a fixed-membership rendezvous-reduce group — the
+/// host-side gradient exchange primitive behind `rom train --dp K`.
+///
+/// All `world` members call [`reduce`](Self::reduce) once per round; the
+/// last arriver folds the contributions **in rank order** (slot order, not
+/// arrival order — the fixed association that makes a floating-point sum
+/// deterministic and world-size-invariant) outside the lock, and every
+/// member receives the same `Arc` of the folded result. Rounds repeat for
+/// the life of the group.
+///
+/// Dropping a member — normally, or by unwinding out of a panicking replica
+/// — marks the group departed: every member blocked in `reduce` and every
+/// later call gets `Err(ReduceError)` instead of deadlocking on a barrier
+/// that can never fill. Modeled under loom in `tests/loom_pool.rs`
+/// (`reduce_*` models: joiner drops mid-barrier, reducer unwinds
+/// mid-stream).
+pub struct ReduceMember<T, R> {
+    rank: usize,
+    shared: Arc<ReduceShared<T, R>>,
+}
+
+/// Build a `world`-member reduce group; member `i` of the returned vec is
+/// rank `i`. `fold` receives the round's contributions in rank order.
+pub fn reduce_group<T, R, F>(world: usize, fold: F) -> Vec<ReduceMember<T, R>>
+where
+    T: Send,
+    R: Send + Sync,
+    F: Fn(Vec<T>) -> R + Send + Sync + 'static,
+{
+    assert!(world >= 1, "reduce group needs at least one member");
+    let shared = Arc::new(ReduceShared {
+        state: Mutex::new(ReduceState {
+            slots: (0..world).map(|_| None).collect(),
+            arrived: 0,
+            result: None,
+            taken: 0,
+            round: 0,
+            departed: false,
+        }),
+        cv: Condvar::new(),
+        fold: Box::new(fold),
+        world,
+    });
+    (0..world)
+        .map(|rank| ReduceMember { rank, shared: Arc::clone(&shared) })
+        .collect()
+}
+
+impl<T, R> ReduceMember<T, R> {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.shared.world
+    }
+
+    /// Contribute this rank's value and block until the round's rank-ordered
+    /// fold is available. Errors (now and forever) once any member departed.
+    pub fn reduce(&self, value: T) -> Result<Arc<R>, ReduceError> {
+        let sh = &*self.shared;
+        let mut s = sh.state.lock().unwrap();
+        if s.departed {
+            return Err(ReduceError);
+        }
+        debug_assert!(
+            s.slots[self.rank].is_none(),
+            "rank {} reduced twice in one round",
+            self.rank
+        );
+        s.slots[self.rank] = Some(value);
+        s.arrived += 1;
+        if s.arrived == sh.world {
+            // Last arriver completes the round: drain slots in rank order
+            // and fold outside the lock (gradient sums take milliseconds).
+            debug_assert!(s.result.is_none(), "previous round not fully collected");
+            let contributions: Vec<T> =
+                s.slots.iter_mut().map(|slot| slot.take().expect("slot filled")).collect();
+            s.arrived = 0;
+            drop(s);
+            let folded = (sh.fold)(contributions);
+            s = sh.state.lock().unwrap();
+            s.result = Some(Arc::new(folded));
+            s.taken = 0;
+            s.round = s.round.wrapping_add(1);
+            sh.cv.notify_all();
+        } else {
+            let my_round = s.round;
+            while !s.departed && s.round == my_round {
+                s = sh.cv.wait(s).unwrap();
+            }
+            if s.round == my_round {
+                return Err(ReduceError); // departed before the round filled
+            }
+        }
+        let result = Arc::clone(s.result.as_ref().expect("round complete without result"));
+        s.taken += 1;
+        if s.taken == sh.world {
+            // Last collector clears the way for the next round's fold.
+            s.result = None;
+        }
+        Ok(result)
+    }
+}
+
+impl<T, R> Drop for ReduceMember<T, R> {
+    fn drop(&mut self) {
+        let mut s = self.shared.state.lock().unwrap();
+        s.departed = true;
+        self.shared.cv.notify_all();
+    }
+}
+
 /// Reader-thread line pump: stream lines from a reader over a bounded
 /// channel, so a slow consumer backpressures the producer instead of
 /// buffering unboundedly. This is the stdin/file request pump `rom serve`
@@ -387,6 +554,75 @@ mod tests {
         assert_eq!(rx.recv().unwrap(), "0");
         drop(rx);
         h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn reduce_group_folds_in_rank_order_across_rounds() {
+        // Reverse arrival order (higher ranks contribute first) must not
+        // change the fold's view: contributions always arrive rank-ordered.
+        let members = reduce_group(3, |vs: Vec<String>| vs.join("|"));
+        let handles: Vec<_> = members
+            .into_iter()
+            .map(|m| {
+                std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        (3 - m.rank()) as u64 * 10,
+                    ));
+                    let mut out = Vec::new();
+                    for round in 0..3 {
+                        let r = m.reduce(format!("r{}s{round}", m.rank())).unwrap();
+                        out.push((*r).clone());
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(
+                h.join().unwrap(),
+                vec!["r0s0|r1s0|r2s0", "r0s1|r1s1|r2s1", "r0s2|r1s2|r2s2"]
+            );
+        }
+    }
+
+    #[test]
+    fn reduce_group_single_member_is_identity_loop() {
+        let mut members = reduce_group(1, |vs: Vec<u64>| vs[0] * 2);
+        let m = members.pop().unwrap();
+        for i in 0..5u64 {
+            assert_eq!(*m.reduce(i).unwrap(), i * 2);
+        }
+    }
+
+    #[test]
+    fn reduce_group_departed_member_unblocks_peers() {
+        // Member 1 drops without ever contributing while member 0 is parked
+        // in the barrier: member 0 must wake with Err, not deadlock, and all
+        // later rounds must fail fast too.
+        let mut members = reduce_group(2, |vs: Vec<u32>| vs.iter().sum::<u32>());
+        let quitter = members.pop().unwrap();
+        let m0 = members.pop().unwrap();
+        let h = std::thread::spawn(move || m0.reduce(7).and_then(|_| m0.reduce(8)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(quitter);
+        assert_eq!(h.join().unwrap(), Err(ReduceError));
+    }
+
+    #[test]
+    fn reduce_group_departure_after_complete_round_fails_next() {
+        // A full round completes; then one member unwinds. The survivor's
+        // next round errors instead of waiting on a barrier that cannot fill.
+        let mut members = reduce_group(2, |vs: Vec<u32>| vs.iter().sum::<u32>());
+        let m1 = members.pop().unwrap();
+        let m0 = members.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            let first = m1.reduce(2).map(|r| *r);
+            drop(m1); // simulates the replica's thread unwinding mid-stream
+            first
+        });
+        assert_eq!(*m0.reduce(1).unwrap(), 3);
+        assert_eq!(h.join().unwrap(), Ok(3));
+        assert_eq!(m0.reduce(1), Err(ReduceError));
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! build re-exports the std types verbatim — zero behavior change, zero
 //! cost. A build with `RUSTFLAGS="--cfg loom"` swaps in `loom::sync` /
 //! `loom::thread`, and `tests/loom_pool.rs` then explores every
-//! interleaving of the pool's submit/join/drop protocols under
-//! `loom::model`.
+//! interleaving of the pool's submit/join/drop protocols — and of the
+//! `reduce_group` rendezvous (the `--dp` gradient-exchange barrier,
+//! including member departure mid-barrier) — under `loom::model`.
 //!
 //! loom has no `mpsc::sync_channel`, so under `cfg(loom)` the `mpsc`
 //! submodule provides a hand-rolled bounded channel built on the loom

@@ -1,8 +1,9 @@
 //! Coordinator integration: full Trainer loop, checkpoint save/restore
 //! equivalence, checkpoint retention, downstream probes above chance after
 //! training, FLOPS mirror vs manifest, grad-accum trainer path, and the
-//! experiment scheduler (serial/parallel determinism + failure isolation).
-//! Requires `make artifacts`.
+//! experiment scheduler (serial/parallel determinism + failure isolation),
+//! and data-parallel training (dp=2 bit-identical to dp=1 at the same
+//! global batch; replica failure isolation). Requires `make artifacts`.
 
 use std::sync::Arc;
 
@@ -223,6 +224,89 @@ fn trainer_grad_accum_path_runs() {
     let report = trainer.run().unwrap();
     assert!(report.final_loss.is_finite());
     assert_eq!(report.metrics.losses.len(), 4);
+}
+
+#[test]
+fn dp_two_replicas_bit_identical_to_dp_one() {
+    // The `--dp` acceptance guard: two replicas at the same GLOBAL batch
+    // must reproduce the one-replica run bit for bit — per-step losses AND
+    // the bytes of the final checkpoint. The host-side reduction sums raw
+    // per-microbatch gradients in global rank-major order, so the float
+    // association is identical no matter how many replicas contributed.
+    if !have("mamba-tiny") {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let bundle = open("mamba-tiny");
+    if bundle.manifest.batch_size % 2 != 0 {
+        eprintln!("skipping: batch size not divisible by 2");
+        return;
+    }
+    let run = |world: usize| {
+        let dir = std::env::temp_dir().join(format!("rom_integration_dp{world}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = TrainCfg { steps: 6, max_lr: 3e-3, log_every: 0, ..Default::default() };
+        let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
+        trainer.quiet = true;
+        trainer.final_eval = false;
+        trainer.dp = Some(world);
+        trainer.checkpoint_dir = Some(dir.clone());
+        let report = trainer.run().unwrap();
+        let ckpt = std::fs::read(
+            dir.join(format!("{}-step6.ckpt", bundle.manifest.name)),
+        )
+        .unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        (report, ckpt)
+    };
+    let (r1, ck1) = run(1);
+    let (r2, ck2) = run(2);
+    assert_eq!(r2.dp_stats.expect("dp run must report dp stats").world, 2);
+    assert_eq!(r1.metrics.losses.len(), r2.metrics.losses.len());
+    for (a, b) in r1.metrics.losses.iter().zip(r2.metrics.losses.iter()) {
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "step {}: dp=1 loss {} != dp=2 loss {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    assert_eq!(ck1, ck2, "final checkpoint bytes differ between dp=1 and dp=2");
+}
+
+#[test]
+fn dp_replica_failure_names_rank_and_drains() {
+    // Per-rank failure isolation: a replica that panics mid-run must surface
+    // as an error naming its rank, while the surviving replicas unblock from
+    // the gradient barrier and drain instead of deadlocking the run.
+    if !have("mamba-tiny") {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let bundle = open("mamba-tiny");
+    if bundle.manifest.batch_size % 2 != 0 {
+        eprintln!("skipping: batch size not divisible by 2");
+        return;
+    }
+    let cfg = TrainCfg { steps: 4, max_lr: 1e-3, log_every: 0, ..Default::default() };
+    let mut trainer = Trainer::new(Arc::clone(&bundle), cfg);
+    trainer.quiet = true;
+    trainer.final_eval = false;
+    trainer.dp = Some(2);
+    trainer.dp_fault = Some((1, 2));
+    let err = trainer.run().expect_err("injected replica fault must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("replica 1"), "error must name the failing rank: {msg}");
+    assert!(
+        msg.contains("drained cleanly"),
+        "error must report the surviving replicas drained: {msg}"
+    );
+    assert!(
+        msg.contains("fault injection"),
+        "root cause (the panic message) must survive into the error: {msg}"
+    );
 }
 
 #[test]

@@ -7,8 +7,10 @@
 //! re-export for loom's model-checked versions plus a hand-rolled bounded
 //! channel built on them, so every interleaving of the models below is
 //! explored exhaustively — including the shutdown races the unit tests can
-//! only sample: a producer blocked in `send` while the consumer drops, and
-//! `Drop` joining threads that are mid-handoff.
+//! only sample: a producer blocked in `send` while the consumer drops,
+//! `Drop` joining threads that are mid-handoff, and a `reduce_group`
+//! member departing while a peer is parked in the gradient-exchange
+//! barrier.
 //!
 //! Models are deliberately tiny (loom caps at 4 threads and state space is
 //! exponential): 1-worker pools, depth-1 channels, 1–2 items.
@@ -19,7 +21,9 @@
 use loom::sync::atomic::{AtomicUsize, Ordering};
 use loom::sync::Arc;
 
-use rom::substrate::pool::{line_pump, Pipeline, Prefetcher, ThreadPool};
+use rom::substrate::pool::{
+    line_pump, reduce_group, Pipeline, Prefetcher, ReduceError, ThreadPool,
+};
 use rom::substrate::sync::mpsc::sync_channel;
 
 #[test]
@@ -119,6 +123,59 @@ fn pipeline_drop_mid_stream_unwinds_both_stages() {
         let pl = Pipeline::new(1, || Some(1u32), |x| x);
         assert_eq!(pl.next(), Some(1));
         drop(pl);
+    });
+}
+
+#[test]
+fn reduce_group_folds_in_rank_order() {
+    loom::model(|| {
+        // Two members, arrival order decided by the scheduler; the fold must
+        // always see contributions slot-ordered by rank, never by arrival.
+        let mut members = reduce_group(2, |v: Vec<u32>| v);
+        let m1 = members.pop().unwrap();
+        let m0 = members.pop().unwrap();
+        let h = loom::thread::spawn(move || {
+            let r = m1.reduce(20).unwrap();
+            assert_eq!(*r, vec![10, 20]);
+        });
+        let r = m0.reduce(10).unwrap();
+        assert_eq!(*r, vec![10, 20]);
+        h.join().unwrap();
+    });
+}
+
+#[test]
+fn reduce_member_drop_mid_barrier_unblocks_peer() {
+    loom::model(|| {
+        // The dp failure mode: a replica unwinds (dropping its member)
+        // while a peer is parked in the barrier. Whether the drop lands
+        // before or after the peer arrives, the peer must get ReduceError —
+        // never deadlock, never a partial fold.
+        let mut members = reduce_group(2, |v: Vec<u32>| v);
+        let m1 = members.pop().unwrap();
+        let m0 = members.pop().unwrap();
+        let h = loom::thread::spawn(move || drop(m1));
+        assert_eq!(m0.reduce(10).unwrap_err(), ReduceError);
+        h.join().unwrap();
+    });
+}
+
+#[test]
+fn reduce_member_drop_after_round_fails_next_round() {
+    loom::model(|| {
+        // A reducer unwinding mid-stream: round 0 completes on both ranks,
+        // then rank 1 departs. Rank 0's next round must error out whether it
+        // arrives before or after the departure is recorded.
+        let mut members = reduce_group(2, |v: Vec<u32>| v.iter().sum::<u32>());
+        let m1 = members.pop().unwrap();
+        let m0 = members.pop().unwrap();
+        let h = loom::thread::spawn(move || {
+            assert_eq!(*m1.reduce(2).unwrap(), 3);
+            // m1 drops here — mid-stream from rank 0's point of view.
+        });
+        assert_eq!(*m0.reduce(1).unwrap(), 3);
+        assert_eq!(m0.reduce(1).unwrap_err(), ReduceError);
+        h.join().unwrap();
     });
 }
 

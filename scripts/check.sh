@@ -22,6 +22,16 @@ cargo test -q
 # (bench-write/thread-spawn confinement, coordinator unwraps, SAFETY
 # comments). Exits non-zero on any finding.
 cargo run --release --quiet -- analyze
+# Data-parallel host smoke: two replicas over the tiny bundle must finish a
+# short run through the deterministic reduce path. Needs compiled artifacts
+# (`make artifacts`), so it skips politely on a bare toolchain — the
+# dp-vs-single bit-identity itself is pinned by the integration tests.
+if [[ -d "artifacts/rom-tiny" || -d "../artifacts/rom-tiny" ]]; then
+  ROM_SKIP_EVAL=1 cargo run --release --quiet -- \
+    train rom-tiny --steps 2 --dp 2
+else
+  echo "note: artifacts/rom-tiny absent; skipping --dp 2 train smoke" >&2
+fi
 # Lint gate covers every target (lib, bin, benches, tests, examples); any
 # warning is an error. Skips gracefully where the clippy component is absent.
 if cargo clippy --version >/dev/null 2>&1; then
