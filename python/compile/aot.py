@@ -140,9 +140,14 @@ def lower_variant(cfg: ModelConfig, out_dir: str, golden: bool = False) -> Dict:
                 f"prefill_L{L}.hlo.txt",
                 jax.jit(decode.make_prefill_fn(cfg)).lower(
                     params_sd, sd((Bd, L), i32)))
+        # kv_cap: capacity of the full-attention KV-cache lanes (window <= 0
+        # swa blocks only; null for rolling-window and pure-SSM layouts). The
+        # rust coordinator uses it to stop requests cleanly at cap exhaustion.
+        full_attn = "swa" in cfg.block_layout() and cfg.window <= 0
         decode_manifest = {
             "batch": Bd,
             "prefill_lens": cfg.eval_lens,
+            "kv_cap": cfg.kv_cap if full_attn else None,
             "state": spec,
         }
 

@@ -112,6 +112,15 @@ class ModelConfig:
     def head_dim(self) -> int:
         return self.d_model // self.n_heads
 
+    @property
+    def kv_cap(self) -> int:
+        """Decode KV-cache capacity for full-attention blocks (window <= 0):
+        2x the longest context any artifact is built for, so every prefill
+        length fits and generation can run well past training length. A
+        derived quantity (not a stored field), mirrored by rust
+        `ModelCfg::kv_cap` and recorded in the manifest's decode section."""
+        return 2 * max([self.seq_len, *self.eval_lens])
+
     def block_layout(self) -> List[str]:
         """Per-layer block kinds, mirroring the paper's Figure 5 layouts.
 

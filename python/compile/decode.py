@@ -30,9 +30,20 @@ runtime can allocate, thread and validate it without rebuilding the model:
   blocks.{i}.k_cache (B, W, D)     f32   SWA rolling key cache (post-RoPE)
   blocks.{i}.v_cache (B, W, D)     f32   SWA rolling value cache
 
-B is `cfg.decode_batch`. SWA blocks require cfg.window > 0 (the cache
-capacity is the window); variants with window <= 0 get no decode artifacts
-(`unsupported_reason` names why, and the manifest records it).
+B is `cfg.decode_batch`. Attention caches come in two flavors sharing the
+leaf names above:
+
+  * window > 0 (SWA): rolling caches of capacity W = cfg.window, oldest
+    slot first — constant memory, the Samba serving mode.
+  * window <= 0 (full attention, the llama proxy and attn+SSM hybrids):
+    capped position-indexed caches of capacity W = cfg.kv_cap; slot c holds
+    absolute position c, written by a dynamic scatter at `pos`. The cap is
+    recorded as the manifest's `decode.kv_cap` so the rust coordinator can
+    refuse/stop requests that would overrun it (cap-exhaustion is a clean
+    per-request stop, never a cache overwrite).
+
+Every preset layout decodes; `unsupported_reason` is retained as the
+manifest's decode/decode_unsupported XOR contract hook.
 """
 
 from __future__ import annotations
@@ -43,7 +54,9 @@ import jax
 import jax.numpy as jnp
 
 from compile.config import ModelConfig
-from compile.layers.attention import attn_block_prefill, attn_block_step
+from compile.layers.attention import (attn_block_prefill,
+                                      attn_block_prefill_full,
+                                      attn_block_step, attn_block_step_full)
 from compile.layers.gdn import gdn_block_prefill, gdn_block_step
 from compile.layers.mamba2 import mamba2_block_prefill, mamba2_block_step
 from compile.layers.mlp import mlp_block
@@ -53,11 +66,13 @@ from compile.layers.ssm import mamba_block_prefill, mamba_block_step
 
 
 def unsupported_reason(cfg: ModelConfig) -> Optional[str]:
-    """None if the variant can decode, else a human-readable reason."""
-    if "swa" in cfg.block_layout() and cfg.window <= 0:
-        return ("swa block with window <= 0: the decode KV cache capacity is "
-                "the sliding window, so full-context attention has no "
-                "fixed-shape state")
+    """None if the variant can decode, else a human-readable reason.
+
+    Every current layout decodes — window <= 0 attention uses the capped
+    `cfg.kv_cap` cache instead of a rolling window — so this always returns
+    None today. It stays as the single gate `aot` consults (and the manifest
+    decode/decode_unsupported XOR contract hangs off it) for any future
+    layout that genuinely cannot carry fixed-shape state."""
     return None
 
 
@@ -87,8 +102,9 @@ def state_spec(cfg: ModelConfig) -> List[Dict]:
             add(f"blocks.{i}.conv", [B, k - 1, Di])
             add(f"blocks.{i}.delta", [B, H, Di // H, Di // H])
         elif kind == "swa":
-            add(f"blocks.{i}.k_cache", [B, cfg.window, D])
-            add(f"blocks.{i}.v_cache", [B, cfg.window, D])
+            W = cfg.window if cfg.window > 0 else cfg.kv_cap
+            add(f"blocks.{i}.k_cache", [B, W, D])
+            add(f"blocks.{i}.v_cache", [B, W, D])
         elif kind == "mlp":
             pass  # stateless
         else:
@@ -146,7 +162,8 @@ def forward_step(cfg: ModelConfig, params: Dict, token: jax.Array,
             cursor += 2
             prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
         elif kind == "swa":
-            out, kc, vc = attn_block_step(
+            step = attn_block_step if cfg.window > 0 else attn_block_step_full
+            out, kc, vc = step(
                 cfg, p, h, state[cursor], state[cursor + 1], pos)
             new_state += [kc, vc]
             cursor += 2
@@ -214,7 +231,10 @@ def make_prefill_fn(cfg: ModelConfig):
                 state += [conv, delta]
                 prev_rom_routing = rom_r if rom_r is not None else prev_rom_routing
             elif kind == "swa":
-                out, kc, vc = attn_block_prefill(cfg, p, h)
+                if cfg.window > 0:
+                    out, kc, vc = attn_block_prefill(cfg, p, h)
+                else:
+                    out, kc, vc = attn_block_prefill_full(cfg, p, h, cfg.kv_cap)
                 state += [kc, vc]
             elif kind == "mlp":
                 inherited = None

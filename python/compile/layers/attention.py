@@ -215,3 +215,111 @@ def attn_block_step(cfg: ModelConfig, p: Dict, x: jax.Array,
     ctx = jnp.einsum("bhw,bwhd->bhd", attn, vc).reshape(B, D)
     out = proj("o", ctx)
     return out, k_cache, v_cache
+
+
+def attn_block_prefill_full(cfg: ModelConfig, p: Dict, x: jax.Array, cap: int):
+    """Parallel-in-T full-causal forward from position 0 that also builds the
+    capped position-indexed KV caches `attn_block_step_full` continues from.
+
+    Unlike the rolling SWA caches, slot c of a full-attention cache holds
+    absolute position c: rows 0..T-1 are the prompt's post-RoPE keys/values
+    and rows T..cap-1 stay zero until decode writes them. The step's validity
+    mask (`slot <= pos`) keeps the unwritten tail unreadable.
+
+    Args:
+      x: (B, T, D) token representations, positions 0..T-1. Requires T <= cap.
+    Returns:
+      (out (B, T, D), k_cache (B, cap, D), v_cache (B, cap, D)).
+    """
+    B, T, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    if T > cap:
+        raise ValueError(f"prompt length {T} exceeds kv_cap {cap}")
+    flat = x.reshape(B * T, D)
+
+    r: Optional[Routing] = None
+    if cfg.attn_moe != "none":
+        r = route_tokens(flat, p["router"], top_k=1)
+
+    def proj(bank: str, inp):
+        w = p[f"w_{bank}"]
+        if w.ndim == 3 and w.shape[0] > 1:
+            y = bank_apply(inp, w, r)
+            if bank == "o":
+                y = y * jnp.sum(r.gates, axis=-1, keepdims=True)
+            return y
+        return bank_apply(inp, w, None)
+
+    q = proj("q", flat).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    kk = proj("k", flat).reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    v_rows = proj("v", flat).reshape(B, T, D)              # step cache layout
+    v = v_rows.reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    q, kk = rope(q), rope(kk)                              # absolute pos 0..T-1
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, kk) / jnp.sqrt(Dh)
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    scores = jnp.where(i >= j, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bhsd->bhtd", attn, v)
+    out = proj("o", ctx.transpose(0, 2, 1, 3).reshape(B * T, D))
+
+    k_rows = kk.transpose(0, 2, 1, 3).reshape(B, T, D)     # post-RoPE keys
+    k_cache = jnp.pad(k_rows, ((0, 0), (0, cap - T), (0, 0)))
+    v_cache = jnp.pad(v_rows, ((0, 0), (0, cap - T), (0, 0)))
+    return out.reshape(B, T, D), k_cache, v_cache
+
+
+def attn_block_step_full(cfg: ModelConfig, p: Dict, x: jax.Array,
+                         k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array):
+    """One-token forward of full causal attention on capped KV caches.
+
+    Args:
+      x: (B, D) token representations.
+      k_cache/v_cache: (B, cap, D) position-indexed caches; slot c holds the
+        post-RoPE key/value row of absolute position c (zeros where unwritten).
+        The incoming token is scatter-written at slot `pos`, so the caller
+        must guarantee pos < cap — XLA clamps out-of-range dynamic-update
+        indices, which would silently overwrite slot cap-1 (the rust
+        coordinator enforces the cap host-side before each step).
+      pos: traced i32 scalar, the absolute position of the incoming token.
+    Returns:
+      (out (B, D), new_k_cache, new_v_cache).
+    """
+    B, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    cap = k_cache.shape[1]
+
+    r: Optional[Routing] = None
+    if cfg.attn_moe != "none":
+        r = route_tokens(x, p["router"], top_k=1)
+
+    def proj(bank: str, inp):
+        w = p[f"w_{bank}"]
+        if w.ndim == 3 and w.shape[0] > 1:
+            y = bank_apply(inp, w, r)
+            if bank == "o":
+                y = y * jnp.sum(r.gates, axis=-1, keepdims=True)
+            return y
+        return bank_apply(inp, w, None)
+
+    q = rope_at(proj("q", x).reshape(B, H, Dh), pos)
+    k = rope_at(proj("k", x).reshape(B, H, Dh), pos)
+    v = proj("v", x)
+
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.reshape(B, 1, D), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v[:, None, :], pos, axis=1)
+    kc = k_cache.reshape(B, cap, H, Dh)
+    vc = v_cache.reshape(B, cap, H, Dh)
+
+    scores = jnp.einsum("bhd,bchd->bhc", q, kc) / jnp.sqrt(Dh)
+    # Slot c holds absolute position c; valid iff already written (c <= pos)
+    # — exactly the causal i >= j training mask.
+    valid = jnp.arange(cap) <= pos
+    scores = jnp.where(valid[None, None, :], scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhc,bchd->bhd", attn, vc).reshape(B, D)
+    out = proj("o", ctx)
+    return out, k_cache, v_cache

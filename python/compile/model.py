@@ -74,6 +74,12 @@ def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array,
     all_stats: List[Routing] = []
     prev_rom_routing: Optional[Routing] = None
     window = window_override if window_override is not None else cfg.window
+    if window is not None and window <= 0:
+        # window <= 0 means full causal attention (the llama proxy and
+        # attn+SSM hybrids); attn_block spells that `window=None`. Passing 0
+        # raw would mask every score — (i>=j) & (i-j<0) is empty — degrading
+        # attention to a uniform average over ALL positions, future included.
+        window = None
 
     for i, kind in enumerate(layout):
         p = params["blocks"][i]

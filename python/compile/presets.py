@@ -63,6 +63,11 @@ def all_presets() -> Dict[str, ModelConfig]:
 
     # ---- Table 1 extras ----------------------------------------------------
     p["llama"] = _mk("llama", arch="llama", n_layers=3, d_model=96, window=0)
+    # Attention+SSM hybrid with FULL attention (window=0): the Samba layout
+    # serving through the capped kv_cap decode path instead of rolling SWA —
+    # the paper's §hybrid configuration (RoM scaling hybrids, 23% FLOPS
+    # saving) as a decodable preset.
+    p["hybrid"] = _mk("hybrid", arch="samba", **samba_dims, window=0)
     p["mamba-t1"] = _mk("mamba-t1", arch="mamba", n_layers=6, d_model=96)
     p["samba-e2-moa"] = _mk("samba-e2-moa", arch="samba", **samba_dims,
                             attn_moe="moa", attn_moe_experts=8)

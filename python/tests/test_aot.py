@@ -71,6 +71,7 @@ def test_decode_manifest_section(tmp_path):
     assert dec is not None and man["decode_unsupported"] is None
     assert dec["batch"] == cfg.decode_batch
     assert dec["prefill_lens"] == cfg.eval_lens
+    assert dec["kv_cap"] is None  # pure-SSM layout: no full-attn cache lane
     assert dec["state"] == decode.state_spec(cfg)
     assert dec["state"][0] == {"name": "pos", "shape": [], "dtype": "int32"}
     # Decode HLO obeys the same XLA 0.5.1 parser constraints as training.
@@ -82,14 +83,18 @@ def test_decode_manifest_section(tmp_path):
             assert bad not in text, f"incompatible opcode {bad!r} in {stem}"
 
 
-def test_decode_unsupported_variant_skips_artifacts(tmp_path):
+def test_full_attention_variant_emits_decode_with_kv_cap(tmp_path):
     cfg = ModelConfig(name="aot-llama", arch="llama", n_layers=1, d_model=32,
                       vocab_size=64, window=0, batch_size=2, seq_len=16,
                       eval_lens=[16])
     man = lower_variant(cfg, str(tmp_path))
-    assert man["decode"] is None
-    assert "window" in man["decode_unsupported"]
-    assert "decode_step.hlo.txt" not in os.listdir(tmp_path)
+    assert man["decode_unsupported"] is None
+    dec = man["decode"]
+    assert dec["kv_cap"] == cfg.kv_cap == 32
+    caches = [s for s in dec["state"] if s["name"].endswith("cache")]
+    assert caches and all(s["shape"][1] == dec["kv_cap"] for s in caches)
+    assert {"decode_step.hlo.txt", "prefill_L16.hlo.txt"} <= set(
+        os.listdir(tmp_path))
 
 
 def test_emit_configs_roundtrip(tmp_path):

@@ -42,6 +42,15 @@ CFGS = {
                              ffn_moe_share_router=True),
     "samba-moa": _cfg(arch="samba", n_layers=1, attn_moe="moa",
                       attn_moe_experts=4),
+    # Full attention (window=0) through the capped kv_cap caches: the llama
+    # proxy and the attn+SSM hybrid the paper's §hybrid results headline.
+    "llama-full": _cfg(arch="llama", window=0),
+    "hybrid-full": _cfg(arch="samba", n_layers=1, window=0),
+    "hybrid-full-rom": _cfg(arch="samba", n_layers=1, window=0,
+                            rom_targets=["conv", "gate", "out"],
+                            routing="shared", rom=MoEConfig(num_experts=4),
+                            ffn_moe=MoEConfig(num_experts=4),
+                            ffn_moe_share_router=True),
 }
 
 
@@ -184,11 +193,46 @@ def test_state_spec_matches_init_state():
             assert s["dtype"] == str(arr.dtype), (name, s["name"])
 
 
-def test_unsupported_window():
+def test_full_attention_layouts_are_supported():
+    """window <= 0 layouts decode through the capped kv_cap caches: no
+    layout records decode_unsupported, and the cache leaves take capacity
+    cfg.kv_cap instead of cfg.window."""
+    for cfg in (_cfg(arch="llama", window=0),
+                _cfg(arch="samba", n_layers=1, window=0),
+                _cfg(window=0)):
+        assert decode.unsupported_reason(cfg) is None, cfg.arch
     cfg = _cfg(arch="llama", window=0)
-    reason = decode.unsupported_reason(cfg)
-    assert reason is not None and "window" in reason
-    with pytest.raises(ValueError):
-        decode.state_spec(cfg)
-    # Pure-SSM archs never hit the window constraint, whatever window says.
-    assert decode.unsupported_reason(_cfg(window=0)) is None
+    assert cfg.kv_cap == 2 * max([cfg.seq_len, *cfg.eval_lens])
+    caches = [s for s in decode.state_spec(cfg) if "cache" in s["name"]]
+    assert caches, "llama layout must carry KV-cache leaves"
+    for s in caches:
+        assert s["shape"] == [cfg.decode_batch, cfg.kv_cap, cfg.d_model], s
+    # Rolling SWA caches are untouched: capacity stays the window.
+    swa = _cfg(arch="samba", n_layers=1, window=8)
+    for s in decode.state_spec(swa):
+        if "cache" in s["name"]:
+            assert s["shape"][1] == swa.window, s
+
+
+@pytest.mark.parametrize("name", ["llama-full", "hybrid-full"])
+def test_full_attention_decode_to_cap_boundary(name):
+    """Prefill + stepwise decode right up to the kv_cap boundary: the last
+    emitted logits consume a state whose final cache write landed in slot
+    kv_cap - 1 (prompt + new tokens == kv_cap), well past training seq_len.
+    Parity against the full forward pins both the scatter-write indexing and
+    the validity mask at the cap edge."""
+    cfg = CFGS[name]
+    T, P = cfg.kv_cap, cfg.eval_lens[0]           # 32 total, prefill 8
+    assert T > cfg.seq_len, "cap boundary must lie beyond training length"
+    params = init_params(cfg, jax.random.PRNGKey(6))
+    tokens = _tokens(cfg, T, seed=13)
+    full, _ = forward(cfg, params, tokens, None)
+    logits, state = jax.jit(decode.make_prefill_fn(cfg))(params, tokens[:, :P])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, P - 1]),
+                               rtol=2e-4, atol=2e-4)
+    step = jax.jit(decode.make_decode_step_fn(cfg))
+    for t in range(P, T):
+        logits, state = step(params, tokens[:, t], state)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, T - 1]),
+                               rtol=5e-4, atol=5e-4)
+    assert int(state[0]) == cfg.kv_cap

@@ -120,6 +120,11 @@ fn main() {
     for &(l, ms, _) in &prefill_rows {
         fields.push((format!("gen_prefill_L{l}_ms"), Json::num(ms)));
     }
+    // Full-attention layouts carry a capped KV lane; record the capacity so
+    // trajectory diffs can tell cache-bound decode rates from unbounded ones.
+    if let Some(cap) = spec.kv_cap {
+        fields.push(("gen_kv_cap".into(), Json::num(cap as f64)));
+    }
     merge_bench_json(&path, |map| {
         for (k, v) in fields {
             map.insert(k, v);

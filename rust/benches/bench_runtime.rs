@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use rom::config::TrainCfg;
 use rom::coordinator::checkpoint::Checkpoint;
-use rom::coordinator::serve::{Engine, Request as ServeRequest, ServeCfg, Submit};
+use rom::coordinator::serve::{Engine, FinishReason, Request as ServeRequest, ServeCfg, Submit};
 use rom::coordinator::trainer::{TrainReport, Trainer};
 use rom::data::corpus::{Corpus, CorpusSpec};
 use rom::data::loader::Loader;
@@ -328,6 +328,7 @@ fn main() {
             dspec.batch
         );
         let mut engine = Engine::new(&sess, &ServeCfg { queue_cap: n_req }).unwrap();
+        let mut responses = Vec::new();
         let (_, serve_s) = time_once(|| {
             for i in 0..n_req as u64 {
                 let req = ServeRequest {
@@ -343,7 +344,7 @@ fn main() {
                     Submit::Rejected(_) => unreachable!("queue sized to n_req"),
                 }
             }
-            engine.drain(&sess).unwrap();
+            responses = engine.drain(&sess).unwrap();
         });
         let rep = engine.report();
         let serve_tps = rep.emitted_tokens as f64 / serve_s.max(1e-9);
@@ -357,6 +358,13 @@ fn main() {
         serve_fields.push(("serve_max_new", Json::num(serve_new as f64)));
         serve_fields.push(("serve_tokens_per_sec", Json::num(serve_tps)));
         serve_fields.push(("serve_prefills", Json::num(rep.prefills as f64)));
+        // Full-attention layouts can cut requests short at the KV cap; the
+        // count distinguishes "slow" from "truncated" in trajectory diffs.
+        let exhausted = responses
+            .iter()
+            .filter(|r| r.finish == FinishReason::KvCapExhausted)
+            .count();
+        serve_fields.push(("serve_kv_cap_exhausted", Json::num(exhausted as f64)));
         if let Some(q) = &rep.queue_wait {
             serve_fields.push(("serve_queue_wait_ms_p50", Json::num(q.p50_ms)));
         }

@@ -20,6 +20,11 @@
 //!   dim 0, KV-cache leaves appear iff the block layout has SWA blocks —
 //!   and the whole flat state list must equal, leaf for leaf, the
 //!   rust-side mirror of `python/compile/decode.py::state_spec`;
+//! * `decode.kv_cap`: a full-attention layout (swa blocks with window 0)
+//!   must declare an integer cache capacity equal to the `ModelCfg::kv_cap`
+//!   derivation AND to the cache leaves' capacity dim; any other layout
+//!   must leave it null/absent (the coordinator stops requests at the cap,
+//!   so a wrong value means silent cache overwrites or spurious stops);
 //!
 //! Findings are anchored to the manifest's real file/line via a JSON-path
 //! index built from the source text, so a mutated field is reported where
@@ -413,8 +418,12 @@ fn expected_state(cfg: &ModelCfg, b: u64) -> Result<Vec<Leaf>, String> {
                 add(i, "delta", vec![b, h, di / h, di / h]);
             }
             "swa" => {
-                add(i, "k_cache", vec![b, w, d]);
-                add(i, "v_cache", vec![b, w, d]);
+                // window > 0: rolling cache of capacity `window`; window 0:
+                // full attention on a capped position-indexed cache of
+                // capacity kv_cap (mirrors decode.py::state_spec).
+                let cap = if w > 0 { w } else { cfg.kv_cap() as u64 };
+                add(i, "k_cache", vec![b, cap, d]);
+                add(i, "v_cache", vec![b, cap, d]);
             }
             "mlp" => {} // stateless
             other => return Err(format!("unknown block kind {other:?}")),
@@ -625,22 +634,23 @@ fn check_decode(c: &mut Checker, j: &Json, cfg: Option<&ModelCfg>, eval_lens: Op
                     "must be a non-empty reason string when decode is null",
                 ),
             }
-            // The only layout the emitter refuses is SWA with window <= 0
-            // (full-context attention has no fixed-shape KV state).
+            // The emitter decodes every preset layout — window <= 0
+            // attention carries a capped kv_cap cache instead of a rolling
+            // window — so a non-null reason on a parseable config always
+            // contradicts it (stale pre-kv_cap manifest: re-run
+            // `make artifacts`).
             if let Some(cfg) = cfg {
-                let layout = cfg.block_layout().unwrap_or_default();
-                if !(layout.contains(&"swa") && cfg.window == 0) {
-                    c.fail(
-                        "contract/decode",
-                        "decode_unsupported",
-                        format!(
-                            "set for arch {:?} window {} — python only refuses \
-                             swa layouts with window <= 0, so this manifest \
-                             disagrees with the emitter",
-                            cfg.arch, cfg.window
-                        ),
-                    );
-                }
+                c.fail(
+                    "contract/decode",
+                    "decode_unsupported",
+                    format!(
+                        "set for arch {:?} window {} — the emitter decodes \
+                         every preset layout (window <= 0 attention uses the \
+                         capped kv_cap cache), so this manifest disagrees \
+                         with the emitter",
+                        cfg.arch, cfg.window
+                    ),
+                );
             }
             return;
         }
@@ -656,18 +666,6 @@ fn check_decode(c: &mut Checker, j: &Json, cfg: Option<&ModelCfg>, eval_lens: Op
         (Some(_), None) => {}
     }
     let d = decode.expect("checked above");
-    if let Some(cfg) = cfg {
-        let layout = cfg.block_layout().unwrap_or_default();
-        if layout.contains(&"swa") && cfg.window == 0 {
-            c.fail(
-                "contract/decode",
-                "decode",
-                "state spec present for an swa layout with window 0 — python \
-                 records decode_unsupported for these",
-            );
-        }
-    }
-
     let batch = uint_field(c, d, "decode", "batch", 1);
     if let Some(lens) = field(c, d, "decode", "prefill_lens")
         .and_then(|v| uint_list(c, v, "decode.prefill_lens", 1))
@@ -759,6 +757,81 @@ fn check_decode(c: &mut Checker, j: &Json, cfg: Option<&ModelCfg>, eval_lens: Op
                     cfg.arch
                 ),
             );
+        }
+
+        // kv_cap: a full-attention layout (swa with window 0) must declare
+        // the cache capacity the coordinator stops requests at; everything
+        // else must leave it null/absent. The declared value must match
+        // both the config derivation and the cache leaves themselves —
+        // a lie in either direction means silent slot-(cap-1) overwrites
+        // (XLA clamps the scatter index) or spuriously refused requests.
+        let full_attn = has_swa && cfg.window == 0;
+        let kv_cap = match d.as_obj().ok().and_then(|o| o.get("kv_cap")) {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(v),
+        };
+        match (full_attn, kv_cap) {
+            (true, None) => c.fail(
+                "contract/decode",
+                "decode.kv_cap",
+                format!(
+                    "missing for full-attention layout {:?} (swa with window 0) \
+                     — the coordinator cannot bound the KV cache without it",
+                    cfg.arch
+                ),
+            ),
+            (true, Some(v)) => match as_uint(v) {
+                None => c.fail(
+                    "contract/decode",
+                    "decode.kv_cap",
+                    format!(
+                        "must be an integer-valued number >= 1 ({} found; \
+                         Json::as_usize would silently truncate)",
+                        v.kind()
+                    ),
+                ),
+                Some(0) => c.fail("contract/decode", "decode.kv_cap", "must be >= 1"),
+                Some(cap) => {
+                    if cap != cfg.kv_cap() as u64 {
+                        c.fail(
+                            "contract/decode",
+                            "decode.kv_cap",
+                            format!(
+                                "declares {cap} but ModelCfg::kv_cap derives {} \
+                                 (2x the longest of seq_len and eval_lens)",
+                                cfg.kv_cap()
+                            ),
+                        );
+                    }
+                    for (i, l) in state.iter().enumerate() {
+                        let is_cache = l.name.ends_with(".k_cache")
+                            || l.name.ends_with(".v_cache");
+                        if is_cache && l.shape.get(1) != Some(&cap) {
+                            c.fail(
+                                "contract/decode",
+                                &format!("decode.state[{i}].shape"),
+                                format!(
+                                    "cache `{}` has capacity dim {:?} but \
+                                     decode.kv_cap declares {cap}",
+                                    l.name,
+                                    l.shape.get(1)
+                                ),
+                            );
+                        }
+                    }
+                }
+            },
+            (false, Some(_)) => c.fail(
+                "contract/decode",
+                "decode.kv_cap",
+                format!(
+                    "set for arch {:?} window {} — only full-attention layouts \
+                     (swa with window 0) carry a capped KV lane; rolling-window \
+                     and pure-SSM layouts must leave it null",
+                    cfg.arch, cfg.window
+                ),
+            ),
+            (false, None) => {}
         }
 
         // The full mirror: the emitted flat state must equal state_spec.
@@ -1004,8 +1077,8 @@ mod tests {
 
     #[test]
     fn unjustified_unsupported_reason_is_flagged() {
-        // A mamba layout claiming decode is unsupported contradicts the
-        // emitter (only swa with window <= 0 refuses).
+        // Every preset layout decodes now (full attention included), so any
+        // claimed unsupported reason contradicts the emitter.
         let start = valid().find("\"decode\": {").unwrap();
         let end = valid().find("\n \"decode_unsupported\"").unwrap();
         let mut bad = valid();
@@ -1017,7 +1090,7 @@ mod tests {
         let f = check(&bad);
         assert!(
             f.iter().any(|f| f.rule == "contract/decode"
-                && f.message.contains("python only refuses")),
+                && f.message.contains("decodes every preset layout")),
             "{f:?}"
         );
     }
@@ -1037,6 +1110,98 @@ mod tests {
             vec!["pos", "blocks.0.conv", "blocks.0.ssm", "blocks.1.k_cache", "blocks.1.v_cache"]
         );
         assert_eq!(spec[3].shape, vec![2, 4, 4]); // [B, window, d_model]
+        // window 0 = full attention: capacity flips to the kv_cap derivation.
+        swa_cfg.window = 0;
+        let spec = expected_state(&swa_cfg, 2).unwrap();
+        assert_eq!(spec[3].shape, vec![2, swa_cfg.kv_cap() as u64, 4]);
+        assert_eq!(spec[4].shape, vec![2, 16, 4]); // 2 * max(seq_len 8, [8])
+    }
+
+    /// Full-attention variant of `valid()`: llama layout (1 group = swa+mlp),
+    /// window 0, seq_len 8, eval_lens [8] -> kv_cap 16.
+    fn valid_full_attn() -> String {
+        valid()
+            .replace("\"arch\": \"mamba\"", "\"arch\": \"llama\"")
+            .replace("\"window\": 4", "\"window\": 0")
+            .replace(
+                r#""prefill_lens": [8],
+  "state": [
+   {"dtype": "int32", "name": "pos", "shape": []},
+   {"dtype": "float32", "name": "blocks.0.conv", "shape": [1, 1, 8]},
+   {"dtype": "float32", "name": "blocks.0.ssm", "shape": [1, 8, 2]}
+  ]"#,
+                r#""kv_cap": 16,
+  "prefill_lens": [8],
+  "state": [
+   {"dtype": "int32", "name": "pos", "shape": []},
+   {"dtype": "float32", "name": "blocks.0.k_cache", "shape": [1, 16, 4]},
+   {"dtype": "float32", "name": "blocks.0.v_cache", "shape": [1, 16, 4]}
+  ]"#,
+            )
+    }
+
+    #[test]
+    fn full_attention_manifest_is_clean() {
+        let f = check(&valid_full_attn());
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    #[test]
+    fn missing_kv_cap_on_full_attention_is_flagged() {
+        let bad = valid_full_attn().replace("\"kv_cap\": 16,\n  ", "");
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.rule == "contract/decode"
+                && f.message.contains("decode.kv_cap")
+                && f.message.contains("missing for full-attention")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn fractional_kv_cap_is_flagged_not_truncated() {
+        let bad = valid_full_attn().replace("\"kv_cap\": 16,", "\"kv_cap\": 16.5,");
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.rule == "contract/decode"
+                && f.message.contains("decode.kv_cap")
+                && f.message.contains("integer-valued")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn kv_cap_disagreeing_with_derivation_and_caches_is_flagged() {
+        // 12 != the kv_cap derivation (16) and != the cache leaves' dim 1.
+        let bad = valid_full_attn().replace("\"kv_cap\": 16,", "\"kv_cap\": 12,");
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.rule == "contract/decode"
+                && f.message.contains("ModelCfg::kv_cap derives 16")),
+            "{f:?}"
+        );
+        assert!(
+            f.iter().any(|f| f.rule == "contract/decode"
+                && f.message.contains("capacity dim")
+                && f.message.contains("decode.state[1]")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn kv_cap_on_non_full_attention_layout_is_flagged() {
+        // The mamba fixture has no full-attn lane; declaring a cap lies to
+        // the coordinator about a cache that does not exist.
+        let bad = valid().replace(
+            "\"prefill_lens\": [8],",
+            "\"kv_cap\": 16,\n  \"prefill_lens\": [8],",
+        );
+        let f = check(&bad);
+        assert!(
+            f.iter().any(|f| f.rule == "contract/decode"
+                && f.message.contains("only full-attention layouts")),
+            "{f:?}"
+        );
     }
 
     #[test]

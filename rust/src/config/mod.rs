@@ -111,6 +111,15 @@ impl ModelCfg {
         self.expand * self.d_model
     }
 
+    /// Decode KV-cache capacity for full-attention blocks (window <= 0):
+    /// 2x the longest context any artifact is built for. Mirrors the python
+    /// `ModelConfig.kv_cap` derived property — a function of seq_len and
+    /// eval_lens, never a stored config field — and is what the manifest's
+    /// `decode.kv_cap` must equal for full-attention layouts.
+    pub fn kv_cap(&self) -> usize {
+        2 * self.eval_lens.iter().copied().chain([self.seq_len]).max().unwrap_or(self.seq_len)
+    }
+
     /// Per-layer block kinds — mirrors ModelConfig.block_layout().
     pub fn block_layout(&self) -> Result<Vec<&'static str>> {
         let mut out = Vec::new();
@@ -207,6 +216,16 @@ mod tests {
         assert_eq!(cfg.block_layout().unwrap(), vec!["mamba", "mamba"]);
         cfg.arch = "llama".into();
         assert_eq!(cfg.block_layout().unwrap(), vec!["swa", "mlp", "swa", "mlp"]);
+    }
+
+    #[test]
+    fn kv_cap_mirrors_python_derivation() {
+        let mut cfg = ModelCfg::parse(&Json::parse(DOC).unwrap()).unwrap();
+        assert_eq!(cfg.kv_cap(), 1024); // 2 * max(eval_lens=[128,256,512], 128)
+        cfg.eval_lens = vec![64];
+        assert_eq!(cfg.kv_cap(), 256); // seq_len 128 dominates
+        cfg.eval_lens.clear();
+        assert_eq!(cfg.kv_cap(), 256);
     }
 
     #[test]

@@ -254,6 +254,22 @@ pub fn generate(
             bail!("prompt {i}: token {t} outside the vocabulary [0, {})", man.vocab_size);
         }
     }
+    // Full-attention layouts have a hard cache capacity: consuming the prompt
+    // writes slots 0..prompt_len-1 and the max_new-1 sampling steps write up
+    // to slot prompt_len+max_new-2, so the whole request must fit under
+    // kv_cap up front (the device scatter would silently clamp into the last
+    // slot otherwise).
+    if let Some(cap) = spec.kv_cap {
+        let slots_needed = prompt_len + cfg.max_new - 1;
+        if slots_needed > cap {
+            bail!(
+                "request exceeds the KV cache capacity: prompt_len {prompt_len} + \
+                 max_new {} needs {slots_needed} cache slots but decode.kv_cap \
+                 is {cap} — shorten the prompt or lower --max-new",
+                cfg.max_new
+            );
+        }
+    }
 
     let bd = spec.batch;
     let vocab = man.vocab_size;

@@ -28,6 +28,13 @@
 //! admits a FIFO run of equal-length prompts on a fresh state, and swaps
 //! nothing in mid-stream. Pure-SSM layouts get full continuous batching.
 //!
+//! Full-attention layouts (window <= 0) additionally carry a capped KV
+//! cache of `decode.kv_cap` absolute positions. The engine never steps
+//! past the cap: a prompt longer than the cap is rejected at `submit`,
+//! and a request whose generation reaches the cap mid-stream is retired
+//! cleanly with `FinishReason::KvCapExhausted` — never a panic, and never
+//! a silently-clamped cache write.
+//!
 //! The engine is deliberately single-threaded and pull-based: `submit`
 //! enqueues (bounded, with backpressure), `step` advances the world by at
 //! most one batched decode call, and the caller owns the loop — the CLI
@@ -98,6 +105,12 @@ pub enum FinishReason {
     MaxNew,
     /// Sampled its stop token (included in the output).
     Stop,
+    /// The layout's KV cache (`decode.kv_cap` slots for full-attention
+    /// blocks) ran out of positions before `max_new` tokens were emitted.
+    /// The request keeps everything sampled so far; stepping past the cap
+    /// is never attempted (XLA would silently clamp the scatter index and
+    /// corrupt the last cache slot).
+    KvCapExhausted,
 }
 
 /// One completed request with its latency breakdown.
@@ -210,6 +223,10 @@ pub struct Engine {
     prefill_lens: Vec<usize>,
     /// SWA layouts read the shared `pos` scalar: gang admission only.
     position_dependent: bool,
+    /// KV-cache capacity for full-attention layouts (manifest
+    /// `decode.kv_cap`); None for rolling-window and pure-SSM state, whose
+    /// footprint is position-invariant.
+    kv_cap: Option<usize>,
     queue_cap: usize,
     next_id: u64,
     // Accumulators behind `report()`.
@@ -223,8 +240,12 @@ pub struct Engine {
 }
 
 /// Request sanity against the manifest (free function so the CLI can check
-/// lines before they ever reach the engine).
-pub fn validate_request(req: &Request, vocab: usize) -> Result<()> {
+/// lines before they ever reach the engine). `kv_cap` is the manifest's
+/// `decode.kv_cap` (None for layouts without a capped KV lane): a prompt
+/// longer than the cap can never be consumed, so it is rejected here;
+/// prompts that fit but whose `max_new` would overrun the cap ARE admitted
+/// and finish early with `FinishReason::KvCapExhausted`.
+pub fn validate_request(req: &Request, vocab: usize, kv_cap: Option<usize>) -> Result<()> {
     if req.prompt.is_empty() {
         bail!("empty prompt");
     }
@@ -233,6 +254,15 @@ pub fn validate_request(req: &Request, vocab: usize) -> Result<()> {
     }
     if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
         bail!("token {t} outside the vocabulary [0, {vocab})");
+    }
+    if let Some(cap) = kv_cap {
+        if req.prompt.len() > cap {
+            bail!(
+                "prompt of {} tokens exceeds the KV cache capacity {cap} \
+                 (decode.kv_cap) — it can never be consumed",
+                req.prompt.len()
+            );
+        }
     }
     Ok(())
 }
@@ -251,6 +281,7 @@ impl Engine {
             vocab: sess.bundle.manifest.vocab_size,
             prefill_lens: spec.prefill_lens.clone(),
             position_dependent: spec.position_dependent(),
+            kv_cap: spec.kv_cap,
             queue_cap: cfg.queue_cap,
             next_id: 0,
             completed: 0,
@@ -267,7 +298,7 @@ impl Engine {
     /// queue is full (backpressure); `Err` means the request itself is
     /// invalid and retrying cannot help.
     pub fn submit(&mut self, req: Request) -> Result<Submit> {
-        validate_request(&req, self.vocab)?;
+        validate_request(&req, self.vocab, self.kv_cap)?;
         if self.queue.len() >= self.queue_cap {
             return Ok(Submit::Rejected(req));
         }
@@ -359,7 +390,7 @@ impl Engine {
             if slot.sampler.finished() {
                 // Completed at admission (max_new == 1 or instant stop):
                 // never occupies the live state.
-                self.complete(slot, done);
+                self.complete(slot, None, done);
                 continue;
             }
             if let Some(live) = self.state.as_mut() {
@@ -414,7 +445,7 @@ impl Engine {
                 token_s: Vec::new(),
             };
             if slot.sampler.finished() {
-                self.complete(slot, done);
+                self.complete(slot, None, done);
             } else {
                 self.slots[r] = Some(slot);
             }
@@ -466,6 +497,22 @@ impl Engine {
         if self.slots.iter().all(|s| s.is_none()) {
             return Ok(());
         }
+        // Full-attention cap check BEFORE the device call: the next step
+        // would scatter its K/V row into cache slot `pos`, so once `pos`
+        // reaches `kv_cap` there is no slot left — every in-flight request
+        // is retired cleanly with what it has (each emitted >= 1 token at
+        // admission). Stepping anyway would let XLA clamp the write index
+        // and silently overwrite slot cap-1.
+        if let (Some(cap), Some(state)) = (self.kv_cap, self.state.as_ref()) {
+            if state.pos >= cap as u64 {
+                for r in 0..self.batch {
+                    if let Some(slot) = self.slots[r].take() {
+                        self.complete(slot, Some(FinishReason::KvCapExhausted), done);
+                    }
+                }
+                return Ok(());
+            }
+        }
         let mut toks = vec![0i32; self.batch];
         for (r, slot) in self.slots.iter().enumerate() {
             if let Some(s) = slot {
@@ -495,18 +542,20 @@ impl Engine {
         }
         for r in finished {
             let slot = self.slots[r].take().expect("just finished");
-            self.complete(slot, done);
+            self.complete(slot, None, done);
         }
         Ok(())
     }
 
     /// Retire a finished slot into a `Response` and fold its latencies into
-    /// the service histograms.
-    fn complete(&mut self, slot: Slot, done: &mut Vec<Response>) {
-        let finish = match slot.sampler.stop {
+    /// the service histograms. `forced` overrides the sampler-derived reason
+    /// (the KV-cap exhaustion path ends requests whose samplers would have
+    /// kept going).
+    fn complete(&mut self, slot: Slot, forced: Option<FinishReason>, done: &mut Vec<Response>) {
+        let finish = forced.unwrap_or(match slot.sampler.stop {
             Some(s) if slot.sampler.emitted.last() == Some(&s) => FinishReason::Stop,
             _ => FinishReason::MaxNew,
-        };
+        });
         self.completed += 1;
         self.emitted_tokens += slot.sampler.emitted.len();
         self.queue_wait_samples.push(slot.queue_wait_s);
@@ -592,13 +641,28 @@ mod tests {
     #[test]
     fn request_validation() {
         let ok = Request { prompt: vec![1, 2], ..Request::default() };
-        assert!(validate_request(&ok, 10).is_ok());
+        assert!(validate_request(&ok, 10, None).is_ok());
         let empty = Request { prompt: vec![], ..Request::default() };
-        assert!(validate_request(&empty, 10).is_err());
+        assert!(validate_request(&empty, 10, None).is_err());
         let oov = Request { prompt: vec![1, 10], ..Request::default() };
-        assert!(validate_request(&oov, 10).unwrap_err().to_string().contains("vocabulary"));
+        assert!(validate_request(&oov, 10, None).unwrap_err().to_string().contains("vocabulary"));
         let zero = Request { prompt: vec![1], max_new: 0, ..Request::default() };
-        assert!(validate_request(&zero, 10).unwrap_err().to_string().contains("max-new"));
+        assert!(validate_request(&zero, 10, None).unwrap_err().to_string().contains("max-new"));
+    }
+
+    #[test]
+    fn kv_cap_validation_rejects_only_unconsumable_prompts() {
+        // Prompt longer than the cap can never be consumed: rejected.
+        let long = Request { prompt: vec![1; 5], ..Request::default() };
+        let err = validate_request(&long, 10, Some(4)).unwrap_err().to_string();
+        assert!(err.contains("KV cache capacity 4"), "{err}");
+        // Prompt that fits is admitted even when prompt + max_new would
+        // overrun the cap — that request finishes with KvCapExhausted
+        // instead of being bounced (the engine owns that cut-off).
+        let tight = Request { prompt: vec![1; 4], max_new: 100, ..Request::default() };
+        assert!(validate_request(&tight, 10, Some(4)).is_ok());
+        // No cap (rolling-window / pure-SSM layouts): length-unbounded.
+        assert!(validate_request(&long, 10, None).is_ok());
     }
 
     #[test]

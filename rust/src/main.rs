@@ -436,6 +436,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
             let finish = match resp.finish {
                 FinishReason::Stop => "stop",
                 FinishReason::MaxNew => "max-new",
+                FinishReason::KvCapExhausted => "kv-cap",
             };
             println!(
                 "req {}: {} => {} ({finish}; wait {:.1} ms, ttft {:.1} ms)",

@@ -54,6 +54,13 @@ pub struct Analysis {
 pub struct DecodeSpec {
     pub batch: usize,
     pub prefill_lens: Vec<usize>,
+    /// Capacity of the full-attention KV-cache lanes (`window <= 0` swa
+    /// blocks: the llama proxy and attn+SSM hybrids). `None` for rolling-
+    /// window SWA and pure-SSM layouts. A decode step at position `pos`
+    /// scatter-writes cache slot `pos`, so the coordinator must stop a
+    /// request before `pos` reaches the cap — XLA clamps out-of-range
+    /// dynamic-update indices, which would silently overwrite slot cap-1.
+    pub kv_cap: Option<usize>,
     pub state: Vec<ParamSpec>,
 }
 
@@ -131,6 +138,10 @@ impl Manifest {
                     .iter()
                     .map(|v| v.as_usize())
                     .collect::<Result<_, _>>()?,
+                kv_cap: match d.opt("kv_cap") {
+                    Some(v) => Some(v.as_usize().context("decode.kv_cap")?),
+                    None => None,
+                },
                 state: parse_specs(d.get("state")?)?,
             }),
             None => None,
@@ -412,6 +423,8 @@ mod tests {
         let d = m.decode.as_ref().unwrap();
         assert_eq!(d.batch, 2);
         assert_eq!(d.prefill_lens, vec![16, 32]);
+        // Pre-kv_cap decode sections (and null) parse as uncapped.
+        assert_eq!(d.kv_cap, None);
         assert_eq!(d.state.len(), 3);
         assert_eq!(d.state[0].name, "pos");
         // conv+ssm lanes never read `pos`; a KV-cache leaf flips the bit.
@@ -433,5 +446,30 @@ mod tests {
         assert_eq!(z[0].as_i32().unwrap(), &[0]);
         assert_eq!(z[1].shape, vec![2, 3, 64]);
         assert!(z[2].as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn manifest_decode_kv_cap_parses() {
+        // Full-attention layouts record the cache capacity; null means no
+        // full-attn lane (rolling SWA / pure SSM).
+        let with_cap = MANIFEST.replacen(
+            "\"name\": \"t\",",
+            r#""name": "t",
+            "decode": {
+              "batch": 2, "prefill_lens": [16], "kv_cap": 1024,
+              "state": [
+                {"name": "pos", "shape": [], "dtype": "int32"},
+                {"name": "blocks.0.k_cache", "shape": [2, 1024, 32], "dtype": "float32"},
+                {"name": "blocks.0.v_cache", "shape": [2, 1024, 32], "dtype": "float32"}
+              ]
+            },"#,
+            1,
+        );
+        let d = Manifest::parse(&with_cap).unwrap().decode.unwrap();
+        assert_eq!(d.kv_cap, Some(1024));
+        // Full-attn caches read `pos` (RoPE + validity mask): gang admission.
+        assert!(d.position_dependent());
+        let with_null = with_cap.replacen("\"kv_cap\": 1024,", "\"kv_cap\": null,", 1);
+        assert_eq!(Manifest::parse(&with_null).unwrap().decode.unwrap().kv_cap, None);
     }
 }

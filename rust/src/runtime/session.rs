@@ -58,7 +58,11 @@ pub struct MicroGrad {
 pub struct DecodeState {
     lits: Vec<xla::Literal>,
     /// Tokens consumed so far (host-side mirror of the `pos` leaf, kept for
-    /// reporting without a device->host transfer).
+    /// reporting without a device->host transfer). For full-attention
+    /// layouts this is also the KV-cache slot the NEXT decode_step will
+    /// write, so the serve engine compares it against `decode.kv_cap`
+    /// before stepping — the device-side scatter clamps out-of-range
+    /// indices rather than failing.
     pub pos: u64,
 }
 

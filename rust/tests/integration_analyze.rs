@@ -7,8 +7,10 @@
 //!   finds nothing;
 //! * seeded corruption must be DETECTED with a useful file/line — a
 //!   mutated state shape, a dropped/fractional field, an unknowable decode
-//!   status, a params/total mismatch, a drifted schema row, a smuggled
-//!   `.unwrap()` / bare spawn / uncommented `unsafe` / direct bench write.
+//!   status, a stale decode_unsupported reason, a missing/fractional/lying
+//!   `decode.kv_cap`, a params/total mismatch, a drifted schema row, a
+//!   smuggled `.unwrap()` / bare spawn / uncommented `unsafe` / direct
+//!   bench write.
 //!
 //! The corruption fixtures live in string literals, which the lint strips
 //! before matching — so this file itself stays clean under `lint_tree`.
@@ -32,8 +34,8 @@ fn golden_text(name: &str) -> (String, String) {
 fn golden_manifests_satisfy_the_contract() {
     let goldens = contract::golden_manifests(&repo_root());
     assert!(
-        goldens.len() >= 3,
-        "expected the committed mamba/samba/llama fixtures, found {goldens:?}"
+        goldens.len() >= 4,
+        "expected the committed mamba/samba/llama/hybrid fixtures, found {goldens:?}"
     );
     for p in &goldens {
         let f = contract::check_manifest_file(p);
@@ -101,17 +103,100 @@ fn fractional_count_is_detected_not_truncated() {
     assert_eq!(hit.line, 22, "top-level batch_size sits on line 22: {hit}");
 }
 
+/// Drop the llama golden's decode section (object -> null), leaving
+/// `decode_unsupported` untouched — the shared setup for the decode-status
+/// corruption pair below.
+fn llama_without_decode() -> (String, String) {
+    let (label, text) = golden_text("llama");
+    let start = text.find("\"decode\": {").expect("decode anchor");
+    let end = text.find("\n \"decode_unsupported\"").expect("decode_unsupported anchor");
+    let mut bad = text;
+    bad.replace_range(start..end, "\"decode\": null,");
+    (label, bad)
+}
+
 #[test]
 fn unknowable_decode_status_is_detected() {
-    let (label, text) = golden_text("llama");
-    let start = text.find("\"decode_unsupported\":").expect("anchor");
-    let end = start + text[start..].find('\n').expect("line end");
-    let mut bad = text.clone();
-    bad.replace_range(start..end, "\"decode_unsupported\": null,");
+    // decode null while decode_unsupported stays null: unknowable.
+    let (label, bad) = llama_without_decode();
     let f = contract::check_manifest_bytes(&label, bad.as_bytes());
     assert!(
         f.iter().any(|f| f.rule == "contract/decode" && f.message.contains("both null")),
         "{f:#?}"
+    );
+}
+
+#[test]
+fn stale_decode_unsupported_reason_is_detected() {
+    // A pre-kv_cap manifest claiming full attention cannot decode: the
+    // emitter decodes every preset layout now, so the reason is stale by
+    // construction and must be flagged, not trusted.
+    let (label, bad) = llama_without_decode();
+    let bad = bad.replacen(
+        "\"decode_unsupported\": null,",
+        "\"decode_unsupported\": \"swa block with window <= 0 has no fixed-shape state\",",
+        1,
+    );
+    let f = contract::check_manifest_bytes(&label, bad.as_bytes());
+    assert!(
+        f.iter().any(|f| f.rule == "contract/decode"
+            && f.message.contains("decodes every preset layout")),
+        "{f:#?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Seeded corruption: decode.kv_cap (full-attention KV-cache capacity)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_kv_cap_is_detected() {
+    let (label, text) = golden_text("llama");
+    let bad = text.replacen("  \"kv_cap\": 1024,\n", "", 1);
+    assert_ne!(bad, text, "mutation anchor not found");
+    let f = contract::check_manifest_bytes(&label, bad.as_bytes());
+    let hit = f
+        .iter()
+        .find(|f| f.rule == "contract/decode" && f.message.contains("missing for full-attention"))
+        .unwrap_or_else(|| panic!("no missing-kv_cap finding in {f:#?}"));
+    assert!(hit.file.ends_with("llama.manifest.json"), "{hit}");
+    assert_eq!(hit.line, 23, "with the key gone, the finding falls back to the decode opener: {hit}");
+}
+
+#[test]
+fn fractional_kv_cap_is_detected_not_truncated() {
+    let (label, text) = golden_text("llama");
+    let bad = text.replacen("\"kv_cap\": 1024,", "\"kv_cap\": 1024.5,", 1);
+    assert_ne!(bad, text);
+    let f = contract::check_manifest_bytes(&label, bad.as_bytes());
+    let hit = f
+        .iter()
+        .find(|f| f.message.contains("decode.kv_cap") && f.message.contains("integer-valued"))
+        .unwrap_or_else(|| panic!("no fractional-kv_cap finding in {f:#?}"));
+    assert_eq!(hit.line, 25, "decode.kv_cap sits on line 25 of the llama golden: {hit}");
+}
+
+#[test]
+fn kv_cap_disagreeing_with_cache_shapes_is_detected() {
+    // 512 is a plausible-looking power of two, but it contradicts BOTH the
+    // ModelCfg derivation (2 * max(seq 128, evals 128/256/512) = 1024) and
+    // the cache leaves' capacity dim — each lie gets its own finding.
+    let (label, text) = golden_text("llama");
+    let bad = text.replacen("\"kv_cap\": 1024,", "\"kv_cap\": 512,", 1);
+    assert_ne!(bad, text);
+    let f = contract::check_manifest_bytes(&label, bad.as_bytes());
+    let derive = f
+        .iter()
+        .find(|f| f.message.contains("ModelCfg::kv_cap derives 1024"))
+        .unwrap_or_else(|| panic!("no derivation finding in {f:#?}"));
+    assert_eq!(derive.line, 25, "{derive}");
+    let cache = f
+        .iter()
+        .find(|f| f.message.contains("blocks.0.k_cache") && f.message.contains("declares 512"))
+        .unwrap_or_else(|| panic!("no cache-dim finding in {f:#?}"));
+    assert!(
+        (37..=44).contains(&cache.line),
+        "finding should point into decode.state[1]'s shape block: {cache}"
     );
 }
 

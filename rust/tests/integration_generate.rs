@@ -53,8 +53,11 @@ fn stepwise_decode_matches_eval_artifact() {
     // The acceptance parity test: summed next-token NLL from decode_step —
     // one token at a time from a zero state — must match the full-window
     // eval artifact, and the prefill artifact's last-position logits must
-    // match both the stepwise path and the eval_last artifact.
-    for name in ["mamba-tiny", "rom-tiny"] {
+    // match both the stepwise path and the eval_last artifact. The list
+    // spans every decode-state family: pure SSM (mamba-tiny), SSM + MoE
+    // projections (rom-tiny), full attention on the capped KV cache
+    // (llama), and the SSM/full-attention hybrid (hybrid).
+    for name in ["mamba-tiny", "rom-tiny", "llama", "hybrid"] {
         let Some(bundle) = open_decodable(name) else { continue };
         let spec = bundle.manifest.decode.clone().unwrap();
         let man = bundle.manifest.clone();
@@ -271,6 +274,94 @@ fn generation_deterministic_across_runs_and_parallel_sessions() {
         assert_eq!(r.unwrap(), first, "parallel session diverged");
     }
     let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn full_attention_long_context_ladder_is_consistent() {
+    // Beyond-training-length consistency: the hybrid variant trains at
+    // seq_len but evals (and decodes) up to 4x longer. Stepwise decode of
+    // one long stream must reproduce the eval artifacts' summed NLL at
+    // EVERY ladder rung — the per-position NLLs past the training length
+    // ride KV-cache slots the training runs never touched, so drift here
+    // means the position-indexed cache (not the windowed math) is wrong.
+    let Some(bundle) = open_decodable("hybrid") else { return };
+    let man = bundle.manifest.clone();
+    let spec = man.decode.clone().unwrap();
+    let cap = spec.kv_cap.expect("hybrid is a full-attention layout");
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+
+    let train_len = man.seq_len;
+    let rungs: Vec<usize> =
+        man.eval_lens.iter().copied().filter(|&l| l <= 2 * train_len).collect();
+    let longest = *rungs.last().unwrap();
+    assert!(longest > train_len, "the ladder must leave the training length");
+    assert!(longest <= cap, "the ladder must fit the KV cache");
+
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let stream = corpus.generate(7171, longest + 1);
+    let (tokens, targets) = (&stream[..longest], &stream[1..longest + 1]);
+
+    // One stepwise pass over the whole stream, accumulating per-position
+    // NLL so every ladder rung reads off the same trajectory.
+    let (bd, vocab) = (spec.batch, man.vocab_size);
+    let mut state = sess.init_decode_state().unwrap();
+    let mut nll_at = vec![0.0f64; longest];
+    let mut nll = 0.0f64;
+    for t in 0..longest {
+        let logits = sess
+            .decode_step(&Tensor::i32(&[bd], vec![tokens[t]; bd]), &mut state)
+            .unwrap();
+        nll += nll_of(&logits.as_f32().unwrap()[..vocab], targets[t] as usize);
+        nll_at[t] = nll;
+    }
+    assert_eq!(state.pos, longest as u64);
+
+    for &len in &rungs {
+        let tok = Tensor::i32(&[1, len], tokens[..len].to_vec());
+        let tgt = Tensor::i32(&[1, len], targets[..len].to_vec());
+        let (nll_ref, count) = sess.eval(len, &tok, &tgt).unwrap();
+        assert_eq!(count, len as f64);
+        let nll_step = nll_at[len - 1];
+        let rel = (nll_step - nll_ref).abs() / nll_ref.abs().max(1e-9);
+        assert!(
+            rel < 2e-3,
+            "rung L{len}: stepwise NLL {nll_step} vs eval {nll_ref} (rel {rel})"
+        );
+    }
+}
+
+#[test]
+fn full_attention_generate_is_deterministic_and_respects_kv_cap() {
+    let Some(bundle) = open_decodable("llama") else { return };
+    let spec = bundle.manifest.decode.clone().unwrap();
+    let cap = spec.kv_cap.expect("llama is a full-attention layout");
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+
+    // Sampled full-attention generation reproduces bit for bit: same seed,
+    // same prompt, same tokens — the determinism contract holds on the
+    // KV-cache decode path exactly as on the SSM paths.
+    let prompts = vec![corpus.generate(1001, 9)];
+    let cfg = GenerateCfg { max_new: 5, temperature: 0.9, top_k: 8, seed: 7 };
+    let first = generate(&sess, &prompts, &cfg).unwrap().completions;
+    assert_eq!(first[0].len(), 5);
+    let again = generate(&sess, &prompts, &cfg).unwrap().completions;
+    assert_eq!(first, again, "full-attention generation must be reproducible");
+
+    // A request that would outrun the cache is refused upfront with a
+    // clean, actionable error — no device work, no clamped cache writes.
+    let long = vec![corpus.generate(1002, cap - 3)];
+    let cfg = GenerateCfg { max_new: 8, temperature: 0.0, top_k: 0, seed: 0 };
+    let err = generate(&sess, &long, &cfg).unwrap_err();
+    assert!(
+        err.to_string().contains("KV cache capacity"),
+        "got: {err:#}"
+    );
+    // The same prompt with a max_new that fits is admitted: the boundary
+    // is exact, not fuzzy. (prompt + max_new - 1 == cap uses the last slot.)
+    let cfg = GenerateCfg { max_new: 4, temperature: 0.0, top_k: 0, seed: 0 };
+    let report = generate(&sess, &long, &cfg).unwrap();
+    assert_eq!(report.completions[0].len(), 4);
 }
 
 #[test]

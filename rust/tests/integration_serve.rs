@@ -220,6 +220,132 @@ fn backpressure_hands_back_requests_and_shutdown_is_clean() {
     assert_eq!(engine.drain(&sess).unwrap().len(), 0, "idle drain is a no-op");
 }
 
+#[test]
+fn full_attention_gangs_match_standalone_generate() {
+    // Full-attention layouts serve through gang admission (every row shares
+    // the `pos` scalar and the KV cache is position-indexed). Each response
+    // must still be bit-identical to a standalone `rom generate` run, and a
+    // SECOND gang of a different prompt length must start clean on a fresh
+    // state — no leakage from the first gang's cache rows.
+    let Some(bundle) = open_decodable("llama") else { return };
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+    let batch = bundle.manifest.decode.as_ref().unwrap().batch;
+    assert!(batch >= 2, "stock presets bake decode batch >= 2");
+
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+    let gang1 = [
+        Request {
+            prompt: corpus.generate(911, 9),
+            max_new: 6,
+            temperature: 0.9,
+            top_k: 8,
+            seed: 7,
+            stop: None,
+        },
+        Request {
+            prompt: corpus.generate(912, 9),
+            max_new: 4,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 3,
+            stop: None,
+        },
+    ];
+    let gang2 = Request {
+        prompt: corpus.generate(913, 13),
+        max_new: 5,
+        temperature: 1.1,
+        top_k: 4,
+        seed: 11,
+        stop: None,
+    };
+    let refs: Vec<Vec<i32>> = gang1
+        .iter()
+        .chain([&gang2])
+        .map(|r| reference_completion(&sess, r))
+        .collect();
+
+    let mut engine = Engine::new(&sess, &ServeCfg { queue_cap: 8 }).unwrap();
+    for r in gang1.iter().chain([&gang2]) {
+        assert!(matches!(engine.submit(r.clone()).unwrap(), Submit::Accepted(_)));
+    }
+    let mut responses = engine.drain(&sess).unwrap();
+    assert!(engine.idle());
+    assert_eq!(responses.len(), 3);
+    responses.sort_by_key(|r| r.id);
+    for (i, (resp, reference)) in responses.iter().zip(&refs).enumerate() {
+        assert_eq!(
+            &resp.tokens, reference,
+            "request {i}: full-attention serve diverged from standalone generate"
+        );
+        assert_eq!(resp.finish, FinishReason::MaxNew);
+    }
+    // Gang scheduling: the 13-token request cannot join the 9-token gang, so
+    // the engine ran (at least) two prefills — one per gang.
+    assert!(engine.report().prefills >= 2);
+}
+
+#[test]
+fn kv_cap_exhaustion_finishes_cleanly_mid_generation() {
+    // A request whose prompt fits the KV cache but whose max_new would
+    // outrun it is admitted and cut short: it keeps every token that fit
+    // and finishes with KvCapExhausted — never a panic, and never a step
+    // past the cap (which would silently clamp the cache scatter).
+    let Some(bundle) = open_decodable("llama") else { return };
+    let spec = bundle.manifest.decode.clone().unwrap();
+    let cap = spec.kv_cap.expect("llama is a full-attention layout");
+    let sess = Session::init(Arc::clone(&bundle), 0).unwrap();
+    let corpus = Corpus::new(CorpusSpec::default(), 17);
+
+    // A prompt longer than the cap can never be consumed: submit refuses.
+    let impossible = Request {
+        prompt: corpus.generate(920, cap + 1),
+        max_new: 1,
+        ..Request::default()
+    };
+    let err = sess_submit_err(&sess, impossible);
+    assert!(err.contains("KV cache capacity"), "got: {err}");
+
+    // prompt_len = cap - 3 leaves exactly 4 emittable tokens: the prompt
+    // fills slots 0..cap-4, one token is sampled at admission, and three
+    // decode steps write the last three cache slots before `pos` hits the
+    // cap.
+    let prompt = corpus.generate(921, cap - 3);
+    let req = Request {
+        prompt: prompt.clone(),
+        max_new: 100,
+        temperature: 0.9,
+        top_k: 8,
+        seed: 13,
+        stop: None,
+    };
+    let mut engine = Engine::new(&sess, &ServeCfg::default()).unwrap();
+    assert!(matches!(engine.submit(req).unwrap(), Submit::Accepted(_)));
+    let responses = engine.drain(&sess).unwrap();
+    assert!(engine.idle(), "exhaustion must not wedge the engine");
+    assert_eq!(responses.len(), 1);
+    let resp = &responses[0];
+    assert_eq!(resp.finish, FinishReason::KvCapExhausted);
+    assert_eq!(resp.tokens.len(), cap - prompt.len() + 1, "every slot that fit was used");
+
+    // What DID fit is still bit-identical to a standalone generate run that
+    // asked for exactly that many tokens.
+    let cfg = GenerateCfg {
+        max_new: resp.tokens.len(),
+        temperature: 0.9,
+        top_k: 8,
+        seed: 13,
+    };
+    let reference = generate(&sess, &[prompt], &cfg).unwrap().completions.remove(0);
+    assert_eq!(resp.tokens, reference, "the truncated stream diverged from generate");
+}
+
+/// Submit a request expected to fail validation; returns the error text.
+fn sess_submit_err(sess: &Session, req: Request) -> String {
+    let mut engine = Engine::new(sess, &ServeCfg::default()).unwrap();
+    format!("{:#}", engine.submit(req).unwrap_err())
+}
+
 /// Bitwise equality of extracted state lanes.
 fn lanes_eq(a: &[Tensor], b: &[Tensor]) -> bool {
     a.len() == b.len()

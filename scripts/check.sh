@@ -32,6 +32,23 @@ if [[ -d "artifacts/rom-tiny" || -d "../artifacts/rom-tiny" ]]; then
 else
   echo "note: artifacts/rom-tiny absent; skipping --dp 2 train smoke" >&2
 fi
+# Full-attention decode smoke: the hybrid (mamba + swa + full-attn) layout
+# must train a couple of steps, checkpoint, and decode through the capped
+# KV-cache lane end to end — `rom generate` on a window:0 layout exercises
+# prefill cache extraction, the pos-indexed decode_step scatter, and the
+# host-side kv_cap guard. Artifact-gated like the dp smoke; the cross-layout
+# decode parity itself is pinned by the integration tests.
+if [[ -d "artifacts/hybrid" || -d "../artifacts/hybrid" ]]; then
+  smoke_dir="$(mktemp -d)"
+  trap 'rm -rf "$smoke_dir"' EXIT
+  ROM_SKIP_EVAL=1 cargo run --release --quiet -- \
+    train hybrid --steps 2 --ckpt-dir "$smoke_dir"
+  cargo run --release --quiet -- \
+    generate hybrid --ckpt "$smoke_dir/hybrid-step2.ckpt" \
+    --prompt-tokens '17,3,250,9;101,7,33,90' --max-new 8
+else
+  echo "note: artifacts/hybrid absent; skipping full-attention generate smoke" >&2
+fi
 # Lint gate covers every target (lib, bin, benches, tests, examples); any
 # warning is an error. Skips gracefully where the clippy component is absent.
 if cargo clippy --version >/dev/null 2>&1; then
